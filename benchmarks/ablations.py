@@ -1,0 +1,71 @@
+"""Paper §4.3 ablations: betas grid (Fig. 6/7), Dif-vs-NonDif (Tab. 6),
+annealing (Tab. 8), pruning strategies (Tab. 7), pipelined-ES lookahead
+(beyond paper).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from .common import Row, FAST
+
+
+def _train(method="es", beta1=0.2, beta2=0.9, anneal=0.0, epochs=4, seed=0,
+           pipelined=False, pruning_ratio=0.2):
+    from repro.launch.train import Trainer, TrainerConfig
+    tc = TrainerConfig(arch="qwen1.5-0.5b", method=method, epochs=epochs,
+                       meta_batch=16, minibatch=4, n_samples=160, seq_len=32,
+                       lr=3e-3, seed=seed, beta1=beta1, beta2=beta2,
+                       anneal_ratio=anneal, pipelined=pipelined,
+                       pruning_ratio=pruning_ratio)
+    tr = Trainer(tc)
+    out = tr.train()
+    return tr.eval_mean_loss(n=128), out
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    epochs = 3 if FAST else 5
+
+    # --- betas grid (Fig. 6): Loss(0,0) vs NonDif(b,b) vs Dif(b1<b2) ---
+    grid = [(0.0, 0.0, "loss_eq23"), (0.5, 0.5, "nondif"),
+            (0.2, 0.9, "dif_default")] if FAST else \
+           [(0.0, 0.0, "loss_eq23"), (0.5, 0.5, "nondif"),
+            (0.9, 0.9, "nondif_hi"), (0.2, 0.9, "dif_default"),
+            (0.2, 0.8, "dif_eswp_default"), (0.5, 0.9, "dif_mid")]
+    for b1, b2, tag in grid:
+        loss, out = _train(beta1=b1, beta2=b2, epochs=epochs)
+        rows.append((f"ablation/betas/{tag}", 0.0,
+                     f"b1={b1};b2={b2};loss={loss:.4f}"))
+
+    # --- annealing (Tab. 8) ---
+    for ar in ([0.0, 0.05] if FAST else [0.0, 0.05, 0.1]):
+        loss, _ = _train(anneal=ar, epochs=max(epochs, 4))
+        rows.append((f"ablation/anneal/ar={ar}", 0.0, f"loss={loss:.4f}"))
+
+    # --- pruning strategies (Tab. 7): ESWP vs random prune ---
+    for method in ["eswp", "random"]:
+        loss, out = _train(method=method, epochs=epochs)
+        rows.append((f"ablation/prune/{method}", 0.0,
+                     f"loss={loss:.4f};bp={int(out['bp_samples_total'])}"))
+
+    # --- pipelined-ES staleness (beyond paper) ---
+    for pipe in [False, True]:
+        loss, out = _train(pipelined=pipe, epochs=epochs)
+        rows.append((f"ablation/pipelined/{pipe}", 0.0,
+                     f"loss={loss:.4f};steps={out['steps']}"))
+
+    # --- transfer-function table (Thm. 3.2, exact) ---
+    from repro.core.theory import transfer_gain
+    om = np.asarray([0.01, 0.1, 1.0, 10.0, 1e3])
+    for (b1, b2) in [(0.2, 0.9), (0.5, 0.5)]:
+        g = transfer_gain(b1, b2, om)
+        rows.append((f"ablation/transfer/b1={b1},b2={b2}", 0.0,
+                     "gains=" + "|".join(f"{x:.3f}" for x in g)))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

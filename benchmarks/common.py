@@ -1,0 +1,34 @@
+"""Shared benchmark helpers: timed runs + the standard CSV row format."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]   # (name, us_per_call, derived)
+
+FAST = os.environ.get("BENCH_FAST", "0") == "1"
+
+
+def timeit(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds (post-warmup)."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        # block on async dispatch
+        try:
+            import jax
+            jax.block_until_ready(out)
+        except Exception:
+            pass
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,40 @@
+"""Paper Fig. 10 analogue: loss versus #samples used for backprop.
+
+derived = BP samples needed to first reach the target loss (lower=the
+method extracts more learning per backprop) + the final (loss, bp) pair.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from .common import Row, FAST
+
+
+def run() -> List[Row]:
+    from repro.launch.train import Trainer, TrainerConfig
+    rows: List[Row] = []
+    epochs = 4 if FAST else 8
+    curves = {}
+    for method in ["baseline", "es", "eswp"]:
+        tc = TrainerConfig(arch="qwen1.5-0.5b", method=method, epochs=epochs,
+                           meta_batch=16, minibatch=4, n_samples=192,
+                           seq_len=32, lr=3e-3, seed=0, anneal_ratio=0.0)
+        out = Trainer(tc).train()
+        curves[method] = [(m["bp_samples_total"], m["loss"])
+                          for m in out["metrics"]]
+    # common BP budget = the smallest total any method consumed;
+    # report each method's loss at that budget (lower = more learning per
+    # backprop — the Fig. 10 ordering)
+    budget = min(curve[-1][0] for curve in curves.values())
+    for method, curve in curves.items():
+        at_budget = [l for bp, l in curve if bp <= budget]
+        final_bp, final_loss = curve[-1]
+        rows.append((f"fig10/{method}", 0.0,
+                     f"loss_at_bp_{int(budget)}={at_budget[-1]:.4f};"
+                     f"final_loss={final_loss:.4f};final_bp={int(final_bp)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

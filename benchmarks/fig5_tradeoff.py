@@ -1,0 +1,53 @@
+"""Paper Fig. 5 analogue: performance/speed trade-offs of b/B and the
+pruning ratio.
+
+Left panel (paper): accuracy vs b/B — ES is lossless for b/B >= 1/16 and
+degrades below.  Right panel: accuracy/time vs pruning ratio (20–30%
+efficient).  derived = eval loss + BP samples per run.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from .common import Row, FAST
+
+
+def run() -> List[Row]:
+    from repro.launch.train import Trainer, TrainerConfig
+    rows: List[Row] = []
+    epochs = 3 if FAST else 5
+
+    # --- b/B sweep (meta_batch 16) ---
+    fracs = [(16, "1"), (8, "1/2"), (4, "1/4"), (2, "1/8"), (1, "1/16")]
+    if FAST:
+        fracs = [(16, "1"), (4, "1/4"), (1, "1/16")]
+    for b, tag in fracs:
+        tc = TrainerConfig(arch="qwen1.5-0.5b", method="es", epochs=epochs,
+                           meta_batch=16, minibatch=b, n_samples=160,
+                           seq_len=32, lr=3e-3, seed=0, anneal_ratio=0.0)
+        tr = Trainer(tc)
+        out = tr.train()
+        loss = tr.eval_mean_loss(n=128)
+        rows.append((f"fig5/b_over_B={tag}", 0.0,
+                     f"loss={loss:.4f};bp={int(out['bp_samples_total'])};"
+                     f"wall_s={out['wall_time']:.1f}"))
+
+    # --- pruning ratio sweep (ESWP) ---
+    ratios = [0.0, 0.2, 0.5] if FAST else [0.0, 0.1, 0.2, 0.3, 0.5]
+    for r in ratios:
+        tc = TrainerConfig(arch="qwen1.5-0.5b", method="eswp", epochs=epochs,
+                           meta_batch=16, minibatch=4, n_samples=160,
+                           seq_len=32, lr=3e-3, seed=0, anneal_ratio=0.0,
+                           pruning_ratio=r)
+        tr = Trainer(tc)
+        out = tr.train()
+        loss = tr.eval_mean_loss(n=128)
+        rows.append((f"fig5/prune_ratio={r}", 0.0,
+                     f"loss={loss:.4f};bp={int(out['bp_samples_total'])};"
+                     f"wall_s={out['wall_time']:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

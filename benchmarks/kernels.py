@@ -1,0 +1,82 @@
+"""Per-kernel microbenchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode
+(correctness path) — wall numbers meaningful for the XLA oracle only; the
+derived column carries the analytic VMEM working set + arithmetic
+intensity that determine TPU block-size choices (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from .common import Row, timeit, FAST
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    key = jax.random.PRNGKey(0)
+
+    # --- fused xent ---
+    from repro.kernels.xent.ref import xent_ref
+    M, d, V = (256, 128, 2048) if FAST else (512, 256, 8192)
+    h = jax.random.normal(key, (M, d), jnp.float32)
+    w = jax.random.normal(key, (d, V), jnp.float32) * 0.05
+    labels = jax.random.randint(key, (M,), 0, V)
+    ref_jit = jax.jit(xent_ref)
+    us = timeit(lambda: ref_jit(h, w, labels), reps=5)
+    bm, bv = 128, 512
+    vmem_kb = (bm * d * 4 + d * bv * 4 + bm * bv * 4 + 3 * bm * 4) / 1024
+    flops = 2 * M * d * V
+    bytes_hbm = (M * d + d * V + M) * 4
+    rows.append(("kernels/xent_oracle_xla", us,
+                 f"M={M};d={d};V={V};block=({bm},{bv});"
+                 f"vmem_kb={vmem_kb:.0f};ai={flops / bytes_hbm:.1f}"))
+
+    # --- flash attention ---
+    from repro.kernels.flash_attn.ref import attention_ref
+    BH, S, hd = (4, 512, 64) if FAST else (8, 1024, 64)
+    q = jax.random.normal(key, (BH, S, hd), jnp.float32)
+    k = jax.random.normal(key, (BH, S, hd), jnp.float32)
+    v = jax.random.normal(key, (BH, S, hd), jnp.float32)
+    aref = jax.jit(lambda q, k, v: attention_ref(q, k, v))
+    us = timeit(lambda: aref(q, k, v), reps=5)
+    bq = bk = 128
+    vmem_kb = (bq * hd * 4 * 2 + bk * hd * 4 * 2 + bq * bk * 4) / 1024
+    rows.append(("kernels/flash_attn_oracle_xla", us,
+                 f"BH={BH};S={S};hd={hd};block=({bq},{bk});"
+                 f"vmem_kb={vmem_kb:.0f};"
+                 f"hbm_saved_vs_naive={S * S * 4 * BH / 1e6:.0f}MB"))
+
+    # --- score update ---
+    from repro.kernels.score_update.ref import score_update_ref
+    n, B = 1 << 16, 256
+    s = jnp.abs(jax.random.normal(key, (n,)))
+    wv = jnp.abs(jax.random.normal(key, (n,)))
+    seen = jnp.zeros((n,), jnp.int32)
+    import numpy as np
+    ids = jnp.asarray(np.random.default_rng(0).choice(n, B, replace=False),
+                      jnp.int32)
+    losses = jnp.abs(jax.random.normal(key, (B,)))
+    sref = jax.jit(lambda *a: score_update_ref(*a, beta1=0.2, beta2=0.9))
+    us = timeit(lambda: sref(s, wv, seen, ids, losses), reps=5)
+    rows.append(("kernels/score_update_oracle_xla", us,
+                 f"n={n};B={B};store_kb={n * 4 * 3 / 1024:.0f}"))
+
+    # --- interpret-mode correctness path timing (documentation only) ---
+    from repro.kernels.xent.ops import per_token_xent_fused
+    h2 = jax.random.normal(key, (128, 64), jnp.float32)
+    w2 = jax.random.normal(key, (64, 512), jnp.float32)
+    l2 = jax.random.randint(key, (128,), 0, 512)
+    us = timeit(lambda: per_token_xent_fused(h2, w2, l2, interpret=True),
+                reps=2, warmup=1)
+    rows.append(("kernels/xent_pallas_interpret", us,
+                 "correctness_path_only"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

@@ -1,0 +1,66 @@
+"""Hillclimb comparison tool: roofline deltas across dry-run variants.
+
+    PYTHONPATH=src python -m benchmarks.perf_compare --arch llama3-8b \
+        --shape train_4k [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import List
+
+from .roofline import DRYRUN_DIR, model_flops_per_chip
+
+
+def compare(arch: str, shape: str, mesh: str = "single") -> List[dict]:
+    out = []
+    for f in sorted(DRYRUN_DIR.glob(f"{arch}__{shape}__{mesh}__*.json")):
+        d = json.loads(f.read_text())
+        if "roofline" not in d:
+            continue
+        rt = d["roofline"]
+        coll = d.get("collectives", {})
+        mf = model_flops_per_chip(d)
+        out.append({
+            "variant": d["variant"],
+            "compute_s": rt["compute_s"],
+            "memory_s": rt["memory_s"],
+            "collective_s": rt["collective_s"],
+            "bound": rt["step_s_lower_bound"],
+            "bottleneck": rt["bottleneck"],
+            "frac": rt.get("roofline_fraction", 0.0),
+            "model/hlo": (mf / d["hlo_flops"]) if d.get("hlo_flops") else 0,
+            "ag_gb": coll.get("all-gather", {}).get("bytes", 0) / 1e9,
+            "ar_gb": coll.get("all-reduce", {}).get("bytes", 0) / 1e9,
+            "a2a_gb": coll.get("all-to-all", {}).get("bytes", 0) / 1e9,
+            "temp_gb": d.get("memory_analysis", {}).get(
+                "temp_size_in_bytes", 0) / 1e9,
+            "args_gb": d.get("memory_analysis", {}).get(
+                "argument_size_in_bytes", 0) / 1e9,
+        })
+    out.sort(key=lambda r: r["bound"])
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    rows = compare(args.arch, args.shape, args.mesh)
+    hdr = (f"{'variant':16s} {'bound_s':>9s} {'comp_s':>8s} {'mem_s':>8s} "
+           f"{'coll_s':>8s} {'frac':>6s} {'m/hlo':>6s} {'AG_GB':>8s} "
+           f"{'AR_GB':>8s} {'A2A_GB':>7s} {'temp_GB':>8s} {'args_GB':>8s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['variant']:16s} {r['bound']:9.3f} {r['compute_s']:8.3f} "
+              f"{r['memory_s']:8.3f} {r['collective_s']:8.3f} "
+              f"{r['frac']:6.3f} {r['model/hlo']:6.2f} {r['ag_gb']:8.1f} "
+              f"{r['ar_gb']:8.1f} {r['a2a_gb']:7.1f} {r['temp_gb']:8.1f} "
+              f"{r['args_gb']:8.1f}")
+
+
+if __name__ == "__main__":
+    main()

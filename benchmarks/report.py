@@ -1,0 +1,95 @@
+"""Markdown report generator for EXPERIMENTS.md §Dry-run / §Roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.report [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from .roofline import DRYRUN_DIR, model_flops_per_chip
+
+
+def fmt_bytes(b: float) -> str:
+    if b >= 1e12:
+        return f"{b / 1e12:.2f}TB"
+    if b >= 1e9:
+        return f"{b / 1e9:.1f}GB"
+    return f"{b / 1e6:.0f}MB"
+
+
+def dryrun_table(mesh: str, variant: str = "es") -> str:
+    rows = ["| arch | shape | status | bytes/dev (args+temp) | HLO GFLOPs/chip "
+            "| collective/chip | compile_s |",
+            "|---|---|---|---|---|---|---|"]
+    for f in sorted(DRYRUN_DIR.glob(f"*__{mesh}__{variant}.json")):
+        d = json.loads(f.read_text())
+        arch, shape = d["arch"], d["shape"]
+        if "skipped" in d:
+            rows.append(f"| {arch} | {shape} | SKIP ({d['skipped'][:40]}…) "
+                        f"| — | — | — | — |")
+            continue
+        if "error" in d:
+            rows.append(f"| {arch} | {shape} | **FAIL** | — | — | — | — |")
+            continue
+        ma = d.get("memory_analysis", {})
+        mem = (ma.get("argument_size_in_bytes", 0)
+               + ma.get("temp_size_in_bytes", 0)) / d["mesh_info"]["n_devices"] \
+            if False else None
+        # memory_analysis is per-device already on the SPMD module
+        args_t = (ma.get("argument_size_in_bytes", 0),
+                  ma.get("temp_size_in_bytes", 0))
+        rows.append(
+            f"| {arch} | {shape} | ok | {fmt_bytes(args_t[0])}+"
+            f"{fmt_bytes(args_t[1])} | {d.get('hlo_flops', 0) / 1e9:,.0f} "
+            f"| {fmt_bytes(d.get('collective_bytes_total', 0))} "
+            f"| {d.get('compile_s', 0):.0f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(mesh: str = "single", variant: str = "es") -> str:
+    rows = ["| arch | shape | compute_s | memory_s | collective_s | "
+            "bottleneck | roofline frac | 6ND/HLO | one-line lever |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    LEVERS = {
+        "collective": "cut dominant collective (see §Perf: grouped MoE "
+                      "dispatch / FSDP gather precision)",
+        "memory": "Pallas flash-attn + fused xent keep O(S²)/O(V) tensors "
+                  "in VMEM; bf16 stashes",
+        "compute": "raise b/B or pipeline scoring with training "
+                   "(both ablated in §Perf)",
+    }
+    for f in sorted(DRYRUN_DIR.glob(f"*__{mesh}__{variant}.json")):
+        d = json.loads(f.read_text())
+        if "roofline" not in d:
+            continue
+        rt = d["roofline"]
+        mf = model_flops_per_chip(d)
+        ratio = (mf / d["hlo_flops"]) if (mf and d.get("hlo_flops")) else 0
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {rt['compute_s']:.4f} "
+            f"| {rt['memory_s']:.4f} | {rt['collective_s']:.4f} "
+            f"| **{rt['bottleneck']}** "
+            f"| {rt.get('roofline_fraction', 0):.3f} | {ratio:.2f} "
+            f"| {LEVERS[rt['bottleneck']]} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline"])
+    args = ap.parse_args()
+    if args.section in ("all", "dryrun"):
+        print(f"### Dry-run ({args.mesh} mesh)\n")
+        print(dryrun_table(args.mesh))
+        print()
+    if args.section in ("all", "roofline"):
+        print(f"### Roofline ({args.mesh} mesh)\n")
+        print(roofline_table(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Roofline table from the 512-device dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh): the three roofline terms in seconds, the
+dominant bottleneck, MODEL_FLOPS = 6·N(active)·D (2·N·D for forward-only
+shapes), and the MODEL/HLO flops ratio (remat/overhead exposure).
+us_per_call = step_s_lower_bound in µs.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List, Optional
+
+from .common import Row
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def model_flops_per_chip(cell: dict) -> Optional[float]:
+    """6·N_active·D for BP tokens + 2·N_active·D for fwd-only tokens,
+    divided over the mesh."""
+    n_act = cell.get("active_params")
+    mesh = cell.get("mesh_info", {})
+    n_dev = mesh.get("n_devices")
+    if not n_act or not n_dev:
+        return None
+    kind = cell.get("kind")
+    tokens_meta = cell.get("tokens_meta", 0)
+    tokens_bp = cell.get("tokens_bp", 0)
+    if kind == "train":
+        flops = 2.0 * n_act * tokens_meta + 6.0 * n_act * tokens_bp
+    else:  # prefill / decode: forward only
+        flops = 2.0 * n_act * tokens_meta
+    return flops / n_dev
+
+
+def load_cells(variant: str = "es", mesh: str = "single") -> List[dict]:
+    cells = []
+    for f in sorted(DRYRUN_DIR.glob(f"*__{mesh}__{variant}.json")):
+        d = json.loads(f.read_text())
+        if "roofline" in d:
+            cells.append(d)
+    return cells
+
+
+def rows_for(variant: str = "es", mesh: str = "single") -> List[Row]:
+    rows: List[Row] = []
+    for cell in load_cells(variant, mesh):
+        rt = cell["roofline"]
+        mf = model_flops_per_chip(cell)
+        hlo_f = cell.get("hlo_flops", 0.0)
+        ratio = (mf / hlo_f) if (mf and hlo_f) else 0.0
+        name = f"roofline/{cell['arch']}/{cell['shape']}/{mesh}/{variant}"
+        derived = (f"compute={rt['compute_s']:.4f}s;"
+                   f"memory={rt['memory_s']:.4f}s;"
+                   f"collective={rt['collective_s']:.4f}s;"
+                   f"bottleneck={rt['bottleneck']};"
+                   f"roofline_frac={rt.get('roofline_fraction', 0):.3f};"
+                   f"model/hlo_flops={ratio:.2f}")
+        rows.append((name, rt["step_s_lower_bound"] * 1e6, derived))
+    return rows
+
+
+def run() -> List[Row]:
+    rows = rows_for("es", "single")
+    if not rows:
+        return [("roofline/NO_DRYRUN_ARTIFACTS", 0.0,
+                 "run python -m repro.launch.dryrun --all first")]
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

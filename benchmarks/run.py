@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Set BENCH_FAST=1 for a reduced
+sweep (CI).  Individual tables: ``python -m benchmarks.table2_methods`` etc.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (table2_methods, fig10_bp_efficiency, fig5_tradeoff,
+                   table9_lowresource, ablations, roofline, kernels)
+    modules = [
+        ("table2_methods", table2_methods),
+        ("fig10_bp_efficiency", fig10_bp_efficiency),
+        ("fig5_tradeoff", fig5_tradeoff),
+        ("table9_lowresource", table9_lowresource),
+        ("ablations", ablations),
+        ("roofline", roofline),
+        ("kernels", kernels),
+    ]
+    print("name,us_per_call,derived")
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:
+            traceback.print_exc(file=sys.stderr)
+            rows = [(f"{name}/ERROR", 0.0, repr(e))]
+        for rname, us, derived in rows:
+            print(f"{rname},{us:.1f},{derived}", flush=True)
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Tab. 2/3/5 analogue: every sampling method on the same task.
+
+Columns: final eval loss (lower=better; replaces CIFAR accuracy on this
+CPU-only container, DESIGN.md §6), wall-clock saved vs Baseline, total
+BP samples used.  derived = "loss=<L>;time_saved=<pct>%;bp=<n>".
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import List
+
+from .common import Row, FAST
+
+METHODS = ["baseline", "loss", "order", "es",
+           "ucb", "ka", "infobatch", "random", "eswp"]
+
+
+def run(methods=None, epochs=None, n=None) -> List[Row]:
+    from repro.launch.train import Trainer, TrainerConfig
+    methods = methods or (METHODS if not FAST else ["baseline", "es", "eswp"])
+    epochs = epochs or (3 if FAST else 5)
+    n = n or (128 if FAST else 256)
+    rows: List[Row] = []
+    base_time = None
+    for method in methods:
+        tc = TrainerConfig(arch="qwen1.5-0.5b", method=method, epochs=epochs,
+                           meta_batch=16, minibatch=4, n_samples=n,
+                           seq_len=32, lr=3e-3, seed=0,
+                           anneal_ratio=0.05 if method in ("es", "eswp")
+                           else 0.0)
+        tr = Trainer(tc)
+        out = tr.train()
+        eval_loss = tr.eval_mean_loss(n=min(n, 128))
+        if method == "baseline":
+            base_time = out["wall_time"]
+        saved = (1 - out["wall_time"] / base_time) * 100 if base_time else 0.0
+        us = out["wall_time"] / max(out["steps"], 1) * 1e6
+        rows.append((f"table2/{method}", us,
+                     f"loss={eval_loss:.4f};time_saved={saved:.1f}%;"
+                     f"bp={int(out['bp_samples_total'])}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

@@ -1,0 +1,171 @@
+"""Fault-tolerant checkpointing: atomic, async, keep-K, elastic restore.
+
+Design (no orbax in this environment):
+  * one ``.npz`` per checkpoint holding every leaf keyed by its tree path,
+    plus ``manifest.json`` (step, leaf paths/shapes/dtypes, user metadata);
+  * writes go to ``step_<N>.tmp/`` then ``os.replace`` to ``step_<N>/`` —
+    a crash mid-write never corrupts the latest checkpoint;
+  * ``save_async`` snapshots to host synchronously (cheap) and writes on a
+    background thread so the train loop is never blocked on disk;
+  * restore takes a *template* state (any mesh/sharding): leaves are
+    ``device_put`` with the template's sharding, so restoring onto a
+    different device count (elastic scaling) is just building the new
+    template and calling restore — resharding is implicit.
+
+The ES score store is part of the state: losing it would silently degrade
+selection quality after restart (scores are EMAs, not derivable from params).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._last_error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    def step_dir(self, step: int) -> Path:
+        return self.dir / f"step_{step:010d}"
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.is_dir() and not p.name.endswith(".tmp"):
+                try:
+                    out.append(int(p.name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # ------------------------------------------------------------------
+    def save(self, state: PyTree, step: int,
+             metadata: Optional[Dict] = None) -> Path:
+        self.wait()  # serialize with any in-flight async save
+        host_flat = {k: np.asarray(v) for k, v in _flatten(state).items()}
+        return self._write(host_flat, step, metadata or {})
+
+    def save_async(self, state: PyTree, step: int,
+                   metadata: Optional[Dict] = None) -> None:
+        self.wait()
+        # snapshot to host NOW (device buffers may be donated next step)
+        host_flat = {k: np.asarray(v) for k, v in _flatten(state).items()}
+        md = dict(metadata or {})
+
+        def work():
+            try:
+                self._write(host_flat, step, md)
+            except BaseException as e:  # surfaced on next wait()
+                self._last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._last_error is not None:
+            err, self._last_error = self._last_error, None
+            raise err
+
+    # ------------------------------------------------------------------
+    def _write(self, host_flat: Dict[str, np.ndarray], step: int,
+               metadata: Dict) -> Path:
+        final = self.step_dir(step)
+        tmp = Path(str(final) + ".tmp")
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "arrays.npz", **host_flat)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in host_flat.items()},
+            "metadata": metadata,
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        # fsync directory contents then atomically publish
+        for f in tmp.iterdir():
+            with open(f, "rb") as fh:
+                os.fsync(fh.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self.step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def restore(self, template: PyTree, step: Optional[int] = None
+                ) -> PyTree:
+        """Load into the template's structure/shardings (elastic restore)."""
+        if step is None:
+            step = self.latest_step()
+        assert step is not None, f"no checkpoints in {self.dir}"
+        data = np.load(self.step_dir(step) / "arrays.npz")
+        flat_template = _flatten(template)
+        out = {}
+        for key, leaf in flat_template.items():
+            arr = data[key]
+            if hasattr(leaf, "sharding") and leaf.sharding is not None \
+                    and hasattr(leaf.sharding, "mesh"):
+                out[key] = jax.device_put(arr.astype(leaf.dtype),
+                                          leaf.sharding)
+            else:
+                out[key] = jax.device_put(
+                    arr.astype(getattr(leaf, "dtype", arr.dtype)))
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        keys = list(_flatten(template).keys())
+        return jax.tree_util.tree_unflatten(treedef,
+                                            [out[k] for k in keys])
+
+    def manifest(self, step: Optional[int] = None) -> Dict:
+        if step is None:
+            step = self.latest_step()
+        return json.loads(
+            (self.step_dir(step) / "manifest.json").read_text())

@@ -1,0 +1,184 @@
+"""Model/config system for the repro framework.
+
+One `ModelConfig` dataclass describes every architecture family in the assigned
+pool (dense decoder LMs, GQA, MoE, SSM/Mamba2, hybrid, encoder-decoder audio,
+cross-attention VLM).  Per-arch config files in this package instantiate it
+with the exact published hyper-parameters and register under their public id.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # identity
+    name: str = "unnamed"
+    family: str = "dense"  # dense | moe | ssm | hybrid | encdec | vlm
+
+    # core transformer dims
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 2
+    num_kv_heads: int = 2            # GQA: kv heads <= num_heads
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    d_ff: int = 256
+    vocab_size: int = 512
+
+    # layer flavour knobs
+    mlp_kind: str = "swiglu"         # swiglu | gelu
+    norm_kind: str = "rmsnorm"       # rmsnorm | layernorm | nonparam_ln (olmo)
+    qkv_bias: bool = False           # qwen-style attention bias
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    max_seq_len: int = 8192
+
+    # MoE
+    num_experts: int = 0             # 0 -> dense MLP
+    num_experts_per_tok: int = 2
+    moe_dense_residual: bool = False  # arctic: dense FFN residual alongside MoE
+    dense_residual_d_ff: int = 0      # arctic dense-residual FFN width
+
+    # SSM (Mamba2 / SSD)
+    ssm_state: int = 0               # N (state dim); 0 -> no ssm
+    ssm_head_dim: int = 64           # P
+    ssm_expand: int = 2              # inner dim = expand * d_model
+    ssm_chunk: int = 256             # SSD chunk length
+    ssm_conv_width: int = 4
+
+    # hybrid (zamba2): shared attention block applied every k ssm layers
+    hybrid_attn_every: int = 0       # 0 -> not hybrid
+
+    # encoder-decoder (seamless)
+    num_encoder_layers: int = 0      # >0 -> enc-dec model
+    encoder_is_audio: bool = True    # frontend stub provides frame embeddings
+    frontend_dim: int = 0            # dim of precomputed frame/patch embeddings
+
+    # vlm (llama-3.2-vision): cross-attn to image embeddings every k layers
+    cross_attn_every: int = 0        # 0 -> no cross-attn layers
+    num_image_tokens: int = 0        # patch embeddings per image (stub frontend)
+
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    optimizer_dtype: str = "float32"  # adam m/v dtype (bf16 for the largest MoEs)
+
+    # distribution preferences (see repro.distributed.sharding)
+    fsdp_params: bool = True         # shard param "embed" dim over data axes
+    moe_sharding: str = "ep"         # ep: experts over "model" | tp: d_ff over "model"
+    capacity_factor: float = 1.25    # MoE dispatch capacity factor
+    moe_groups: int = 1              # dispatch groups; 0 = auto (DP shards)
+    shard_kv_heads: bool = True      # False: replicate KV heads (kv < model axis)
+
+    # remat: 'none' | 'full' | 'selective' (checkpoint_dots_with_no_batch_dims)
+    remat_policy: str = "selective"
+    # dry-run cost accounting: unroll layer scans so HLO cost_analysis and
+    # collective-bytes parsing see every layer (scan bodies are counted once)
+    scan_unroll: bool = False
+
+    # attention implementation for the XLA path
+    attn_chunk_q: int = 512          # query-chunked memory-efficient attention
+
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.num_encoder_layers > 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """long_500k cells run only for sub-quadratic (ssm / hybrid) archs."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # every assigned arch has a decode path (encdec included)
+
+    def n_params(self) -> int:
+        """Analytic parameter count (used for 6ND model-FLOPs roofline term)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.resolved_head_dim()
+        qdim, kvdim = self.num_heads * hd, self.num_kv_heads * hd
+        attn = d * qdim + 2 * d * kvdim + qdim * d
+        if self.mlp_kind == "swiglu":
+            mlp = 3 * d * f
+        else:
+            mlp = 2 * d * f
+        if self.num_experts > 0:
+            moe = self.num_experts * (3 * d * f) + d * self.num_experts
+            if self.moe_dense_residual:
+                moe += 3 * d * self.dense_residual_d_ff
+            per_layer_ff = moe
+        else:
+            per_layer_ff = mlp
+        ssm = 0
+        if self.ssm_state > 0:
+            dinner = self.ssm_expand * d
+            nh = dinner // self.ssm_head_dim
+            # in_proj (z,x,B,C,dt) + out_proj + conv + A,D
+            ssm = d * (2 * dinner + 2 * self.ssm_state + nh) + dinner * d \
+                + self.ssm_conv_width * (dinner + 2 * self.ssm_state) + 2 * nh
+        if self.family == "ssm":
+            per_layer = ssm
+        elif self.family == "hybrid":
+            per_layer = ssm  # shared attn counted once below
+        else:
+            per_layer = attn + per_layer_ff
+        total = self.num_layers * per_layer
+        if self.family == "hybrid" and self.hybrid_attn_every:
+            total += attn + 3 * d * f if f else attn  # one shared block
+        if self.is_encdec:
+            total += self.num_encoder_layers * (attn + per_layer_ff)
+            # decoder cross-attention
+            total += self.num_layers * attn
+        if self.cross_attn_every:
+            n_cross = self.num_layers // self.cross_attn_every
+            total += n_cross * (attn + per_layer_ff)
+        total += v * d * (1 if self.tie_embeddings else 2)
+        return total
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top-k experts only)."""
+        if self.num_experts == 0:
+            return self.n_params()
+        d, f = self.d_model, self.d_ff
+        dense_moe = self.num_experts * 3 * d * f
+        active_moe = self.num_experts_per_tok * 3 * d * f
+        return self.n_params() - self.num_layers * (dense_moe - active_moe)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One (input-shape) cell: what gets lowered in the dry-run."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+ALL_SHAPES: Tuple[ShapeConfig, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+def shape_by_name(name: str) -> ShapeConfig:
+    for s in ALL_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown shape {name!r}; have {[s.name for s in ALL_SHAPES]}")
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether a (arch x shape) dry-run cell runs, and why not if skipped."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "long_500k requires sub-quadratic attention (ssm/hybrid only)"
+    return True, ""

@@ -1,0 +1,6 @@
+"""Evolved Sampling (ES/ESWP) — the paper's contribution as a JAX library."""
+from .scores import ESScores, init_scores, update_scores, batch_weights
+from .selection import select_minibatch, gumbel_topk_select, topk_select
+from .pruning import prune_epoch, PruneResult
+from .annealing import AnnealSchedule
+from .es_step import ESConfig, TrainState, init_train_state, make_steps

@@ -1,0 +1,225 @@
+"""The ES(WP) train step — the paper's technique as a first-class jitted op.
+
+Three step flavours (all pjit-able, static shapes, no host sync):
+
+  baseline_step   : standard batched training on the full meta-batch
+                    (paper baseline; also the annealing branch).
+  es_step         : paper-faithful serial ES —
+                      (1) scoring forward on the meta-batch B -> per-sample
+                          losses, (2) Eq. (3.1) score/weight update,
+                      (3) Gumbel top-k mini-batch selection (b of B),
+                      (4) fwd+bwd on the mini-batch only.
+                    When b == B (set-level-only ESWP) the scoring forward is
+                    FUSED into the training forward — no extra FP, matching
+                    the paper's "can be omitted" remark (§3.3).
+  pipelined_step  : beyond-paper — scores meta-batch t+1 concurrently with
+                    the grad step on the mini-batch selected (last step) from
+                    meta-batch t.  The two subgraphs share no data edges, so
+                    XLA overlaps them; selection weights are one step stale
+                    (ablated in benchmarks).
+
+Batch dict: tokens (B,S) i32, labels (B,S) i32 (-1 = masked),
+sample_ids (B,) i32, optional grad_scale (B,) f32 (InfoBatch rescale),
+optional frames / image_embeds (modality stubs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.layers import ShardCtx
+from ..models.transformer import lm_per_sample_loss
+from ..optim.adamw import OptConfig, OptState, init_opt_state, apply_updates
+from .scores import ESScores, init_scores, update_scores, batch_weights
+from .selection import select_minibatch
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ESConfig:
+    method: str = "es"            # es | eswp | loss | order | baseline
+    beta1: float = 0.2
+    beta2: float = 0.9
+    minibatch: int = 64           # b  (selected for BP)
+    n_train: int = 1 << 20        # score-store size
+    pipelined: bool = False       # beyond-paper overlap variant
+    seq_chunk: int = 1024         # xent seq chunking
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree
+    opt: OptState
+    scores: ESScores
+    rng: jax.Array
+    pending_w: jax.Array   # (B,) pipelined-ES carried selection weights
+    grad_err: PyTree = None  # error-feedback residuals (grad compression)
+
+
+def init_train_state(model_cfg: ModelConfig, es_cfg: ESConfig,
+                     opt_cfg: OptConfig, key: jax.Array,
+                     meta_batch: int) -> TrainState:
+    from ..models.transformer import init_lm
+    pkey, rkey = jax.random.split(key)
+    params, _ = init_lm(model_cfg, pkey)
+    if model_cfg.param_dtype != "float32":
+        dt = jnp.dtype(model_cfg.param_dtype)
+        params = jax.tree.map(lambda p: p.astype(dt), params)
+    grad_err = None
+    if getattr(opt_cfg, "compress_grads", False):
+        from ..distributed.compression import ErrorFeedbackState
+        grad_err = ErrorFeedbackState.init(params)
+    return TrainState(
+        params=params,
+        opt=init_opt_state(opt_cfg, params),
+        scores=init_scores(es_cfg.n_train),
+        rng=rkey,
+        pending_w=jnp.full((meta_batch,), 1.0, jnp.float32),
+        grad_err=grad_err,
+    )
+
+
+def _gather_batch(batch: Dict[str, jax.Array], idx: jax.Array,
+                  keys=("tokens", "labels", "sample_ids", "grad_scale",
+                        "frames", "image_embeds")) -> Dict[str, jax.Array]:
+    return {k: v[idx] for k, v in batch.items() if k in keys}
+
+
+def _loss_fn(model_cfg: ModelConfig, es_cfg: ESConfig, ctx: ShardCtx):
+    def fn(params, batch):
+        per_sample, _ = lm_per_sample_loss(model_cfg, params, batch, ctx,
+                                           seq_chunk=es_cfg.seq_chunk)
+        scale = batch.get("grad_scale")
+        if scale is not None:
+            mean = jnp.mean(per_sample * scale.astype(jnp.float32))
+        else:
+            mean = jnp.mean(per_sample)
+        return mean, per_sample
+    return fn
+
+
+def make_steps(model_cfg: ModelConfig, es_cfg: ESConfig, opt_cfg: OptConfig,
+               schedule: Callable, ctx: ShardCtx
+               ) -> Dict[str, Callable]:
+    """Build {baseline_step, es_step, pipelined_step}(state, batch)."""
+    loss_fn = _loss_fn(model_cfg, es_cfg, ctx)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _optim(state: TrainState, grads: PyTree,
+               metrics: Dict[str, jax.Array]):
+        new_err = state.grad_err
+        if getattr(opt_cfg, "compress_grads", False):
+            # int8 quantize->dequantize with error feedback: models the
+            # lossy leg of the compressed DP all-reduce (wire-level path:
+            # distributed/compression.compressed_psum_mean under shard_map)
+            from ..distributed.compression import compress_decompress
+            pairs = jax.tree.map(compress_decompress, grads, state.grad_err)
+            grads = jax.tree.map(lambda t: t[0], pairs,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+            new_err = jax.tree.map(lambda t: t[1], pairs,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+        lr_scale = schedule(state.opt.step)
+        new_params, new_opt, opt_metrics = apply_updates(
+            opt_cfg, state.params, grads, state.opt, lr_scale)
+        metrics.update(opt_metrics)
+        metrics["lr_scale"] = lr_scale
+        return new_params, new_opt, new_err
+
+    # ------------------------------------------------------------------
+    def baseline_step(state: TrainState, batch: Dict[str, jax.Array]
+                      ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        """Standard batched training; still updates the score store from the
+        (free) per-sample losses of the training forward."""
+        (mean, per_sample), grads = grad_fn(state.params, batch)
+        metrics = {"loss": mean, "bp_samples": jnp.asarray(
+            batch["tokens"].shape[0], jnp.float32)}
+        new_params, new_opt, new_err = _optim(state, grads, metrics)
+        scores = update_scores(state.scores, batch["sample_ids"],
+                               jax.lax.stop_gradient(per_sample),
+                               es_cfg.beta1, es_cfg.beta2)
+        return dataclasses.replace(state, params=new_params, opt=new_opt,
+                                   scores=scores, grad_err=new_err), metrics
+
+    # ------------------------------------------------------------------
+    def es_step(state: TrainState, batch: Dict[str, jax.Array]
+                ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        B = batch["tokens"].shape[0]
+        b = min(es_cfg.minibatch, B)
+        if b >= B:
+            # set-level-only ESWP: fuse scoring into the training forward
+            return baseline_step(state, batch)
+
+        # (1) scoring forward (no grad)
+        meta_losses, _ = lm_per_sample_loss(
+            model_cfg, jax.lax.stop_gradient(state.params), batch, ctx,
+            seq_chunk=es_cfg.seq_chunk)
+        meta_losses = jax.lax.stop_gradient(meta_losses)
+
+        # (2) Eq. (3.1): weights from s(t-1) + current losses, then update
+        w = batch_weights(state.scores, batch["sample_ids"], meta_losses,
+                          es_cfg.beta1, es_cfg.beta2)
+        scores = update_scores(state.scores, batch["sample_ids"], meta_losses,
+                               es_cfg.beta1, es_cfg.beta2)
+
+        # (3) mini-batch selection (replicated PRNG: same on all hosts)
+        rng, sel_key = jax.random.split(state.rng)
+        idx = select_minibatch(es_cfg.method, sel_key, w, b)
+        sel = _gather_batch(batch, idx)
+
+        # (4) grad step on the mini-batch
+        (mean, _), grads = grad_fn(state.params, sel)
+        metrics = {
+            "loss": jnp.mean(meta_losses),
+            "sel_loss": mean,
+            "bp_samples": jnp.asarray(b, jnp.float32),
+            "w_mean": jnp.mean(w),
+            "w_max": jnp.max(w),
+        }
+        new_params, new_opt, new_err = _optim(state, grads, metrics)
+        return dataclasses.replace(state, params=new_params, opt=new_opt,
+                                   scores=scores, rng=rng,
+                                   grad_err=new_err), metrics
+
+    # ------------------------------------------------------------------
+    def pipelined_step(state: TrainState,
+                       batches: Tuple[Dict[str, jax.Array],
+                                      Dict[str, jax.Array]]
+                       ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        """batches = (current, next).  Train on `current` using weights
+        scored LAST step (state.pending_w); score `next` with pre-update
+        params.  The two subgraphs are independent -> XLA overlaps them."""
+        cur, nxt = batches
+        B = cur["tokens"].shape[0]
+        b = min(es_cfg.minibatch, B)
+
+        # train on current meta-batch with carried weights
+        rng, sel_key = jax.random.split(state.rng)
+        idx = select_minibatch(es_cfg.method, sel_key, state.pending_w, b)
+        sel = _gather_batch(cur, idx)
+        (mean, _), grads = grad_fn(state.params, sel)
+
+        # score next meta-batch with pre-update params (1-step staleness)
+        nxt_losses, _ = lm_per_sample_loss(
+            model_cfg, jax.lax.stop_gradient(state.params), nxt, ctx,
+            seq_chunk=es_cfg.seq_chunk)
+        nxt_losses = jax.lax.stop_gradient(nxt_losses)
+        w_next = batch_weights(state.scores, nxt["sample_ids"], nxt_losses,
+                               es_cfg.beta1, es_cfg.beta2)
+        scores = update_scores(state.scores, nxt["sample_ids"], nxt_losses,
+                               es_cfg.beta1, es_cfg.beta2)
+
+        metrics = {"loss": jnp.mean(nxt_losses), "sel_loss": mean,
+                   "bp_samples": jnp.asarray(b, jnp.float32)}
+        new_params, new_opt, new_err = _optim(state, grads, metrics)
+        return dataclasses.replace(state, params=new_params, opt=new_opt,
+                                   scores=scores, rng=rng, pending_w=w_next,
+                                   grad_err=new_err), metrics
+
+    return {"baseline_step": baseline_step, "es_step": es_step,
+            "pipelined_step": pipelined_step}

@@ -1,0 +1,94 @@
+"""Set-level (epoch-boundary) data selection: ESWP pruning + baselines.
+
+These run host-side between epochs (they decide *which indices the loader
+yields*), on a numpy snapshot of the score store.  Every method returns the
+kept indices plus an optional per-sample gradient rescale (InfoBatch).
+
+Implemented policies (paper Tab. 1 & §4.1 comparisons):
+  eswp      : keep (1-r)·n sampled WITHOUT replacement ∝ w_i (paper Alg. 1;
+              randomized keep — Remark 1)
+  infobatch : prune samples with loss below the mean w.p. r, rescale kept
+              below-mean gradients by 1/(1-r)  (Qin et al. 2024)
+  ucb       : keep top (1-r)·n by EMA-loss + exploration bonus (Raju et al.)
+  ka        : KAKURENBO-style — hide the r·n lowest-loss samples, move back
+              samples whose loss increased since last epoch
+  random    : uniform (1-r)·n keep (ablation baseline)
+  none      : keep everything
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PruneResult:
+    kept: np.ndarray                    # (m,) int64 kept sample ids
+    grad_scale: Optional[np.ndarray]    # (n,) f32 per-sample rescale or None
+
+
+def _gumbel_topk_np(rng: np.random.Generator, weights: np.ndarray,
+                    k: int) -> np.ndarray:
+    logw = np.log(np.maximum(weights.astype(np.float64), 1e-20))
+    g = rng.gumbel(size=weights.shape)
+    return np.argpartition(-(logw + g), k - 1)[:k]
+
+
+def prune_epoch(method: str, rng: np.random.Generator, *,
+                weights: np.ndarray, losses: np.ndarray,
+                prev_losses: Optional[np.ndarray] = None,
+                seen: Optional[np.ndarray] = None,
+                ratio: float = 0.2, ucb_c: float = 1.0,
+                ka_tau: float = 0.7) -> PruneResult:
+    """Pick kept indices for the next epoch from per-sample statistics.
+
+    weights: ES w_i snapshot; losses: latest per-sample losses (s_i works as
+    a robust proxy); prev_losses/seen feed KA / UCB variants.
+    """
+    n = weights.shape[0]
+    n_keep = max(1, int(round((1.0 - ratio) * n)))
+
+    if method in ("none", "baseline", "es", "loss", "order", "uniform"):
+        return PruneResult(np.arange(n), None)
+
+    if method == "eswp":
+        kept = _gumbel_topk_np(rng, weights, n_keep)
+        return PruneResult(np.sort(kept), None)
+
+    if method == "random":
+        kept = rng.choice(n, size=n_keep, replace=False)
+        return PruneResult(np.sort(kept), None)
+
+    if method == "infobatch":
+        mean = float(np.mean(losses))
+        below = losses < mean
+        drop = below & (rng.random(n) < ratio)
+        kept = np.nonzero(~drop)[0]
+        scale = np.ones(n, np.float32)
+        # kept below-mean samples get 1/(1-r) to keep the gradient unbiased
+        scale[below & ~drop] = 1.0 / (1.0 - ratio)
+        return PruneResult(kept, scale)
+
+    if method == "ucb":
+        t = max(1, int(seen.max()) if seen is not None else 1)
+        cnt = np.maximum(seen if seen is not None else np.ones(n), 1)
+        score = losses + ucb_c * np.sqrt(np.log(t + 1.0) / cnt)
+        kept = np.argpartition(-score, n_keep - 1)[:n_keep]
+        return PruneResult(np.sort(kept), None)
+
+    if method == "ka":
+        order = np.argsort(losses)            # ascending: easiest first
+        n_hide = n - n_keep
+        hidden = order[:n_hide]
+        if prev_losses is not None and n_hide > 0:
+            # move-back: hidden samples whose loss went UP re-enter
+            worse = losses[hidden] > prev_losses[hidden] * ka_tau + (1 - ka_tau) * losses[hidden]
+            moved_back = hidden[losses[hidden] > prev_losses[hidden]]
+            hidden = np.setdiff1d(hidden, moved_back, assume_unique=False)
+        mask = np.ones(n, bool)
+        mask[hidden] = False
+        return PruneResult(np.nonzero(mask)[0], None)
+
+    raise ValueError(f"unknown pruning method {method!r}")

@@ -1,0 +1,112 @@
+"""Evolved Sampling score state — paper Eq. (3.1) / Prop. 3.1.
+
+The recursion
+
+    w_i(t) = beta1 * s_i(t-1) + (1-beta1) * l_i(theta(t))
+    s_i(t) = beta2 * s_i(t-1) + (1-beta2) * l_i(theta(t))
+
+implicitly augments the loss EMA with (beta2-beta1)-weighted loss
+*differences* (Eq. 3.2) at O(n) memory: two scalars per sample.  All updates
+here are pure-JAX scatter ops so they live *inside* the jitted train step
+(no host round-trip).  ``explicit_weights`` implements the unrolled Eq. (3.2)
+expansion and is used by property tests to verify the equivalence.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ESScores:
+    """Per-sample score state, replicated across the mesh.
+
+    s: EMA of losses (Eq. 3.1 second line).
+    w: sampling weights (Eq. 3.1 first line).
+    seen: times each sample was scored (diagnostics / KA-style policies).
+    """
+    s: jax.Array      # (n,) f32
+    w: jax.Array      # (n,) f32
+    seen: jax.Array   # (n,) i32
+
+
+def init_scores(n: int) -> ESScores:
+    return ESScores(s=jnp.full((n,), 1.0 / n, jnp.float32),
+                    w=jnp.full((n,), 1.0 / n, jnp.float32),
+                    seen=jnp.zeros((n,), jnp.int32))
+
+
+def update_scores(scores: ESScores, sample_ids: jax.Array,
+                  losses: jax.Array, beta1: float, beta2: float) -> ESScores:
+    """Scatter the Eq. (3.1) update for one meta-batch.
+
+    sample_ids: (B,) int32 indices into the score store; losses: (B,) f32.
+    Note: ``w`` uses s(t-1) (the *pre*-update s), per the paper.
+    """
+    losses = losses.astype(jnp.float32)
+    s_prev = scores.s[sample_ids]
+    w_new = beta1 * s_prev + (1.0 - beta1) * losses
+    s_new = beta2 * s_prev + (1.0 - beta2) * losses
+    return ESScores(
+        s=scores.s.at[sample_ids].set(s_new),
+        w=scores.w.at[sample_ids].set(w_new),
+        seen=scores.seen.at[sample_ids].add(1),
+    )
+
+
+def batch_weights(scores: ESScores, sample_ids: jax.Array,
+                  losses: jax.Array, beta1: float, beta2: float) -> jax.Array:
+    """The w(t) of Eq. (3.1) for a meta-batch, without mutating state."""
+    losses = losses.astype(jnp.float32)
+    return beta1 * scores.s[sample_ids] + (1.0 - beta1) * losses
+
+
+# ---------------------------------------------------------------------------
+# Explicit (unrolled) forms — used by tests and theory benchmarks only
+# ---------------------------------------------------------------------------
+
+def explicit_weights(loss_history: jax.Array, beta1: float, beta2: float,
+                     s0: float) -> jax.Array:
+    """Unrolled Eq. (3.1): loss_history (T,) -> w(T) exactly.
+
+    w(t) = beta1 * s(t-1) + (1-beta1) * l(t) with
+    s(t) = beta2^t s0 + (1-beta2) sum_k beta2^{t-k} l(k).
+    """
+    T = loss_history.shape[0]
+    s = s0
+    w = s0
+    for t in range(T):
+        w = beta1 * s + (1.0 - beta1) * loss_history[t]
+        s = beta2 * s + (1.0 - beta2) * loss_history[t]
+    return w
+
+
+def expansion_weights(loss_history: jax.Array, beta1: float, beta2: float,
+                      s0: float) -> jax.Array:
+    """Eq. (3.2): EMA-of-losses + (beta2-beta1)-weighted EMA of differences.
+
+    w(t) = (1-b2) sum_{k=1..t} b2^{t-k} l(k)
+         + (b2-b1) sum_{k=1..t-1} b2^{t-1-k} (l(k+1)-l(k))
+         + [b1 b2^{t-1} s0 + (b2-b1) b2^{t-1} l(1)]          (exact tail)
+    The bracketed tail is the O(beta2^t) term of the proposition, kept exact
+    here so tests can assert equality rather than asymptotics.
+    """
+    l = loss_history
+    T = l.shape[0]
+    t = T  # steps are 1-indexed in the paper
+    ema = (1 - beta2) * sum(beta2 ** (t - k) * l[k - 1] for k in range(1, t + 1))
+    dif = (beta2 - beta1) * sum(beta2 ** (t - 1 - k) * (l[k] - l[k - 1])
+                                for k in range(1, t))
+    tail = beta1 * beta2 ** (t - 1) * s0 + (beta2 - beta1) * beta2 ** (t - 1) * l[0]
+    return ema + dif + tail
+
+
+def transfer_function(beta1: float, beta2: float, omega: jax.Array) -> jax.Array:
+    """|H(i w)| of Thm. 3.2 — the frequency response of the ES weight signal."""
+    num = (beta2 - beta1) ** 2 * omega ** 2 + (1 - beta2) ** 2
+    den = omega ** 2 + (1 - beta2) ** 2
+    return jnp.sqrt(num / den)

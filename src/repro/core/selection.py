@@ -1,0 +1,69 @@
+"""Batch-level selection: pick a mini-batch b from a meta-batch B.
+
+All strategies run *inside* the jitted step with static shapes:
+
+  es / loss : Gumbel top-k == sampling w/o replacement with p_i ∝ w_i
+              (Efraimidis–Spirakis keys in log space)
+  order     : deterministic top-k on current losses (Ordered SGD,
+              Kawaguchi & Lu 2020)
+  uniform   : uniform w/o replacement (the annealing branch / baseline)
+
+``loss`` is ES with beta1 = beta2 = 0 (paper Eq. 2.3) and is provided as a
+named method for the baseline table.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-20
+
+
+def gumbel_topk_select(key: jax.Array, weights: jax.Array, k: int
+                       ) -> jax.Array:
+    """Sample k of len(weights) without replacement, p_i ∝ max(w_i, eps).
+
+    Returns indices (k,) int32.  Gumbel-key trick: argtop-k of
+    log(w_i) + G_i is distributionally identical to sequential weighted
+    sampling without replacement.
+    """
+    logw = jnp.log(jnp.maximum(weights.astype(jnp.float32), _EPS))
+    g = jax.random.gumbel(key, weights.shape, jnp.float32)
+    _, idx = jax.lax.top_k(logw + g, k)
+    return idx.astype(jnp.int32)
+
+
+def topk_select(weights: jax.Array, k: int) -> jax.Array:
+    """Deterministic top-k (Ordered SGD)."""
+    _, idx = jax.lax.top_k(weights.astype(jnp.float32), k)
+    return idx.astype(jnp.int32)
+
+
+def uniform_select(key: jax.Array, n: int, k: int) -> jax.Array:
+    """Uniform without replacement."""
+    g = jax.random.gumbel(key, (n,), jnp.float32)
+    _, idx = jax.lax.top_k(g, k)
+    return idx.astype(jnp.int32)
+
+
+def select_minibatch(method: str, key: jax.Array, weights: jax.Array,
+                     k: int) -> jax.Array:
+    """Dispatch. ``weights`` are the per-meta-batch-sample w_i(t)."""
+    n = weights.shape[0]
+    if k >= n:
+        return jnp.arange(n, dtype=jnp.int32)
+    if method in ("es", "eswp", "loss"):
+        return gumbel_topk_select(key, weights, k)
+    if method == "order":
+        return topk_select(weights, k)
+    if method in ("uniform", "baseline"):
+        return uniform_select(key, n, k)
+    raise ValueError(f"unknown selection method {method!r}")
+
+
+def selection_probs(weights: jax.Array) -> jax.Array:
+    """Normalized p_i ∝ w_i (for diagnostics / tests)."""
+    w = jnp.maximum(weights.astype(jnp.float32), _EPS)
+    return w / jnp.sum(w)

@@ -1,0 +1,108 @@
+"""Gradient compression: int8 all-reduce with error feedback.
+
+Distributed-optimization trick for bandwidth-bound DP at scale (1000+
+nodes): replace the f32 ring all-reduce (~8 B/elem on the wire) with a
+quantized reduce-scatter + all-gather (~2 B/elem):
+
+  1. residual-corrected gradient  g' = g + err        (error feedback)
+  2. per-chunk symmetric int8 quantization (scale = max|g'| / 127)
+  3. all_to_all int8 chunk shards  (reduce-scatter phase, 1 B/elem)
+  4. local dequant + sum -> mean over the axis
+  5. requantize the reduced chunk, all_gather int8    (1 B/elem)
+  6. dequantize; err = g' - dequant(quant(g'))        (carried to next step)
+
+Error feedback makes the scheme unbiased *over time*: the quantization
+residual is re-injected next step, so SGD converges as if uncompressed
+(Karimireddy et al., 2019).  Exposed as a drop-in ``shard_map`` wrapper
+around the DP axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+PyTree = Any
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization; returns (q, scale)."""
+    scale = jnp.max(jnp.abs(x)) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def _compressed_mean_1d(x: jax.Array, axis_name: str,
+                        axis_size: int) -> jax.Array:
+    """Mean over `axis_name` of a per-device 1-D f32 vector via int8
+    reduce-scatter + all-gather. len(x) must be divisible by axis_size."""
+    n = x.shape[0]
+    chunks = x.reshape(axis_size, n // axis_size)
+    q, scale = quantize_int8(chunks)
+    # reduce-scatter phase: device i receives chunk i from everyone
+    q_sh = jax.lax.all_to_all(q[:, None], axis_name, split_axis=0,
+                              concat_axis=1)           # (1, axis, chunk)
+    scales = jax.lax.all_gather(scale, axis_name)       # (axis,)
+    local = jnp.sum(dequantize_int8(q_sh[0], scales[:, None]), axis=0)
+    local = local / axis_size                           # mean
+    # all-gather phase: share the reduced chunk back, int8 again
+    q2, scale2 = quantize_int8(local)
+    q2_all = jax.lax.all_gather(q2, axis_name)          # (axis, chunk)
+    s2_all = jax.lax.all_gather(scale2, axis_name)      # (axis,)
+    return dequantize_int8(q2_all, s2_all[:, None]).reshape(n)
+
+
+def compressed_psum_mean(local_grads_stacked: jax.Array, mesh: Mesh,
+                         axis_name: str = "data") -> jax.Array:
+    """Compressed DP mean of per-device local gradients.
+
+    local_grads_stacked: (axis_size * n,) with device d's flat local
+    gradient in slot d (i.e. sharded over ``axis_name``).  Returns
+    (axis_size * n,) where every device's slot holds the (approximate)
+    mean — the compressed equivalent of ``psum / axis_size``.
+    """
+    axis_size = mesh.shape[axis_name]
+    f = shard_map(
+        functools.partial(_compressed_mean_1d, axis_name=axis_name,
+                          axis_size=axis_size),
+        mesh=mesh,
+        in_specs=P(axis_name),
+        out_specs=P(axis_name),
+        check_rep=False,
+    )
+    return f(local_grads_stacked)
+
+
+class ErrorFeedbackState:
+    """Carried quantization residual per gradient tensor (pytree of f32)."""
+
+    @staticmethod
+    def init(grads: PyTree) -> PyTree:
+        return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+
+def compress_decompress(g: jax.Array, err: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Local quantize->dequantize with error feedback (the lossy part of
+    the pipeline, testable without a multi-device mesh)."""
+    corrected = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(corrected)
+    deq = dequantize_int8(q, scale)
+    new_err = corrected - deq
+    return deq, new_err
+
+
+def wire_bytes_per_element(axis_size: int) -> Tuple[float, float]:
+    """(compressed, f32-ring) bytes/elem on the wire for the DP reduce."""
+    compressed = 1.0 + 1.0        # all_to_all int8 + all_gather int8
+    ring = 2.0 * 4.0 * (axis_size - 1) / axis_size  # f32 ring all-reduce
+    return compressed, ring

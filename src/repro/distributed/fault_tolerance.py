@@ -1,0 +1,106 @@
+"""Fault-tolerance runtime: preemption, stragglers, elastic restarts.
+
+On a real pod slice these hook into the cluster scheduler; every mechanism
+below is the single-process core that the multi-host wrapper would call:
+
+  PreemptionHandler : SIGTERM/SIGINT -> checkpoint-and-exit at the next
+                      step boundary (never mid-optimizer-update).
+  StragglerMonitor  : per-step wall-time EMA + z-score; flags steps slower
+                      than ``threshold``x the running mean.  On TPU pods the
+                      standard mitigations are (a) within-batch work stealing
+                      is impossible under SPMD, so (b) the flagged *host* is
+                      reported for replacement and (c) training continues
+                      from the last checkpoint on the reshaped mesh
+                      (``elastic`` below).
+  elastic_restart   : recompute the mesh for the surviving device count and
+                      restore the checkpoint under the new shardings (the
+                      Checkpointer does the resharding implicitly).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, List, Optional
+
+import numpy as np
+
+
+class PreemptionHandler:
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self._requested = False
+        self._prev = {}
+        self._signals = signals
+
+    def install(self) -> "PreemptionHandler":
+        for sig in self._signals:
+            self._prev[sig] = signal.signal(sig, self._handler)
+        return self
+
+    def uninstall(self) -> None:
+        for sig, prev in self._prev.items():
+            signal.signal(sig, prev)
+        self._prev.clear()
+
+    def _handler(self, signum, frame):
+        self._requested = True
+
+    @property
+    def preemption_requested(self) -> bool:
+        return self._requested
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    step: int
+    duration: float
+    mean: float
+    ratio: float
+
+
+class StragglerMonitor:
+    """EMA step-time tracker; flags outlier steps / degrading trend."""
+
+    def __init__(self, threshold: float = 2.0, ema: float = 0.9,
+                 warmup_steps: int = 5):
+        self.threshold = threshold
+        self.ema = ema
+        self.warmup = warmup_steps
+        self._mean: Optional[float] = None
+        self._count = 0
+        self.reports: List[StragglerReport] = []
+
+    def record(self, step: int, duration: float) -> Optional[StragglerReport]:
+        self._count += 1
+        if self._mean is None:
+            self._mean = duration
+            return None
+        flagged = None
+        if self._count > self.warmup and duration > self.threshold * self._mean:
+            flagged = StragglerReport(step=step, duration=duration,
+                                      mean=self._mean,
+                                      ratio=duration / self._mean)
+            self.reports.append(flagged)
+            # do NOT fold outliers into the mean — keeps detection sharp
+            return flagged
+        self._mean = self.ema * self._mean + (1 - self.ema) * duration
+        return flagged
+
+    @property
+    def mean_step_time(self) -> Optional[float]:
+        return self._mean
+
+
+def elastic_restart(checkpointer, make_template: Callable[[Any], Any],
+                    model_parallel: int, step: Optional[int] = None):
+    """Rebuild the mesh for the current device count and restore onto it.
+
+    ``make_template(mesh) -> state_template`` builds an abstract/concrete
+    state with the new mesh's shardings; the Checkpointer reshards the
+    saved leaves onto it.
+    """
+    from ..launch.mesh import make_mesh_for
+    mesh = make_mesh_for(model_parallel=model_parallel)
+    template = make_template(mesh)
+    state = checkpointer.restore(template, step=step)
+    return mesh, state

@@ -1,0 +1,117 @@
+"""Logical-axis -> mesh-axis rules and sharding-tree construction.
+
+Meshes (see launch/mesh.py): single-pod ("data","model") = (16,16),
+multi-pod ("pod","data","model") = (2,16,16).
+
+Logical axes
+  batch       activation batch dim            -> all DP axes
+  heads/mlp   TP dims (attn heads, FFN hidden,
+              SSD heads)                      -> "model"
+  kv_heads    KV heads                        -> "model" or replicated
+              (cfg.shard_kv_heads: GQA with kv < |model| replicates)
+  vocab       embedding/unembedding rows      -> "model"
+  embed       *parameter* d_model dim         -> DP axes when cfg.fsdp_params
+              (FSDP/ZeRO-3: per-layer all-gather inside the scan), else None
+  expert      MoE expert count                -> "model" (EP) or None (TP)
+  moe_mlp     expert FFN hidden               -> None (EP) or "model" (TP)
+  expert_cap  MoE dispatch capacity dim       -> DP axes in TP mode
+  expert_group grouped-dispatch group dim       -> DP axes (dispatch scatters
+              stay shard-local; see models/moe.py)
+  cache_seq   KV-cache sequence dim           -> shape-dependent (decode TP
+              shards the cache sequence when KV heads are replicated;
+              long-context shards it over the DP axes since batch=1)
+  layers      scan dim                        -> never sharded
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models.layers import ShardCtx
+
+PyTree = Any
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_rules(cfg: ModelConfig, mesh: Mesh,
+               kind: str = "train") -> Tuple[Tuple[str, Any], ...]:
+    """kind: train | prefill | decode | long."""
+    dp = dp_axes(mesh)
+    model_size = mesh.shape.get("model", 1)
+    ep = cfg.moe_sharding == "ep" and cfg.num_experts >= model_size
+    if cfg.moe_sharding == "ep" and cfg.num_experts and not ep:
+        import warnings
+        warnings.warn(
+            f"{cfg.name}: moe_sharding='ep' but {cfg.num_experts} experts "
+            f"< {model_size}-way model axis — falling back to TP-sharded "
+            f"experts (d_ff over 'model'). See EXPERIMENTS.md §Perf cell 2.",
+            stacklevel=2)
+
+    shard_kv = cfg.shard_kv_heads and cfg.num_kv_heads % max(model_size, 1) == 0
+    if kind == "long":
+        batch_rule = None            # batch = 1: nothing to shard
+        cache_seq = dp               # 500k cache sequence over DP axes
+    elif kind == "decode":
+        batch_rule = dp
+        cache_seq = None if shard_kv else "model"
+    else:
+        batch_rule = dp
+        cache_seq = None
+
+    rules = (
+        ("batch", batch_rule),
+        ("heads", "model"),
+        ("mlp", "model"),
+        ("kv_heads", "model" if shard_kv else None),
+        ("vocab", "model"),
+        ("embed", dp if cfg.fsdp_params else None),
+        ("expert", "model" if ep else None),
+        ("moe_mlp", None if ep else "model"),
+        # grouped dispatch owns the DP axes via expert_group; ungrouped TP
+        # dispatch shards capacity over DP instead (never both)
+        ("expert_cap", None if (ep or cfg.moe_groups != 1) else dp),
+        ("expert_group", dp if cfg.moe_groups != 1 else None),
+        ("cache_seq", cache_seq),
+        ("layers", None),
+    )
+    return rules
+
+
+def make_ctx(cfg: ModelConfig, mesh: Optional[Mesh],
+             kind: str = "train",
+             rule_overrides: Optional[Dict[str, Any]] = None) -> ShardCtx:
+    if mesh is None:
+        return ShardCtx()
+    rules = make_rules(cfg, mesh, kind)
+    if rule_overrides:
+        rules = tuple((k, rule_overrides.get(k, v)) for k, v in rules)
+        extra = tuple((k, v) for k, v in rule_overrides.items()
+                      if k not in dict(rules))
+        rules = rules + extra
+    return ShardCtx(mesh=mesh, rules=rules)
+
+
+def axes_to_sharding(axes_tree: PyTree, ctx: ShardCtx) -> PyTree:
+    """Map a logical-axes pytree (tuples of names) to NamedShardings."""
+    def conv(ax):
+        spec = ctx.spec(ax) if ax is not None else P()
+        return NamedSharding(ctx.mesh, spec)
+    return jax.tree.map(conv, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) or x is None)
+
+
+def replicated(ctx: ShardCtx) -> NamedSharding:
+    return NamedSharding(ctx.mesh, P())
+
+
+def batch_sharding(ctx: ShardCtx, ndim: int, batch_dim: int = 0
+                   ) -> NamedSharding:
+    spec = [None] * ndim
+    spec[batch_dim] = ctx.axis("batch")
+    return NamedSharding(ctx.mesh, P(*spec))

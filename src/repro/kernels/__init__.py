@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical hot spots (DESIGN.md §2).
+
+Each kernel ships three files: <name>.py (pl.pallas_call + BlockSpec
+tiling), ops.py (jitted wrapper + backend dispatch), ref.py (pure-jnp
+oracle).  On non-TPU backends the wrappers run interpret mode
+(correctness); tests sweep shapes/dtypes against the oracles.
+"""
+from .xent.ops import per_sample_xent_fused, per_token_xent_fused
+from .flash_attn.ops import gqa_flash_attention
+from .score_update.ops import update_scores_fused

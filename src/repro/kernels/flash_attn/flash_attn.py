@@ -1,0 +1,106 @@
+"""Blocked causal flash attention (forward) Pallas kernel.
+
+TPU adaptation of the paper-era GPU flash attention: q/k/v tiles stream
+HBM->VMEM, the (bq, bk) score tile lives only in VMEM, softmax is online
+(running max/sum scratch), so the O(S^2) score tensor never touches HBM.
+In this framework it serves the ES *scoring forward* and inference prefill
+— both forward-only, so no backward kernel is required (training backprop
+keeps the XLA path; see DESIGN.md).
+
+Causal skip: kv tiles strictly above the diagonal are skipped via
+``pl.when`` (half the work at long S).
+
+Layout: q/k/v are (BH, S, hd) with batch*heads flattened into the leading
+grid dim; GQA callers repeat/flatten kv heads (ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, n_k: int, scale: float,
+                  causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    if causal:
+        # skip kv tiles strictly above the causal diagonal
+        should_run = (ki * block_k) <= (qi * block_q + block_q - 1)
+    else:
+        should_run = ki >= 0
+
+    @pl.when(should_run)
+    def _body():
+        q = q_ref[0]                                   # (bq, hd)
+        k = k_ref[0]                                   # (bk, hd)
+        v = v_ref[0]                                   # (bk, hd)
+        s = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T,
+                    preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        if causal:
+            rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) \
+                + qi * block_q
+            cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) \
+                + ki * block_k
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jnp.dot(p, v.astype(jnp.float32),
+                                  preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "causal",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    block_q: int = 128, block_k: int = 128,
+                    causal: bool = True,
+                    interpret: bool = False) -> jax.Array:
+    """q/k/v: (BH, S, hd) -> (BH, S, hd).  S must divide block sizes."""
+    BH, S, hd = q.shape
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    n_q, n_k = S // block_q, S // block_k
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(_flash_kernel, block_q=block_q,
+                               block_k=block_k, n_k=n_k, scale=scale,
+                               causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,24 @@
+"""Jitted wrapper with backend dispatch for the fused score update."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from ...core.scores import ESScores
+from .score_update import fused_score_update
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def update_scores_fused(scores: ESScores, ids: jax.Array, losses: jax.Array,
+                        beta1: float, beta2: float,
+                        interpret: bool | None = None) -> ESScores:
+    if interpret is None:
+        interpret = not _on_tpu()
+    s, w, seen = fused_score_update(scores.s, scores.w, scores.seen, ids,
+                                    losses, beta1=beta1, beta2=beta2,
+                                    interpret=interpret)
+    return ESScores(s=s, w=w, seen=seen)

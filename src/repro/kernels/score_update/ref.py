@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused score update (== core.scores.update_scores).
+
+Semantics note: for DUPLICATE ids this oracle (XLA scatter) keeps the last
+write computed from the ORIGINAL s, while the kernel applies Eq. (3.1)
+sequentially (the second occurrence sees the first's update — the correct
+recursion).  ES meta-batches are sampled WITHOUT replacement, so ids are
+unique on the training path; tests cover the unique-id contract and pin
+the duplicate-id divergence intentionally.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def score_update_ref(s: jax.Array, w: jax.Array, seen: jax.Array,
+                     ids: jax.Array, losses: jax.Array, *,
+                     beta1: float, beta2: float
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    losses = losses.astype(jnp.float32)
+    s_prev = s[ids]
+    w_new = beta1 * s_prev + (1.0 - beta1) * losses
+    s_new = beta2 * s_prev + (1.0 - beta2) * losses
+    return (s.at[ids].set(s_new), w.at[ids].set(w_new),
+            seen.at[ids].add(1))

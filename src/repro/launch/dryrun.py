@@ -1,0 +1,327 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+512 placeholder host devices let ``jax.make_mesh`` build the production
+meshes; lowering uses ShapeDtypeStruct stand-ins (no allocation) and
+``.compile()`` proves the distribution config is coherent (sharding,
+collectives, memory).  Results (memory_analysis, cost_analysis, per-opcode
+collective bytes, roofline terms) are cached as JSON under
+``experiments/dryrun/``.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--variant es]
+  python -m repro.launch.dryrun --list
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import (ModelConfig, ShapeConfig, ALL_SHAPES,
+                            shape_by_name, cell_is_applicable)
+from ..configs.registry import get_config, list_archs
+from ..core.es_step import ESConfig, make_steps
+from ..models.model import prefill, decode_step
+from ..optim.adamw import OptConfig
+from ..optim.schedule import get_schedule
+from ..distributed.sharding import make_ctx
+from .hlo_analysis import collective_bytes, roofline_terms
+from .inputs import (train_batch_specs, abstract_train_state, prefill_specs,
+                     decode_specs)
+from .mesh import make_production_mesh, mesh_info
+
+DEFAULT_OUT = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# Variants — perf-iteration knobs (EXPERIMENTS.md §Perf)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """A dry-run configuration delta for hillclimbing."""
+    step: str = "es"                      # es | baseline | pipelined (train)
+    cfg_replace: tuple = ()               # ModelConfig field overrides
+    rule_overrides: tuple = ()            # logical-axis rule overrides
+    es_replace: tuple = ()                # ESConfig overrides
+
+
+VARIANTS: Dict[str, Variant] = {
+    # paper-faithful ES step (scoring fwd + select + bwd on b=B/4)
+    "es": Variant(step="es"),
+    # no data selection at all (the paper's Baseline row)
+    "noes": Variant(step="baseline"),
+    # beyond-paper: overlap scoring of batch t+1 with training on batch t
+    "pipelined": Variant(step="pipelined"),
+    # sharding ablations for hillclimbing
+    "fsdp_off": Variant(cfg_replace=(("fsdp_params", False),)),
+    "fsdp_on": Variant(cfg_replace=(("fsdp_params", True),)),
+    "remat_full": Variant(cfg_replace=(("remat_policy", "full"),)),
+    "remat_none": Variant(cfg_replace=(("remat_policy", "none"),)),
+    "moe_tp": Variant(cfg_replace=(("moe_sharding", "tp"),)),
+    "moe_ep": Variant(cfg_replace=(("moe_sharding", "ep"),)),
+    "kv_shard": Variant(cfg_replace=(("shard_kv_heads", True),)),
+    "kv_replicate": Variant(cfg_replace=(("shard_kv_heads", False),)),
+    "b_over_B_50": Variant(es_replace=(("minibatch_frac", 0.5),)),
+    "b_over_B_12.5": Variant(es_replace=(("minibatch_frac", 0.125),)),
+    # scoring pass at reduced seq chunk granularity
+    "xent_chunk_512": Variant(es_replace=(("seq_chunk", 512),)),
+    "xent_chunk_2048": Variant(es_replace=(("seq_chunk", 2048),)),
+    # numerics / dispatch knobs
+    "param_bf16": Variant(cfg_replace=(("param_dtype", "bfloat16"),)),
+    "cap_0.75": Variant(cfg_replace=(("capacity_factor", 0.75),)),
+    "attn_chunk_1024": Variant(cfg_replace=(("attn_chunk_q", 1024),)),
+    "attn_chunk_2048": Variant(cfg_replace=(("attn_chunk_q", 2048),)),
+    # combined fixes found during hillclimbing (see EXPERIMENTS.md §Perf)
+    "moe_ep_bf16": Variant(cfg_replace=(("moe_sharding", "ep"),
+                                        ("param_dtype", "bfloat16"))),
+    # paper-faithful ES with the ORIGINAL global dispatch (pre-hillclimb)
+    "es_ungrouped": Variant(cfg_replace=(("moe_groups", 1),)),
+    # grouped dispatch: scatters stay local to each DP shard (moe.py)
+    "moe_grouped": Variant(cfg_replace=(("moe_groups", 0),)),
+    "moe_grouped_ep": Variant(cfg_replace=(("moe_groups", 0),
+                                           ("moe_sharding", "ep"))),
+    "moe_grouped_cap75": Variant(cfg_replace=(("moe_groups", 0),
+                                              ("capacity_factor", 0.75))),
+    "moe_tp_bf16": Variant(cfg_replace=(("moe_sharding", "tp"),
+                                        ("param_dtype", "bfloat16"))),
+    "best": Variant(cfg_replace=(("param_dtype", "bfloat16"),
+                                 ("remat_policy", "selective"))),
+}
+
+
+def _apply_variant(cfg: ModelConfig, variant: Variant
+                   ) -> tuple:
+    if variant.cfg_replace:
+        cfg = dataclasses.replace(cfg, **dict(variant.cfg_replace))
+    es_kw = dict(variant.es_replace)
+    frac = es_kw.pop("minibatch_frac", 0.25)
+    return cfg, es_kw, frac
+
+
+# ---------------------------------------------------------------------------
+# Cell runners
+# ---------------------------------------------------------------------------
+
+def _analyse(lowered, compiled, extra: Dict[str, Any]) -> Dict[str, Any]:
+    out: Dict[str, Any] = dict(extra)
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        out["cost_analysis"] = {k: float(v) for k, v in cost.items()
+                                if isinstance(v, (int, float))}
+    except Exception as e:  # pragma: no cover
+        out["cost_analysis_error"] = repr(e)
+    try:
+        mem = compiled.memory_analysis()
+        fields = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "alias_size_in_bytes",
+                  "temp_size_in_bytes")
+        out["memory_analysis"] = {f: int(getattr(mem, f)) for f in fields
+                                  if hasattr(mem, f)}
+        out["memory_analysis_str"] = str(mem)
+    except Exception as e:  # pragma: no cover
+        out["memory_analysis_error"] = repr(e)
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    out["hlo_bytes_len"] = len(hlo)
+
+    # while-loop-aware analysis (scan bodies x trip counts) — primary source
+    from .hlo_cost import analyze as hlo_analyze
+    try:
+        deep = hlo_analyze(hlo)
+        out["collectives"] = deep["collectives"]
+        out["collective_bytes_total"] = deep["collective_bytes_total"]
+        out["hlo_flops"] = deep["flops"]
+        out["hlo_bytes"] = deep["bytes"]
+        out["while_trips"] = deep["while_trips"]
+        flops, bytes_acc = deep["flops"], deep["bytes"]
+        coll_total = deep["collective_bytes_total"]
+    except Exception as e:  # pragma: no cover — fall back to raw XLA numbers
+        out["hlo_cost_error"] = repr(e)
+        out["collectives"] = collective_bytes(hlo)
+        coll_total = sum(v["bytes"] for v in out["collectives"].values())
+        out["collective_bytes_total"] = coll_total
+        flops = out.get("cost_analysis", {}).get("flops", 0.0)
+        bytes_acc = out.get("cost_analysis", {}).get("bytes accessed", 0.0)
+    out["roofline"] = roofline_terms(flops_per_chip=flops,
+                                     bytes_per_chip=bytes_acc,
+                                     coll_bytes_per_chip=coll_total)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             variant_name: str = "es",
+             seq_chunk_default: int = 1024) -> Dict[str, Any]:
+    shape = shape_by_name(shape_name)
+    base_cfg = get_config(arch)
+    variant = VARIANTS[variant_name]
+    cfg, es_kw, mb_frac = _apply_variant(base_cfg, variant)
+
+    ok, why = cell_is_applicable(cfg, shape)
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "variant": variant_name, "kind": shape.kind,
+        "params": cfg.n_params(), "active_params": cfg.n_active_params(),
+    }
+    if not ok:
+        result["skipped"] = why
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    result["mesh_info"] = mesh_info(mesh)
+    kind = shape.kind if shape.name != "long_500k" else "long"
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            ctx = make_ctx(cfg, mesh, "train", dict(variant.rule_overrides))
+            es_cfg = ESConfig(minibatch=max(1, int(shape.global_batch * mb_frac)),
+                              seq_chunk=es_kw.get("seq_chunk",
+                                                  seq_chunk_default),
+                              **{k: v for k, v in es_kw.items()
+                                 if k != "seq_chunk"})
+            opt_cfg = OptConfig(state_dtype=cfg.optimizer_dtype)
+            steps = make_steps(cfg, es_cfg, opt_cfg,
+                               get_schedule("constant", 1), ctx)
+            step_fn = {"es": steps["es_step"],
+                       "baseline": steps["baseline_step"],
+                       "pipelined": steps["pipelined_step"]}[variant.step]
+            state_struct, state_sh = abstract_train_state(
+                cfg, es_cfg, opt_cfg, shape.global_batch, ctx)
+            batch_struct, batch_sh = train_batch_specs(cfg, shape, ctx)
+            if variant.step == "pipelined":
+                batch_struct = (batch_struct, batch_struct)
+                batch_sh = (batch_sh, batch_sh)
+            jf = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,))
+            lowered = jf.lower(state_struct, batch_struct)
+            result["tokens_meta"] = shape.global_batch * shape.seq_len
+            result["tokens_bp"] = (es_cfg.minibatch * shape.seq_len
+                                   if variant.step != "baseline"
+                                   else shape.global_batch * shape.seq_len)
+        elif shape.kind == "prefill":
+            ctx = make_ctx(cfg, mesh, "prefill", dict(variant.rule_overrides))
+            from .inputs import abstract_params_and_axes
+            from ..distributed.sharding import axes_to_sharding
+            params_struct, axes = abstract_params_and_axes(cfg)
+            params_sh = axes_to_sharding(axes, ctx)
+            batch_struct, batch_sh, cache_struct, cache_sh = prefill_specs(
+                cfg, shape, ctx)
+            fn = lambda p, b, c: prefill(cfg, p, b, c, ctx)
+            jf = jax.jit(fn, in_shardings=(params_sh, batch_sh, cache_sh),
+                         donate_argnums=(2,))
+            lowered = jf.lower(params_struct, batch_struct, cache_struct)
+            result["tokens_meta"] = shape.global_batch * shape.seq_len
+            result["tokens_bp"] = 0
+        else:  # decode / long
+            ctx = make_ctx(cfg, mesh, kind, dict(variant.rule_overrides))
+            from .inputs import abstract_params_and_axes
+            from ..distributed.sharding import axes_to_sharding
+            params_struct, axes = abstract_params_and_axes(cfg)
+            params_sh = axes_to_sharding(axes, ctx)
+            (tok_struct, tok_sh, cache_struct, cache_sh,
+             pos_struct, pos_sh) = decode_specs(cfg, shape, ctx)
+            fn = lambda p, t, c, pos: decode_step(cfg, p, t, c, pos, ctx)
+            jf = jax.jit(fn, in_shardings=(params_sh, tok_sh, cache_sh,
+                                           pos_sh),
+                         donate_argnums=(2,))
+            lowered = jf.lower(params_struct, tok_struct, cache_struct,
+                               pos_struct)
+            result["tokens_meta"] = shape.global_batch
+            result["tokens_bp"] = 0
+
+        result["lower_s"] = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = time.time() - t1
+
+    result = _analyse(lowered, compiled, result)
+    print(compiled.memory_analysis())
+    try:
+        print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+               if k in ("flops", "bytes accessed")})
+    except Exception:
+        pass
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def cell_path(out_dir: Path, arch: str, shape: str, mesh: str,
+              variant: str) -> Path:
+    return out_dir / f"{arch}__{shape}__{mesh}__{variant}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="es", choices=sorted(VARIANTS))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args()
+
+    if args.list:
+        for a in list_archs():
+            cfg = get_config(a)
+            for s in ALL_SHAPES:
+                ok, why = cell_is_applicable(cfg, s)
+                print(f"{a:26s} {s.name:12s} {'run' if ok else 'SKIP: ' + why}")
+        return
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.all:
+        cells = [(a, s.name) for a in list_archs() for s in ALL_SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape in cells:
+        for mesh_kind in meshes:
+            path = cell_path(out_dir, arch, shape, mesh_kind, args.variant)
+            if path.exists() and not args.force:
+                print(f"[skip cached] {path.name}")
+                continue
+            print(f"[run] {arch} x {shape} x {mesh_kind} x {args.variant}",
+                  flush=True)
+            try:
+                res = run_cell(arch, shape, mesh_kind, args.variant)
+            except Exception as e:
+                res = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                       "variant": args.variant, "error": repr(e),
+                       "traceback": traceback.format_exc()}
+                print(f"[FAIL] {path.name}: {e!r}", flush=True)
+            path.write_text(json.dumps(res, indent=1, default=str))
+            rt = res.get("roofline", {})
+            if rt:
+                print(f"  -> compute={rt['compute_s']:.4f}s "
+                      f"memory={rt['memory_s']:.4f}s "
+                      f"collective={rt['collective_s']:.4f}s "
+                      f"bottleneck={rt['bottleneck']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

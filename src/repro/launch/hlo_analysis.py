@@ -1,0 +1,90 @@
+"""Post-SPMD HLO analysis: collective-bytes accounting + roofline terms.
+
+``collective_bytes`` parses the partitioned (per-device) HLO text and sums
+the result-buffer sizes of every communication op.  Since the module is the
+per-device SPMD program, the sums are *per-chip* traffic, so
+
+    collective_term_seconds = per_chip_bytes / link_bw
+
+is exactly the spec's ``collective_bytes / (chips * link_bw)`` with global
+bytes = per-chip * chips.
+
+Hardware constants (TPU v5e, per spec): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# dtype[1,2,3]{...}  — layout part optional
+_TYPE_RE = re.compile(r"\b([a-z]+[0-9]*(?:e[0-9]+m[0-9]+(?:fn)?)?)\[([0-9,]*)\]")
+
+
+def _buffer_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-opcode {count, bytes} from the result types of collective ops."""
+    out: Dict[str, Dict[str, float]] = {
+        op: {"count": 0, "bytes": 0} for op in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        lhs, _, rhs = line.partition("=")
+        rhs = rhs.strip()
+        matched = None
+        for op in _COLLECTIVES:
+            # match `op(`, `op-start(` but not `-done(`
+            if re.search(rf"\b{op}(-start)?\(", rhs):
+                matched = op
+                break
+        if matched is None:
+            continue
+        # result types appear in rhs before the opcode token
+        head = rhs.split(matched)[0]
+        nbytes = sum(_buffer_bytes(dt, dims)
+                     for dt, dims in _TYPE_RE.findall(head))
+        if re.search(rf"\b{matched}-start\(", rhs):
+            # tuple result aliases operand+result: halve to avoid double count
+            nbytes //= 2
+        out[matched]["count"] += 1
+        out[matched]["bytes"] += nbytes
+    return out
+
+
+def roofline_terms(*, flops_per_chip: float, bytes_per_chip: float,
+                   coll_bytes_per_chip: float) -> Dict[str, float]:
+    """The three roofline terms (seconds) + dominant bottleneck."""
+    terms = {
+        "compute_s": flops_per_chip / PEAK_FLOPS,
+        "memory_s": bytes_per_chip / HBM_BW,
+        "collective_s": coll_bytes_per_chip / ICI_BW,
+    }
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    total = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    terms["step_s_lower_bound"] = total
+    if total > 0:
+        terms["roofline_fraction"] = terms["compute_s"] / total
+    return terms

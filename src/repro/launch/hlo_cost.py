@@ -1,0 +1,403 @@
+"""While-loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE, so for
+scan-over-layers models FLOPs / bytes / collective traffic are undercounted
+by ~num_layers.  This module parses the post-SPMD optimized HLO text,
+builds the computation call graph, extracts while-loop trip counts from the
+loop-condition constants, and aggregates:
+
+  flops       : 2 * result_elems * contraction_elems for every dot
+                (MXU work — elementwise flops are VPU noise at these shapes)
+  bytes       : operand + result buffer bytes of every executed instruction
+                (fusion params+result == HBM traffic of the fused region)
+  collectives : per-opcode {count, bytes} of all-reduce / all-gather /
+                reduce-scatter / all-to-all / collective-permute
+
+All shapes in the partitioned module are per-device shards, so every total
+is per-chip — exactly what the roofline terms need.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "iota", "partition-id", "replica-id"}
+
+# Elementwise/layout ops that the TPU backend fuses into producers/consumers:
+# counting their operand+result traffic would model CPU (unfused) behaviour.
+# Their outputs still get counted when read by a counted op (dot/fusion/...).
+_FUSABLE_OPS = {"add", "subtract", "multiply", "divide", "convert",
+                "broadcast", "select", "compare", "maximum", "minimum",
+                "negate", "exponential", "log", "rsqrt", "sqrt", "tanh",
+                "power", "and", "or", "xor", "not", "abs", "sign", "floor",
+                "ceil", "round-nearest-afz", "shift-left",
+                "shift-right-logical", "shift-right-arithmetic", "clamp",
+                "is-finite", "exponential-minus-one", "log-plus-one",
+                "reshape", "transpose", "rem", "pad", "slice", "reverse",
+                "concatenate", "logistic", "cbrt", "expm1", "atan2"}
+
+_TYPE_RE = re.compile(r"\b([a-z]+[0-9]*(?:e[0-9]+m[0-9]+(?:fnuz|fnu|fn)?)?)"
+                      r"\[([0-9,]*)\]")
+_OPCODE_RE = re.compile(r"(?<![\w.%-])([a-z][a-z0-9\-]*)\(")
+_REF_RE = re.compile(r"%([\w.\-]+)")
+_CALLED_RE = re.compile(
+    r"(?:body|condition|calls|to_apply|called_computations)="
+    r"(\{[^}]*\}|%[\w.\-]+)")
+_HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _types_bytes_and_dims(segment: str) -> Tuple[int, Optional[List[int]]]:
+    """Sum buffer bytes of all array types in a segment; also first dims."""
+    total = 0
+    first_dims: Optional[List[int]] = None
+    for dt, dims in _TYPE_RE.findall(segment):
+        if dt not in _DTYPE_BYTES:
+            continue
+        total += _shape_elems(dims) * _DTYPE_BYTES[dt]
+        if first_dims is None:
+            first_dims = [int(d) for d in dims.split(",")] if dims else []
+    return total, first_dims
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_bytes: int
+    result_dims: Optional[List[int]]
+    operands: List[str]
+    called: List[str]
+    flops: float = 0.0
+    attrs: str = ""
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    symbols: Dict[str, Tuple[List[int], int]]  # name -> (result dims, bytes)
+    const_ints: List[int]                      # integer constants (trip hunt)
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = _HEADER_RE.match(raw)
+            if m:
+                cur = Computation(m.group(1), [], {}, [])
+            continue
+        if line == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        if "=" not in line:
+            continue
+        lhs, _, rhs = line.partition("=")
+        lhs = lhs.strip()
+        if lhs.startswith("ROOT"):
+            lhs = lhs[4:].strip()
+        if not lhs.startswith("%"):
+            continue
+        name = lhs[1:]
+        rhs = rhs.strip()
+        m = _OPCODE_RE.search(rhs)
+        if not m:
+            continue
+        opcode = m.group(1)
+        type_seg = rhs[:m.start()]
+        result_bytes, result_dims = _types_bytes_and_dims(type_seg)
+        # operand refs: inside the first balanced paren group after opcode
+        pstart = m.end() - 1
+        depth = 0
+        pend = pstart
+        for i in range(pstart, len(rhs)):
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    pend = i
+                    break
+        oper_seg = rhs[pstart:pend + 1]
+        operands = _REF_RE.findall(oper_seg)
+        attr_seg = rhs[pend + 1:]
+        called: List[str] = []
+        for grp in _CALLED_RE.findall(attr_seg):
+            called.extend(_REF_RE.findall(grp))
+        if opcode == "constant":
+            m2 = re.search(r"constant\((\d+)\)", rhs)
+            if m2:
+                cur.const_ints.append(int(m2.group(1)))
+        inst = Instr(name=name, opcode=opcode, result_bytes=result_bytes,
+                     result_dims=result_dims, operands=operands,
+                     called=called, attrs=attr_seg,
+                     is_root=line.startswith("ROOT"))
+        cur.symbols[name] = (result_dims or [], result_bytes)
+        cur.instrs.append(inst)
+    return comps
+
+
+def _dot_flops(inst: Instr, comp: Computation) -> float:
+    if inst.result_dims is None:
+        return 0.0
+    out_elems = 1
+    for d in inst.result_dims:
+        out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", inst.attrs)
+    contract = 1
+    if m and inst.operands:
+        entry = comp.symbols.get(inst.operands[0])
+        lhs_dims = entry[0] if entry else None
+        if lhs_dims:
+            for di in m.group(1).split(","):
+                if di:
+                    i = int(di)
+                    if i < len(lhs_dims):
+                        contract *= lhs_dims[i]
+    return 2.0 * out_elems * contract
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=lambda: {op: {"count": 0.0, "bytes": 0.0}
+                                 for op in _COLLECTIVES})
+    while_trips: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0,
+            compute_only: bool = False) -> None:
+        self.flops += other.flops * mult
+        if not compute_only:
+            self.bytes += other.bytes * mult
+        for op in _COLLECTIVES:
+            self.coll[op]["count"] += other.coll[op]["count"] * mult
+            self.coll[op]["bytes"] += other.coll[op]["bytes"] * mult
+        self.while_trips.update(other.while_trips)
+
+
+def _trip_count(cond: Computation) -> float:
+    """Loop bound heuristic: the integer constant in the loop condition
+    (jax scans lower to `compare(iter, constant(T)), direction=LT`)."""
+    if cond.const_ints:
+        return float(max(cond.const_ints))
+    return 1.0
+
+
+def _operand_bytes(inst: Instr, comp: Computation) -> float:
+    total = 0.0
+    for op in inst.operands:
+        entry = comp.symbols.get(op)
+        if entry is None:
+            continue
+        total += entry[1]
+    return total
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self._memo: Dict[str, Cost] = {}
+        self._fusion_bytes_memo: Dict[str, float] = {}
+        # entry = computation that is not called by anyone
+        called = set()
+        for c in self.comps.values():
+            for i in c.instrs:
+                called.update(i.called)
+        entries = [n for n in self.comps if n not in called]
+        # prefer the one with the most instructions
+        self.entry = max(entries, key=lambda n: len(self.comps[n].instrs)) \
+            if entries else next(iter(self.comps))
+
+    def fusion_io_bytes(self, name: str) -> float:
+        """True HBM traffic of a fused region.
+
+        Scan-body fusions take FULL stacked weight tensors as params and
+        dynamic-slice one layer out — counting param sizes would overcount
+        by num_layers.  Params consumed only by (dynamic-)slice/gather count
+        their slice results; a dynamic-update-slice root writes only the
+        update."""
+        if name in self._fusion_bytes_memo:
+            return self._fusion_bytes_memo[name]
+        comp = self.comps.get(name)
+        if comp is None:
+            return 0.0
+        consumers: Dict[str, List[Instr]] = {}
+        for inst in comp.instrs:
+            for op in inst.operands:
+                consumers.setdefault(op, []).append(inst)
+        total = 0.0
+        _SLICERS = ("dynamic-slice", "gather", "slice")
+        _PASSTHRU = ("convert", "bitcast", "copy", "reshape", "transpose")
+
+        def effective_read(param: Instr) -> float:
+            """Bytes actually read from a fusion param: follow unary
+            layout/convert chains; slices count their result, a
+            dynamic-update-slice *destination* is an in-place alias (0)."""
+            frontier = [param]
+            terminals = []
+            seen = set()
+            while frontier:
+                x = frontier.pop()
+                if x.name in seen:
+                    continue
+                seen.add(x.name)
+                for c in consumers.get(x.name, []):
+                    if c.opcode in _PASSTHRU:
+                        frontier.append(c)
+                    else:
+                        terminals.append((x, c))
+            if not terminals:
+                return param.result_bytes
+            tot = 0.0
+            for src, c in terminals:
+                if c.opcode in _SLICERS:
+                    tot += c.result_bytes
+                elif (c.opcode == "dynamic-update-slice" and c.operands
+                      and c.operands[0] == src.name):
+                    tot += 0.0
+                else:
+                    return param.result_bytes
+            return tot
+
+        for inst in comp.instrs:
+            if inst.opcode != "parameter":
+                continue
+            total += effective_read(inst)
+        root = next((i for i in comp.instrs if i.is_root),
+                    comp.instrs[-1] if comp.instrs else None)
+        if root is not None:
+            if root.opcode == "dynamic-update-slice" and len(root.operands) > 1:
+                upd = comp.symbols.get(root.operands[1])
+                total += upd[1] if upd else root.result_bytes
+            elif root.opcode == "tuple":
+                for op in root.operands:
+                    src = next((i for i in comp.instrs if i.name == op), None)
+                    if (src is not None
+                            and src.opcode == "dynamic-update-slice"
+                            and len(src.operands) > 1):
+                        upd = comp.symbols.get(src.operands[1])
+                        total += upd[1] if upd else src.result_bytes
+                    else:
+                        e = comp.symbols.get(op)
+                        total += e[1] if e else 0
+            else:
+                total += root.result_bytes
+        self._fusion_bytes_memo[name] = total
+        return total
+
+    def computation_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        cost = Cost()
+        self._memo[name] = cost   # break cycles defensively
+        if comp is None:
+            return cost
+        for inst in comp.instrs:
+            if inst.opcode in _FREE_OPS:
+                continue
+            if inst.opcode == "while":
+                body = inst.called[0] if inst.called else None
+                cond = inst.called[1] if len(inst.called) > 1 else None
+                # body=%b, condition=%c order follows attr order in text
+                bname = cname = None
+                mb = re.search(r"body=%([\w.\-]+)", inst.attrs)
+                mc = re.search(r"condition=%([\w.\-]+)", inst.attrs)
+                bname = mb.group(1) if mb else body
+                cname = mc.group(1) if mc else cond
+                trips = 1.0
+                if cname and cname in self.comps:
+                    trips = max(1.0, _trip_count(self.comps[cname]))
+                cost.while_trips[inst.name] = trips
+                if bname:
+                    cost.add(self.computation_cost(bname), trips)
+                if cname:
+                    cost.add(self.computation_cost(cname), trips)
+                continue
+            if inst.opcode == "conditional":
+                if inst.called:
+                    branch_costs = [self.computation_cost(c)
+                                    for c in inst.called]
+                    worst = max(branch_costs,
+                                key=lambda c: c.flops + c.bytes)
+                    cost.add(worst)
+                continue
+            # leaf-ish ops
+            is_coll = None
+            for op in _COLLECTIVES:
+                if inst.opcode in (op, op + "-start"):
+                    is_coll = op
+                    break
+            if is_coll:
+                b = inst.result_bytes
+                if inst.opcode.endswith("-start"):
+                    b //= 2  # tuple result aliases operand+result
+                cost.coll[is_coll]["count"] += 1
+                cost.coll[is_coll]["bytes"] += b
+                cost.bytes += inst.result_bytes
+                continue
+            if inst.opcode == "dot":
+                inst.flops = _dot_flops(inst, comp)
+                cost.flops += inst.flops
+            if inst.opcode == "fusion":
+                # fused region: HBM traffic = slice-aware params + root write;
+                # internal flops/collectives counted compute-only
+                for c in inst.called:
+                    cost.bytes += self.fusion_io_bytes(c)
+                    cost.add(self.computation_cost(c), compute_only=True)
+            elif inst.opcode == "dynamic-slice":
+                cost.bytes += 2 * inst.result_bytes
+            elif inst.opcode == "dynamic-update-slice":
+                upd = (comp.symbols.get(inst.operands[1])
+                       if len(inst.operands) > 1 else None)
+                cost.bytes += 2 * (upd[1] if upd else inst.result_bytes)
+            elif inst.opcode in ("gather",):
+                cost.bytes += 2 * inst.result_bytes
+            elif inst.opcode not in _FUSABLE_OPS:
+                cost.bytes += inst.result_bytes + _operand_bytes(inst, comp)
+            if inst.opcode in ("call", "custom-call", "async-start"):
+                for c in inst.called:
+                    cost.add(self.computation_cost(c))
+        return cost
+
+    def total(self) -> Cost:
+        return self.computation_cost(self.entry)
+
+
+def analyze(text: str) -> Dict:
+    model = HloCostModel(text)
+    c = model.total()
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "collectives": c.coll,
+        "collective_bytes_total": sum(v["bytes"] for v in c.coll.values()),
+        "while_trips": c.while_trips,
+        "entry": model.entry,
+        "n_computations": len(model.comps),
+    }

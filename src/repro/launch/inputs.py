@@ -1,0 +1,135 @@
+"""ShapeDtypeStruct stand-ins for every model input — nothing is allocated.
+
+``input_specs`` returns (abstract_value, sharding) pytrees for the function
+being lowered for a given (arch x shape) cell:
+  train_*   -> es_step(state, batch)
+  prefill_* -> prefill(params, batch, cache)
+  decode_* / long_* -> decode_step(params, tokens, cache, pos)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..core.es_step import ESConfig, TrainState, init_train_state
+from ..core.scores import ESScores
+from ..models.layers import ShardCtx
+from ..models.model import init_cache, cache_axes, encoder_len, image_tokens
+from ..models.transformer import init_lm
+from ..optim.adamw import OptConfig, OptState
+from ..distributed.sharding import axes_to_sharding, replicated
+
+PyTree = Any
+SDS = jax.ShapeDtypeStruct
+
+
+def _sds(shape, dtype) -> SDS:
+    return SDS(tuple(shape), jnp.dtype(dtype))
+
+
+def _batch_sh(ctx: ShardCtx, ndim: int) -> NamedSharding:
+    spec = [None] * ndim
+    spec[0] = ctx.axis("batch")
+    return NamedSharding(ctx.mesh, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# Batch specs
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, ctx: ShardCtx
+                      ) -> Tuple[Dict[str, SDS], Dict[str, NamedSharding]]:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": _sds((B, S), jnp.int32),
+        "labels": _sds((B, S), jnp.int32),
+        "sample_ids": _sds((B,), jnp.int32),
+    }
+    if cfg.is_encdec:
+        fd = cfg.frontend_dim or cfg.d_model
+        specs["frames"] = _sds((B, encoder_len(cfg, S), fd), jnp.bfloat16)
+    if cfg.family == "vlm":
+        specs["image_embeds"] = _sds((B, image_tokens(cfg), cfg.d_model),
+                                     jnp.bfloat16)
+    sh = {k: _batch_sh(ctx, v.ndim) for k, v in specs.items()}
+    return specs, sh
+
+
+# ---------------------------------------------------------------------------
+# Abstract train state (+ shardings) — no allocation
+# ---------------------------------------------------------------------------
+
+def abstract_params_and_axes(cfg: ModelConfig) -> Tuple[PyTree, PyTree]:
+    axes_holder: list = []
+
+    def initfn(key):
+        params, axes = init_lm(cfg, key)
+        axes_holder.append(axes)
+        if cfg.param_dtype != "float32":
+            dt = jnp.dtype(cfg.param_dtype)
+            params = jax.tree.map(lambda p: p.astype(dt), params)
+        return params
+
+    params_struct = jax.eval_shape(initfn, jax.random.PRNGKey(0))
+    return params_struct, axes_holder[0]
+
+
+def abstract_train_state(cfg: ModelConfig, es_cfg: ESConfig,
+                         opt_cfg: OptConfig, meta_batch: int,
+                         ctx: ShardCtx) -> Tuple[PyTree, PyTree]:
+    """Returns (state_struct, state_shardings) matching TrainState."""
+    params_struct, axes = abstract_params_and_axes(cfg)
+    state_struct = jax.eval_shape(
+        lambda key: init_train_state(cfg, es_cfg, opt_cfg, key, meta_batch),
+        jax.random.PRNGKey(0))
+
+    param_sh = axes_to_sharding(axes, ctx)
+    repl = replicated(ctx)
+    opt_sh = OptState(
+        step=repl, m=param_sh,
+        v=param_sh if opt_cfg.kind == "adamw" else None)
+    state_sh = TrainState(
+        params=param_sh, opt=opt_sh,
+        scores=ESScores(s=repl, w=repl, seen=repl),
+        rng=repl, pending_w=repl)
+    return state_struct, state_sh
+
+
+# ---------------------------------------------------------------------------
+# Serve specs (prefill / decode)
+# ---------------------------------------------------------------------------
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   ctx: ShardCtx) -> Tuple[PyTree, PyTree]:
+    cache_struct = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    cax = cache_axes(cfg)
+    cache_sh = axes_to_sharding(cax, ctx)
+    return cache_struct, cache_sh
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig, ctx: ShardCtx):
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((B, S), jnp.int32)}
+    if cfg.is_encdec:
+        fd = cfg.frontend_dim or cfg.d_model
+        batch["frames"] = _sds((B, encoder_len(cfg, S), fd), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = _sds((B, image_tokens(cfg), cfg.d_model),
+                                     jnp.bfloat16)
+    batch_sh = {k: _batch_sh(ctx, v.ndim) for k, v in batch.items()}
+    cache_struct, cache_sh = abstract_cache(cfg, B, S, ctx)
+    return batch, batch_sh, cache_struct, cache_sh
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, ctx: ShardCtx):
+    B, S = shape.global_batch, shape.seq_len
+    tokens = _sds((B, 1), jnp.int32)
+    tokens_sh = _batch_sh(ctx, 2)
+    cache_struct, cache_sh = abstract_cache(cfg, B, S, ctx)
+    pos = _sds((), jnp.int32)
+    pos_sh = replicated(ctx)
+    return tokens, tokens_sh, cache_struct, cache_sh, pos, pos_sh

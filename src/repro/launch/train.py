@@ -1,0 +1,273 @@
+"""End-to-end ES(WP) trainer: annealing, epoch pruning, checkpoint/resume,
+preemption handling, straggler monitoring, metrics logging.
+
+CPU-runnable with the smoke configs; the same code path drives the pod
+meshes (mesh selection is by device count).  Usage:
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \
+      --method eswp --epochs 6 --meta-batch 32 --minibatch 8
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..configs.registry import get_config, get_smoke_config, list_archs
+from ..core.annealing import AnnealSchedule
+from ..core.es_step import ESConfig, TrainState, init_train_state, make_steps
+from ..core.pruning import prune_epoch
+from ..checkpoint.checkpointer import Checkpointer
+from ..data.loader import IndexLoader
+from ..data.synthetic import SyntheticConfig, SyntheticLM
+from ..distributed.fault_tolerance import PreemptionHandler, StragglerMonitor
+from ..models.layers import ShardCtx
+from ..optim.adamw import OptConfig
+from ..optim.schedule import get_schedule
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    arch: str = "llama3-8b"
+    smoke: bool = True
+    method: str = "es"            # es | eswp | loss | order | baseline |
+    #                               infobatch | ucb | ka | random
+    epochs: int = 4
+    meta_batch: int = 32
+    minibatch: int = 8
+    beta1: float = 0.2
+    beta2: float = 0.9
+    pruning_ratio: float = 0.2
+    anneal_ratio: float = 0.05
+    n_samples: int = 1024
+    seq_len: int = 64
+    lr: float = 1e-3
+    schedule: str = "cosine"
+    optimizer: str = "adamw"
+    seed: int = 0
+    pipelined: bool = False
+    grad_compression: bool = False   # int8 EF gradient compression
+    ckpt_dir: Optional[str] = None
+    ckpt_every_steps: int = 50
+    log_path: Optional[str] = None
+    max_steps: Optional[int] = None   # early stop (for tests/benchmarks)
+
+
+SET_LEVEL = {"eswp", "infobatch", "ucb", "ka", "random"}
+BATCH_LEVEL = {"es", "eswp", "loss", "order"}
+
+
+class Trainer:
+    def __init__(self, tc: TrainerConfig,
+                 model_cfg: Optional[ModelConfig] = None,
+                 dataset: Optional[SyntheticLM] = None):
+        self.tc = tc
+        self.model_cfg = model_cfg or (
+            get_smoke_config(tc.arch) if tc.smoke else get_config(tc.arch))
+        vocab = self.model_cfg.vocab_size
+        self.ds = dataset or SyntheticLM(SyntheticConfig(
+            n_samples=tc.n_samples, seq_len=tc.seq_len,
+            vocab_size=min(vocab, 64), seed=tc.seed))
+        self.loader = IndexLoader(self.ds, tc.meta_batch, seed=tc.seed)
+
+        beta1, beta2 = tc.beta1, tc.beta2
+        if tc.method == "loss":
+            beta1 = beta2 = 0.0            # paper Eq. (2.3)
+        if tc.method == "eswp":
+            beta2 = min(beta2, 0.8)        # paper default for ESWP
+        sel_method = tc.method if tc.method in BATCH_LEVEL else "baseline"
+        minibatch = tc.minibatch if tc.method in BATCH_LEVEL else tc.meta_batch
+        self.es_cfg = ESConfig(method=sel_method if sel_method != "baseline"
+                               else "es",
+                               beta1=beta1, beta2=beta2,
+                               minibatch=minibatch,
+                               n_train=len(self.ds), pipelined=tc.pipelined,
+                               seq_chunk=0)
+        self.sel_method = sel_method
+        self.opt_cfg = OptConfig(kind=tc.optimizer, lr=tc.lr,
+                                 state_dtype=self.model_cfg.optimizer_dtype,
+                                 compress_grads=tc.grad_compression)
+        steps_per_epoch = max(1, tc.n_samples // tc.meta_batch)
+        self.schedule = get_schedule(tc.schedule,
+                                     steps_per_epoch * tc.epochs,
+                                     warmup_steps=steps_per_epoch // 2)
+        self.ctx = ShardCtx()
+        self.steps = make_steps(self.model_cfg, self.es_cfg, self.opt_cfg,
+                                self.schedule, self.ctx)
+        self.anneal = AnnealSchedule.from_ratio(tc.epochs, tc.anneal_ratio)
+        self.ckpt = Checkpointer(tc.ckpt_dir) if tc.ckpt_dir else None
+        self.preempt = PreemptionHandler().install()
+        self.straggler = StragglerMonitor()
+        self.metrics_log: list = []
+        self.bp_samples_total = 0.0
+        self.prev_epoch_losses: Optional[np.ndarray] = None
+
+        key = jax.random.PRNGKey(tc.seed)
+        self.state = init_train_state(self.model_cfg, self.es_cfg,
+                                      self.opt_cfg, key, tc.meta_batch)
+        self.global_step = 0
+        self.start_epoch = 0
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            self._resume()
+
+        self._jit_es = jax.jit(self.steps["es_step"], donate_argnums=0)
+        self._jit_base = jax.jit(self.steps["baseline_step"], donate_argnums=0)
+        self._jit_pipe = jax.jit(self.steps["pipelined_step"],
+                                 donate_argnums=0)
+
+    # ------------------------------------------------------------------
+    def _resume(self) -> None:
+        step = self.ckpt.latest_step()
+        self.state = self.ckpt.restore(self.state, step)
+        md = self.ckpt.manifest(step)["metadata"]
+        self.global_step = md.get("global_step", step)
+        self.start_epoch = md.get("epoch", 0)
+        self.bp_samples_total = md.get("bp_samples_total", 0.0)
+        print(f"[resume] step={self.global_step} epoch={self.start_epoch}")
+
+    def _checkpoint(self, epoch: int, final: bool = False) -> None:
+        if not self.ckpt:
+            return
+        md = {"global_step": self.global_step, "epoch": epoch,
+              "bp_samples_total": self.bp_samples_total,
+              "method": self.tc.method}
+        if final:
+            self.ckpt.save(self.state, self.global_step, md)
+        else:
+            self.ckpt.save_async(self.state, self.global_step, md)
+
+    # ------------------------------------------------------------------
+    def _prune_for_epoch(self, epoch: int) -> None:
+        """Set-level selection (ESWP / InfoBatch / UCB / KA / Random)."""
+        if self.tc.method not in SET_LEVEL \
+                or not self.anneal.selection_active(epoch):
+            self.loader.apply_pruning(None)
+            return
+        scores = self.state.scores
+        w = np.asarray(scores.w)
+        s = np.asarray(scores.s)
+        seen = np.asarray(scores.seen)
+        rng = np.random.default_rng((self.tc.seed, epoch, 17))
+        res = prune_epoch(self.tc.method, rng, weights=w, losses=s,
+                          prev_losses=self.prev_epoch_losses, seen=seen,
+                          ratio=self.tc.pruning_ratio)
+        self.loader.apply_pruning(res.kept, res.grad_scale)
+        self.prev_epoch_losses = s.copy()
+
+    # ------------------------------------------------------------------
+    def train(self) -> Dict[str, Any]:
+        tc = self.tc
+        t_start = time.time()
+        stop = False
+        epoch = self.start_epoch
+        for epoch in range(self.start_epoch, tc.epochs):
+            self._prune_for_epoch(epoch)
+            selection_on = (self.anneal.selection_active(epoch)
+                            and self.sel_method != "baseline")
+            prev_batch = None
+            for batch in self.loader.epoch(epoch):
+                jb = {k: jnp.asarray(v) for k, v in batch.items()}
+                t0 = time.time()
+                if not selection_on:
+                    self.state, m = self._jit_base(self.state, jb)
+                elif tc.pipelined:
+                    if prev_batch is None:
+                        prev_batch = jb
+                        continue
+                    self.state, m = self._jit_pipe(self.state,
+                                                   (prev_batch, jb))
+                    prev_batch = jb
+                else:
+                    self.state, m = self._jit_es(self.state, jb)
+                dur = time.time() - t0
+                self.straggler.record(self.global_step, dur)
+                self.global_step += 1
+                self.bp_samples_total += float(m["bp_samples"])
+                rec = {"step": self.global_step, "epoch": epoch,
+                       "loss": float(m["loss"]),
+                       "bp_samples_total": self.bp_samples_total,
+                       "step_time": dur}
+                self.metrics_log.append(rec)
+                if self.ckpt and self.global_step % tc.ckpt_every_steps == 0:
+                    self._checkpoint(epoch)
+                if self.preempt.preemption_requested:
+                    print("[preempt] checkpoint-and-exit")
+                    self._checkpoint(epoch, final=True)
+                    stop = True
+                    break
+                if tc.max_steps and self.global_step >= tc.max_steps:
+                    stop = True
+                    break
+            if stop:
+                break
+        self._checkpoint(epoch, final=True)
+        if self.ckpt:
+            self.ckpt.wait()
+        out = {
+            "final_loss": self.metrics_log[-1]["loss"]
+            if self.metrics_log else float("nan"),
+            "steps": self.global_step,
+            "bp_samples_total": self.bp_samples_total,
+            "wall_time": time.time() - t_start,
+            "straggler_reports": len(self.straggler.reports),
+            "metrics": self.metrics_log,
+        }
+        if tc.log_path:
+            Path(tc.log_path).parent.mkdir(parents=True, exist_ok=True)
+            Path(tc.log_path).write_text(json.dumps(out, indent=1))
+        return out
+
+    # ------------------------------------------------------------------
+    def eval_mean_loss(self, n: int = 256, batch: int = 32) -> float:
+        """Mean per-sample loss over the first n samples (no selection)."""
+        from ..models.transformer import lm_per_sample_loss
+        total, cnt = 0.0, 0
+        for lo in range(0, min(n, len(self.ds)), batch):
+            ids = np.arange(lo, min(lo + batch, len(self.ds)))
+            b = self.ds.batch(ids)
+            jb = {k: jnp.asarray(v) for k, v in b.items()}
+            ps, _ = lm_per_sample_loss(self.model_cfg, self.state.params, jb,
+                                       self.ctx, seq_chunk=0)
+            total += float(jnp.sum(ps))
+            cnt += len(ids)
+        return total / max(cnt, 1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b", choices=list_archs())
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--method", default="es")
+    ap.add_argument("--epochs", type=int, default=4)
+    ap.add_argument("--meta-batch", type=int, default=32)
+    ap.add_argument("--minibatch", type=int, default=8)
+    ap.add_argument("--n-samples", type=int, default=1024)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--pipelined", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log", dest="log_path", default=None)
+    ap.add_argument("--max-steps", type=int, default=None)
+    args = ap.parse_args()
+    tc = TrainerConfig(arch=args.arch, smoke=args.smoke, method=args.method,
+                       epochs=args.epochs, meta_batch=args.meta_batch,
+                       minibatch=args.minibatch, n_samples=args.n_samples,
+                       seq_len=args.seq_len, lr=args.lr,
+                       pipelined=args.pipelined, ckpt_dir=args.ckpt_dir,
+                       log_path=args.log_path, max_steps=args.max_steps)
+    out = Trainer(tc).train()
+    print(json.dumps({k: v for k, v in out.items() if k != "metrics"},
+                     indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+"""Core layer primitives: inits, norms, RoPE, MLPs, embeddings.
+
+Everything is functional: ``init_*`` returns ``(params, axes)`` where ``axes``
+is a pytree of the same structure holding per-dimension *logical axis names*
+(strings or None).  The distributed layer (``repro.distributed.sharding``)
+maps logical names to mesh axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Sharding context
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Threads the mesh + logical->physical axis rules through model code.
+
+    ``mesh=None`` (single-device tests) makes every constraint a no-op.
+    """
+    mesh: Optional[jax.sharding.Mesh] = None
+    rules: Tuple[Tuple[str, Any], ...] = ()
+
+    def axis(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        for k, v in self.rules:
+            if k == logical:
+                return v
+        return None
+
+    def spec(self, logical_axes: Sequence[Optional[str]]) -> P:
+        return P(*[self.axis(a) for a in logical_axes])
+
+    def constrain(self, x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+        if self.mesh is None:
+            return x
+        assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+        sharding = jax.sharding.NamedSharding(self.mesh, self.spec(logical_axes))
+        return jax.lax.with_sharding_constraint(x, sharding)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def winit(key: jax.Array, shape: Sequence[int], scale: float = 0.02,
+          dtype=jnp.float32) -> jax.Array:
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def zeros(shape, dtype=jnp.float32) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype=jnp.float32) -> jax.Array:
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: Optional[jax.Array], eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def layernorm(x: jax.Array, scale: Optional[jax.Array],
+              bias: Optional[jax.Array], eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def apply_norm(kind: str, x: jax.Array, params: Optional[Params]) -> jax.Array:
+    """kind: rmsnorm | layernorm | nonparam_ln (OLMo: LN without affine)."""
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"] if params else None)
+    if kind == "layernorm":
+        return layernorm(x, params["scale"] if params else None,
+                         params.get("bias") if params else None)
+    if kind == "nonparam_ln":
+        return layernorm(x, None, None)
+    raise ValueError(f"unknown norm kind {kind!r}")
+
+
+def init_norm(kind: str, d: int, stacked: Tuple[int, ...] = ()) -> Tuple[Optional[Params], Optional[Axes]]:
+    lead = tuple(stacked)
+    lead_ax: Tuple[Optional[str], ...] = tuple("layers" for _ in stacked)
+    if kind == "rmsnorm":
+        return {"scale": ones(lead + (d,))}, {"scale": lead_ax + ("embed",)}
+    if kind == "layernorm":
+        return ({"scale": ones(lead + (d,)), "bias": zeros(lead + (d,))},
+                {"scale": lead_ax + ("embed",), "bias": lead_ax + ("embed",)})
+    if kind == "nonparam_ln":
+        return None, None
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions: (..., S) int -> cos/sin of shape (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if cos.ndim == 2:  # (S, D/2)
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:  # (B, S, D/2)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, kind: str, d: int, f: int,
+             stacked: Tuple[int, ...] = ()) -> Tuple[Params, Axes]:
+    lead = tuple(stacked)
+    lead_ax: Tuple[Optional[str], ...] = tuple("layers" for _ in stacked)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "swiglu":
+        params = {
+            "w_gate": winit(k1, lead + (d, f)),
+            "w_up": winit(k2, lead + (d, f)),
+            "w_down": winit(k3, lead + (f, d)),
+        }
+        axes = {
+            "w_gate": lead_ax + ("embed", "mlp"),
+            "w_up": lead_ax + ("embed", "mlp"),
+            "w_down": lead_ax + ("mlp", "embed"),
+        }
+    elif kind == "gelu":
+        params = {
+            "w_up": winit(k1, lead + (d, f)),
+            "b_up": zeros(lead + (f,)),
+            "w_down": winit(k2, lead + (f, d)),
+            "b_down": zeros(lead + (d,)),
+        }
+        axes = {
+            "w_up": lead_ax + ("embed", "mlp"),
+            "b_up": lead_ax + ("mlp",),
+            "w_down": lead_ax + ("mlp", "embed"),
+            "b_down": lead_ax + ("embed",),
+        }
+    else:
+        raise ValueError(kind)
+    return params, axes
+
+
+def mlp_fwd(kind: str, params: Params, x: jax.Array, ctx: ShardCtx) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d). Hidden activation sharded on 'mlp'."""
+    if kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype))
+        u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+        h = ctx.constrain(h, "batch", None, "mlp")
+        return jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(x.dtype))
+    if kind == "gelu":
+        h = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(x.dtype))
+        h = h + params["b_up"].astype(x.dtype)
+        h = jax.nn.gelu(h)
+        h = ctx.constrain(h, "batch", None, "mlp")
+        out = jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(x.dtype))
+        return out + params["b_down"].astype(x.dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key: jax.Array, vocab: int, d: int, tie: bool) -> Tuple[Params, Axes]:
+    k1, k2 = jax.random.split(key)
+    params: Params = {"tok": winit(k1, (vocab, d), scale=0.02)}
+    axes: Axes = {"tok": ("vocab", "embed")}
+    if not tie:
+        params["head"] = winit(k2, (d, vocab), scale=0.02)
+        axes["head"] = ("embed", "vocab")
+    return params, axes
+
+
+def embed_tokens(params: Params, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return params["tok"].astype(compute_dtype)[tokens]
+
+
+def unembed_matrix(params: Params) -> jax.Array:
+    """Returns the (d, vocab) output projection (handles tying)."""
+    if "head" in params:
+        return params["head"]
+    return params["tok"].T

@@ -1,0 +1,73 @@
+"""Per-sample loss computation — the ES scoring hot spot.
+
+The naive path materializes (B, S, V) logits; at 128k–152k vocabs that
+dominates scoring-pass memory.  ``per_sample_xent`` scans over sequence
+chunks, computing a partial per-sample NLL sum per chunk: peak memory is
+(B, chunk, V) regardless of S.  The correct-class logit is extracted with a
+one-hot einsum (TPU-safe under a vocab-sharded unembedding: no cross-shard
+gather).  The Pallas kernel in ``repro.kernels.xent`` is the fused TPU
+version of the same computation; this is the XLA reference path used by the
+dry-run.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ShardCtx
+
+
+def _chunk_nll(h: jax.Array, w_out: jax.Array, labels: jax.Array,
+               ctx: ShardCtx) -> jax.Array:
+    """h: (B, c, d), labels: (B, c) -> per-token nll (B, c) in f32."""
+    V = w_out.shape[-1]
+    logits = jnp.einsum("bcd,dv->bcv", h, w_out.astype(h.dtype))
+    logits = ctx.constrain(logits, "batch", None, "vocab")
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)                    # (B, c)
+    onehot = jax.nn.one_hot(labels, V, dtype=jnp.float32)
+    correct = jnp.einsum("bcv,bcv->bc", logits, onehot)
+    return lse - correct
+
+
+def per_sample_xent(h: jax.Array, w_out: jax.Array, labels: jax.Array,
+                    *, ctx: ShardCtx, seq_chunk: int = 1024,
+                    label_mask_value: int = -1
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """h: (B, S, d) final hidden; labels: (B, S) with ``label_mask_value``
+    marking ignored positions.  Returns (per_sample_loss (B,), mean_loss ()).
+    """
+    B, S, d = h.shape
+    mask = (labels != label_mask_value)
+    safe_labels = jnp.where(mask, labels, 0)
+
+    if seq_chunk and S > seq_chunk and S % seq_chunk == 0:
+        nc = S // seq_chunk
+        hc = jnp.moveaxis(h.reshape(B, nc, seq_chunk, d), 1, 0)
+        lc = jnp.moveaxis(safe_labels.reshape(B, nc, seq_chunk), 1, 0)
+        mc = jnp.moveaxis(mask.reshape(B, nc, seq_chunk), 1, 0)
+
+        def body(acc, inp):
+            hb, lb, mb = inp
+            nll = _chunk_nll(hb, w_out, lb, ctx)
+            return acc + jnp.sum(nll * mb.astype(jnp.float32), axis=-1), None
+
+        total, _ = jax.lax.scan(body, jnp.zeros((B,), jnp.float32),
+                                (hc, lc, mc))
+    else:
+        nll = _chunk_nll(h, w_out, safe_labels, ctx)
+        total = jnp.sum(nll * mask.astype(jnp.float32), axis=-1)
+
+    counts = jnp.maximum(jnp.sum(mask.astype(jnp.float32), axis=-1), 1.0)
+    per_sample = total / counts
+    return per_sample, jnp.mean(per_sample)
+
+
+def last_token_logits(h_last: jax.Array, w_out: jax.Array,
+                      ctx: ShardCtx) -> jax.Array:
+    """h_last: (B, 1, d) -> (B, V) f32 logits for sampling."""
+    logits = jnp.einsum("bcd,dv->bcv", h_last, w_out.astype(h_last.dtype))
+    logits = ctx.constrain(logits, "batch", None, "vocab")
+    return logits[:, 0].astype(jnp.float32)

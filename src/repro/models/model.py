@@ -1,0 +1,434 @@
+"""Public model API: init, per-sample loss (training/scoring), prefill, decode.
+
+Decode caches per family (all leading dims stacked for ``lax.scan``):
+  dense/moe : {"kv": {k,v: (L, B, S_max, K, hd)}}
+  ssm       : {"ssm": {ssm_state/conv_x/conv_bc: (L, B, ...)}}
+  hybrid    : {"ssm": (n_sites, k, B, ...), "attn_kv": (n_sites, B, S_max, K, hd)}
+  vlm       : {"kv": (n_sites, k, ...), "cross_kv": (n_sites, B, n_img, K, hd)}
+  encdec    : {"kv": (L, ...), "cross_kv": (L, B, T_enc, K, hd)}
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import attention as attn_lib
+from . import ssm as ssm_lib
+from .layers import ShardCtx, Params, apply_norm, embed_tokens, unembed_matrix
+from .losses import last_token_logits
+from .transformer import (init_lm, lm_per_sample_loss, lm_hidden, encode,
+                          dataclasses_replace_dense, _n_sites, _scan_cached)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Frontend stub lengths (audio / vision)
+# ---------------------------------------------------------------------------
+
+def encoder_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Audio frontend stub: #frame embeddings fed to the encoder."""
+    return min(max(seq_len // 4, 64), 4096)
+
+
+def image_tokens(cfg: ModelConfig) -> int:
+    return cfg.num_image_tokens or 1600
+
+
+# ---------------------------------------------------------------------------
+# Cache init / axes
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> PyTree:
+    hd = cfg.resolved_head_dim()
+    if cfg.family in ("dense", "moe"):
+        return {"kv": attn_lib.init_kv_cache(batch, max_len, cfg.num_kv_heads,
+                                             hd, dtype, (cfg.num_layers,))}
+    if cfg.family == "ssm":
+        return {"ssm": ssm_lib.init_ssm_cache(
+            batch, cfg.d_model, state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+            expand=cfg.ssm_expand, conv_width=cfg.ssm_conv_width,
+            stacked=(cfg.num_layers,))}
+    if cfg.family == "hybrid":
+        ns, k = _n_sites(cfg)
+        return {
+            "ssm": ssm_lib.init_ssm_cache(
+                batch, cfg.d_model, state=cfg.ssm_state,
+                head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand,
+                conv_width=cfg.ssm_conv_width, stacked=(ns, k)),
+            "attn_kv": attn_lib.init_kv_cache(batch, max_len,
+                                              cfg.num_kv_heads, hd, dtype,
+                                              (ns,)),
+        }
+    if cfg.family == "vlm":
+        ns, k = _n_sites(cfg)
+        return {
+            "kv": attn_lib.init_kv_cache(batch, max_len, cfg.num_kv_heads, hd,
+                                         dtype, (ns, k)),
+            "cross_kv": attn_lib.init_kv_cache(batch, image_tokens(cfg),
+                                               cfg.num_kv_heads, hd, dtype,
+                                               (ns,)),
+        }
+    if cfg.family == "encdec":
+        t_enc = encoder_len(cfg, max_len)
+        return {
+            "kv": attn_lib.init_kv_cache(batch, max_len, cfg.num_kv_heads, hd,
+                                         dtype, (cfg.num_layers,)),
+            "cross_kv": attn_lib.init_kv_cache(batch, t_enc, cfg.num_kv_heads,
+                                               hd, dtype, (cfg.num_layers,)),
+        }
+    raise ValueError(cfg.family)
+
+
+def cache_axes(cfg: ModelConfig) -> PyTree:
+    """Logical axes tree matching init_cache output."""
+    if cfg.family in ("dense", "moe"):
+        return {"kv": attn_lib.kv_cache_axes((cfg.num_layers,))}
+    if cfg.family == "ssm":
+        return {"ssm": ssm_lib.ssm_cache_axes((cfg.num_layers,))}
+    if cfg.family == "hybrid":
+        ns, k = _n_sites(cfg)
+        return {"ssm": ssm_lib.ssm_cache_axes((ns, k)),
+                "attn_kv": attn_lib.kv_cache_axes((ns,))}
+    if cfg.family == "vlm":
+        ns, k = _n_sites(cfg)
+        return {"kv": attn_lib.kv_cache_axes((ns, k)),
+                "cross_kv": attn_lib.kv_cache_axes((ns,), seq_axis=None)}
+    if cfg.family == "encdec":
+        return {"kv": attn_lib.kv_cache_axes((cfg.num_layers,)),
+                "cross_kv": attn_lib.kv_cache_axes((cfg.num_layers,),
+                                                   seq_axis=None)}
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def _attn_kwargs(cfg: ModelConfig) -> Dict[str, Any]:
+    return dict(n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim(), rope_theta=cfg.rope_theta)
+
+
+def _project_cross_kv(cfg: ModelConfig, p: Params, memory: jax.Array,
+                      ctx: ShardCtx) -> Dict[str, jax.Array]:
+    """Precompute cross-attention K/V from encoder/image memory."""
+    hd = cfg.resolved_head_dim()
+    B, T, _ = memory.shape
+    k = jnp.einsum("btd,dh->bth", memory, p["wk"].astype(memory.dtype))
+    v = jnp.einsum("btd,dh->bth", memory, p["wv"].astype(memory.dtype))
+    if "bk" in p:
+        k = k + p["bk"].astype(memory.dtype)
+        v = v + p["bv"].astype(memory.dtype)
+    k = k.reshape(B, T, cfg.num_kv_heads, hd)
+    v = v.reshape(B, T, cfg.num_kv_heads, hd)
+    return {"k": k, "v": v}
+
+
+def _cross_attn_cached(cfg: ModelConfig, p: Params, x: jax.Array,
+                       ckv: Dict[str, jax.Array], ctx: ShardCtx) -> jax.Array:
+    """Cross attention using precomputed K/V. x: (B, S, d)."""
+    hd = cfg.resolved_head_dim()
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    G = cfg.num_heads // cfg.num_kv_heads
+    q = q.reshape(B, S, cfg.num_kv_heads, G, hd)
+    out = attn_lib._grouped_attn(q, ckv["k"].astype(x.dtype),
+                                 ckv["v"].astype(x.dtype), None)
+    out = out.reshape(B, S, cfg.num_heads * hd)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            cache: PyTree, ctx: ShardCtx) -> Tuple[jax.Array, PyTree]:
+    """Run the prompt through the model, filling `cache`.
+
+    Returns (next-token logits (B, V) f32, new_cache).
+    """
+    dt = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(params["embed"], tokens, dt)
+    x = ctx.constrain(x, "batch", None, None)
+    ak = _attn_kwargs(cfg)
+    new_cache: PyTree = {}
+
+    if cfg.family in ("dense", "moe"):
+        def body(h, p, c):
+            hh = apply_norm(cfg.norm_kind, h, p.get("ln1"))
+            y, nc = attn_lib.prefill_attn(p["attn"], hh, c, ctx=ctx,
+                                          chunk_q=cfg.attn_chunk_q, **ak)
+            h = h + y
+            hh = apply_norm(cfg.norm_kind, h, p.get("ln2"))
+            h = h + _ffn(cfg, p, hh, ctx)
+            return h, nc
+
+        x, kv = _scan_cached(body, x, params["layers"], cache["kv"])
+        new_cache["kv"] = kv
+
+    elif cfg.family == "ssm":
+        def body(h, p, c):
+            hh = apply_norm(cfg.norm_kind, h, p.get("ln1"))
+            y, nc = ssm_lib.mamba2_fwd(p["mamba"], hh, state=cfg.ssm_state,
+                                       head_dim=cfg.ssm_head_dim,
+                                       expand=cfg.ssm_expand,
+                                       chunk=cfg.ssm_chunk, ctx=ctx,
+                                       return_state=True)
+            return h + y, nc
+
+        x, sc = _scan_cached(body, x, params["layers"], None)
+        new_cache["ssm"] = sc
+
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+        scfg = dataclasses_replace_dense(cfg)
+
+        def site_body(h, inp):
+            site_p, attn_c = inp
+
+            def inner(hh, p):
+                nn = apply_norm(cfg.norm_kind, hh, p.get("ln1"))
+                y, nc = ssm_lib.mamba2_fwd(p["mamba"], nn, state=cfg.ssm_state,
+                                           head_dim=cfg.ssm_head_dim,
+                                           expand=cfg.ssm_expand,
+                                           chunk=cfg.ssm_chunk, ctx=ctx,
+                                           return_state=True)
+                return hh + y, nc
+
+            h, ssm_c = _scan_cached(lambda hh, p, _: inner(hh, p), h, site_p,
+                                    None)
+            hh = apply_norm(cfg.norm_kind, h, shared.get("ln1"))
+            y, attn_nc = attn_lib.prefill_attn(shared["attn"], hh, attn_c,
+                                               ctx=ctx,
+                                               chunk_q=cfg.attn_chunk_q, **ak)
+            h = h + y
+            hh = apply_norm(cfg.norm_kind, h, shared.get("ln2"))
+            from .layers import mlp_fwd
+            h = h + mlp_fwd(scfg.mlp_kind, shared["mlp"], hh, ctx)
+            return h, (ssm_c, attn_nc)
+
+        def step(carry, inp):
+            return site_body(carry, inp)
+
+        x, (ssm_c, attn_c) = jax.lax.scan(step, x,
+                                          (params["layers"],
+                                           cache["attn_kv"]))
+        new_cache["ssm"] = ssm_c
+        new_cache["attn_kv"] = attn_c
+
+    elif cfg.family == "vlm":
+        memory = batch["image_embeds"].astype(dt)
+
+        def site_body(carry, inp):
+            h = carry
+            site_p, cross_p, kv_c = inp
+
+            def inner(hh, p, c):
+                nn = apply_norm(cfg.norm_kind, hh, p.get("ln1"))
+                y, nc = attn_lib.prefill_attn(p["attn"], nn, c, ctx=ctx,
+                                              chunk_q=cfg.attn_chunk_q, **ak)
+                hh = hh + y
+                nn = apply_norm(cfg.norm_kind, hh, p.get("ln2"))
+                return hh + _ffn(cfg, p, nn, ctx), nc
+
+            h, kv_nc = _scan_cached(inner, h, site_p, kv_c)
+            ckv = _project_cross_kv(cfg, cross_p["attn"], memory, ctx)
+            hh = apply_norm(cfg.norm_kind, h, cross_p.get("ln1"))
+            y = _cross_attn_cached(cfg, cross_p["attn"], hh, ckv, ctx)
+            h = h + jnp.tanh(cross_p["gate_attn"].astype(h.dtype)) * y
+            hh = apply_norm(cfg.norm_kind, h, cross_p.get("ln2"))
+            from .layers import mlp_fwd
+            y = mlp_fwd(cfg.mlp_kind, cross_p["mlp"], hh, ctx)
+            h = h + jnp.tanh(cross_p["gate_mlp"].astype(h.dtype)) * y
+            ckv_c = {"k": ckv["k"].astype(jnp.bfloat16),
+                     "v": ckv["v"].astype(jnp.bfloat16)}
+            return h, (kv_nc, ckv_c)
+
+        x, (kv_c, cross_c) = jax.lax.scan(site_body, x,
+                                          (params["layers"], params["cross"],
+                                           cache["kv"]))
+        new_cache["kv"] = kv_c
+        new_cache["cross_kv"] = cross_c
+
+    elif cfg.family == "encdec":
+        enc = encode(cfg, params, batch["frames"], ctx)
+
+        def body(h, inp):
+            p, cp, kv_c = inp
+            hh = apply_norm(cfg.norm_kind, h, p.get("ln1"))
+            y, kv_nc = attn_lib.prefill_attn(p["attn"], hh, kv_c, ctx=ctx,
+                                             chunk_q=cfg.attn_chunk_q, **ak)
+            h = h + y
+            ckv = _project_cross_kv(cfg, cp["attn"], enc, ctx)
+            hh = apply_norm(cfg.norm_kind, h, cp.get("ln"))
+            h = h + _cross_attn_cached(cfg, cp["attn"], hh, ckv, ctx)
+            hh = apply_norm(cfg.norm_kind, h, p.get("ln2"))
+            from .layers import mlp_fwd
+            h = h + mlp_fwd(cfg.mlp_kind, p["mlp"], hh, ctx)
+            ckv_c = {"k": ckv["k"].astype(jnp.bfloat16),
+                     "v": ckv["v"].astype(jnp.bfloat16)}
+            return h, (kv_nc, ckv_c)
+
+        x, (kv_c, cross_c) = jax.lax.scan(body, x,
+                                          (params["layers"], params["cross"],
+                                           cache["kv"]))
+        new_cache["kv"] = kv_c
+        new_cache["cross_kv"] = cross_c
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(cfg.norm_kind, x, params.get("final_norm"))
+    logits = last_token_logits(x[:, -1:, :], unembed_matrix(params["embed"]),
+                               ctx)
+    return logits, new_cache
+
+
+def _ffn(cfg: ModelConfig, p: Params, h: jax.Array, ctx: ShardCtx) -> jax.Array:
+    from . import moe as moe_lib
+    from .layers import mlp_fwd
+    if cfg.num_experts > 0:
+        y = moe_lib.moe_fwd(p["moe"], h, n_experts=cfg.num_experts,
+                            top_k=cfg.num_experts_per_tok, ctx=ctx,
+                            capacity_factor=cfg.capacity_factor,
+                            n_groups=cfg.moe_groups)
+        if cfg.moe_dense_residual:
+            y = y + mlp_fwd("swiglu", p["dense_res"], h, ctx)
+        return y
+    return mlp_fwd(cfg.mlp_kind, p["mlp"], h, ctx)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token)
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                cache: PyTree, pos: jax.Array, ctx: ShardCtx
+                ) -> Tuple[jax.Array, PyTree]:
+    """tokens: (B, 1) int32; pos: scalar int32 (write position).
+
+    Returns (logits (B, V) f32, new_cache).
+    """
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], tokens, dt)
+    x = ctx.constrain(x, "batch", None, None)
+    ak = _attn_kwargs(cfg)
+    new_cache: PyTree = {}
+
+    if cfg.family in ("dense", "moe"):
+        def body(h, p, c):
+            hh = apply_norm(cfg.norm_kind, h, p.get("ln1"))
+            y, nc = attn_lib.decode_attn(p["attn"], hh, c, pos, ctx=ctx, **ak)
+            h = h + y
+            hh = apply_norm(cfg.norm_kind, h, p.get("ln2"))
+            return h + _ffn(cfg, p, hh, ctx), nc
+
+        x, kv = _scan_cached(body, x, params["layers"], cache["kv"])
+        new_cache["kv"] = kv
+
+    elif cfg.family == "ssm":
+        def body(h, p, c):
+            hh = apply_norm(cfg.norm_kind, h, p.get("ln1"))
+            y, nc = ssm_lib.mamba2_decode(p["mamba"], hh, c,
+                                          state=cfg.ssm_state,
+                                          head_dim=cfg.ssm_head_dim,
+                                          expand=cfg.ssm_expand, ctx=ctx)
+            return h + y, nc
+
+        x, sc = _scan_cached(body, x, params["layers"], cache["ssm"])
+        new_cache["ssm"] = sc
+
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+        scfg = dataclasses_replace_dense(cfg)
+
+        def site_body(h, inp):
+            site_p, ssm_c, attn_c = inp
+
+            def inner(hh, p, c):
+                nn = apply_norm(cfg.norm_kind, hh, p.get("ln1"))
+                y, nc = ssm_lib.mamba2_decode(p["mamba"], nn, c,
+                                              state=cfg.ssm_state,
+                                              head_dim=cfg.ssm_head_dim,
+                                              expand=cfg.ssm_expand, ctx=ctx)
+                return hh + y, nc
+
+            h, ssm_nc = _scan_cached(inner, h, site_p, ssm_c)
+            hh = apply_norm(cfg.norm_kind, h, shared.get("ln1"))
+            y, attn_nc = attn_lib.decode_attn(shared["attn"], hh, attn_c, pos,
+                                              ctx=ctx, **ak)
+            h = h + y
+            hh = apply_norm(cfg.norm_kind, h, shared.get("ln2"))
+            from .layers import mlp_fwd
+            h = h + mlp_fwd(scfg.mlp_kind, shared["mlp"], hh, ctx)
+            return h, (ssm_nc, attn_nc)
+
+        x, (ssm_c, attn_c) = jax.lax.scan(site_body, x,
+                                          (params["layers"], cache["ssm"],
+                                           cache["attn_kv"]))
+        new_cache["ssm"] = ssm_c
+        new_cache["attn_kv"] = attn_c
+
+    elif cfg.family == "vlm":
+        def site_body(h, inp):
+            site_p, cross_p, kv_c, ckv = inp
+
+            def inner(hh, p, c):
+                nn = apply_norm(cfg.norm_kind, hh, p.get("ln1"))
+                y, nc = attn_lib.decode_attn(p["attn"], nn, c, pos, ctx=ctx,
+                                             **ak)
+                hh = hh + y
+                nn = apply_norm(cfg.norm_kind, hh, p.get("ln2"))
+                return hh + _ffn(cfg, p, nn, ctx), nc
+
+            h, kv_nc = _scan_cached(inner, h, site_p, kv_c)
+            hh = apply_norm(cfg.norm_kind, h, cross_p.get("ln1"))
+            y = _cross_attn_cached(cfg, cross_p["attn"], hh, ckv, ctx)
+            h = h + jnp.tanh(cross_p["gate_attn"].astype(h.dtype)) * y
+            hh = apply_norm(cfg.norm_kind, h, cross_p.get("ln2"))
+            from .layers import mlp_fwd
+            y = mlp_fwd(cfg.mlp_kind, cross_p["mlp"], hh, ctx)
+            h = h + jnp.tanh(cross_p["gate_mlp"].astype(h.dtype)) * y
+            return h, (kv_nc, ckv)
+
+        x, (kv_c, cross_c) = jax.lax.scan(site_body, x,
+                                          (params["layers"], params["cross"],
+                                           cache["kv"], cache["cross_kv"]))
+        new_cache["kv"] = kv_c
+        new_cache["cross_kv"] = cross_c
+
+    elif cfg.family == "encdec":
+        def body(h, inp):
+            p, cp, kv_c, ckv = inp
+            hh = apply_norm(cfg.norm_kind, h, p.get("ln1"))
+            y, kv_nc = attn_lib.decode_attn(p["attn"], hh, kv_c, pos, ctx=ctx,
+                                            **ak)
+            h = h + y
+            hh = apply_norm(cfg.norm_kind, h, cp.get("ln"))
+            h = h + _cross_attn_cached(cfg, cp["attn"], hh, ckv, ctx)
+            hh = apply_norm(cfg.norm_kind, h, p.get("ln2"))
+            from .layers import mlp_fwd
+            h = h + mlp_fwd(cfg.mlp_kind, p["mlp"], hh, ctx)
+            return h, (kv_nc, ckv)
+
+        x, (kv_c, cross_c) = jax.lax.scan(body, x,
+                                          (params["layers"], params["cross"],
+                                           cache["kv"], cache["cross_kv"]))
+        new_cache["kv"] = kv_c
+        new_cache["cross_kv"] = cross_c
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(cfg.norm_kind, x, params.get("final_norm"))
+    logits = last_token_logits(x, unembed_matrix(params["embed"]), ctx)
+    return logits, new_cache
+
+
+__all__ = ["init_lm", "lm_per_sample_loss", "lm_hidden", "init_cache",
+           "cache_axes", "prefill", "decode_step", "encoder_len",
+           "image_tokens"]

@@ -1,0 +1,263 @@
+"""Mamba2 / SSD (state-space duality) block — chunked training scan + O(1) decode.
+
+TPU adaptation notes (see DESIGN.md):
+  * the SSD chunked algorithm is matmul-dominated (MXU-friendly); we implement
+    the chunk-parallel form with an associative scan for the inter-chunk
+    recurrence (log-depth, no sequential bottleneck at 500k tokens);
+  * the fused [x,B,C] conv/in-proj of the CUDA kernel is split into
+    TP-shardable pieces: heads of x/z shard over "model"; B/C (ngroups=1,
+    state dim N) are replicated — identical math, shardable layout.
+
+Shapes: d_inner = expand*d_model, nh = d_inner/head_dim (P), state N.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, Axes, ShardCtx, winit, zeros, ones, rmsnorm
+
+
+def init_mamba2(key: jax.Array, d_model: int, *, state: int, head_dim: int,
+                expand: int, conv_width: int,
+                stacked: Tuple[int, ...] = ()) -> Tuple[Params, Axes]:
+    d_inner = expand * d_model
+    nh = d_inner // head_dim
+    lead = tuple(stacked)
+    lead_ax = tuple("layers" for _ in stacked)
+    ks = jax.random.split(key, 8)
+    params: Params = {
+        "w_z": winit(ks[0], lead + (d_model, d_inner)),
+        "w_x": winit(ks[1], lead + (d_model, d_inner)),
+        "w_bc": winit(ks[2], lead + (d_model, 2 * state)),
+        "w_dt": winit(ks[3], lead + (d_model, nh)),
+        "conv_x": winit(ks[4], lead + (conv_width, d_inner), scale=0.1),
+        "conv_bc": winit(ks[5], lead + (conv_width, 2 * state), scale=0.1),
+        "dt_bias": zeros(lead + (nh,)),
+        "A_log": jnp.broadcast_to(
+            jnp.log(jnp.linspace(1.0, float(nh), nh)), lead + (nh,)).copy(),
+        "D": ones(lead + (nh,)),
+        "norm_scale": ones(lead + (d_inner,)),
+        "w_out": winit(ks[6], lead + (d_inner, d_model)),
+    }
+    axes: Axes = {
+        "w_z": lead_ax + ("embed", "mlp"),
+        "w_x": lead_ax + ("embed", "mlp"),
+        "w_bc": lead_ax + ("embed", None),
+        "w_dt": lead_ax + ("embed", None),
+        "conv_x": lead_ax + (None, "mlp"),
+        "conv_bc": lead_ax + (None, None),
+        "dt_bias": lead_ax + (None,),
+        "A_log": lead_ax + (None,),
+        "D": lead_ax + (None,),
+        "norm_scale": lead_ax + ("mlp",),
+        "w_out": lead_ax + ("mlp", "embed"),
+    }
+    return params, axes
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., T) -> (..., T, T) with out[..., i, j] = sum_{k=j+1..i} x_k
+    for i >= j (diag = 0), -inf above the diagonal."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B, S, C), w: (W, C). Causal depthwise conv, no bias."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+    return out
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan (Mamba2, ngroups=1).
+
+    x: (B, S, H, P), dt: (B, S, H) (already softplus'ed), A: (H,) negative,
+    Bm/Cm: (B, S, N).  Returns (y: (B, S, H, P), final_state: (B, H, P, N)).
+    """
+    Bsz, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    S_orig = S
+    pad = (-S) % chunk
+    if pad:
+        # dt=0 padding is exact: dA=0 -> decay 1, x*dt=0 -> no state change
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // chunk
+    f32 = jnp.float32
+
+    xdt = (x * dt[..., None]).astype(f32)                    # (B,S,H,P)
+    dA = (dt.astype(f32) * A.astype(f32)[None, None, :])     # (B,S,H) <= 0
+
+    # chunked views
+    xc = xdt.reshape(Bsz, nc, chunk, H, Pd)
+    dAc = dA.reshape(Bsz, nc, chunk, H)
+    dAc = jnp.moveaxis(dAc, -1, 2)                           # (B,nc,H,chunk)
+    Bc = Bm.astype(f32).reshape(Bsz, nc, chunk, N)
+    Cc = Cm.astype(f32).reshape(Bsz, nc, chunk, N)
+
+    dA_cs = jnp.cumsum(dAc, axis=-1)                         # (B,nc,H,chunk)
+
+    # ---- intra-chunk (quadratic in `chunk`, matmul-heavy) ----
+    L = jnp.exp(_segsum(dAc))                                # (B,nc,H,ch,ch)
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp", Cc, Bc, L, xc)
+
+    # ---- chunk end-states ----
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)          # (B,nc,H,ch)
+    states = jnp.einsum("bcsn,bchs,bcshp->bchpn", Bc, decay_states, xc)
+
+    # ---- inter-chunk recurrence: associative scan over chunks ----
+    chunk_decay = jnp.exp(dA_cs[..., -1])                    # (B,nc,H)
+
+    def combine(a, b):
+        d1, s1 = a
+        d2, s2 = b
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    if init_state is not None:
+        st0 = init_state.astype(f32)[:, None]                # (B,1,H,P,N)
+        states = jnp.concatenate([st0, states], axis=1)
+        chunk_decay = jnp.concatenate(
+            [jnp.ones_like(chunk_decay[:, :1]), chunk_decay], axis=1)
+        _, run = jax.lax.associative_scan(combine, (chunk_decay, states), axis=1)
+        entering = run[:, :-1]                               # state entering chunk c
+        final_state = run[:, -1]
+    else:
+        _, run = jax.lax.associative_scan(combine, (chunk_decay, states), axis=1)
+        entering = jnp.concatenate(
+            [jnp.zeros_like(run[:, :1]), run[:, :-1]], axis=1)
+        final_state = run[:, -1]
+
+    # ---- contribution of entering states ----
+    state_decay = jnp.exp(dA_cs)                             # (B,nc,H,ch)
+    y_off = jnp.einsum("bcln,bchpn,bchl->bclhp", Cc, entering, state_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, Pd).astype(x.dtype)
+    if pad:
+        y = y[:, :S_orig]
+    return y, final_state.astype(f32)
+
+
+def init_ssm_cache(batch: int, d_model: int, *, state: int, head_dim: int,
+                   expand: int, conv_width: int, dtype=jnp.float32,
+                   stacked: Tuple[int, ...] = ()) -> Dict[str, jax.Array]:
+    d_inner = expand * d_model
+    nh = d_inner // head_dim
+    lead = tuple(stacked)
+    return {
+        "ssm_state": jnp.zeros(lead + (batch, nh, head_dim, state), dtype),
+        "conv_x": jnp.zeros(lead + (batch, conv_width - 1, d_inner), dtype),
+        "conv_bc": jnp.zeros(lead + (batch, conv_width - 1, 2 * state), dtype),
+    }
+
+
+def ssm_cache_axes(stacked: Tuple[int, ...] = ()) -> Dict[str, Any]:
+    lead = tuple("layers" for _ in stacked)
+    return {
+        "ssm_state": lead + ("batch", "mlp", None, None),
+        "conv_x": lead + ("batch", None, "mlp"),
+        "conv_bc": lead + ("batch", None, None),
+    }
+
+
+def mamba2_fwd(params: Params, x: jax.Array, *, state: int, head_dim: int,
+               expand: int, chunk: int, ctx: ShardCtx,
+               init_state: Optional[jax.Array] = None,
+               return_state: bool = False):
+    """Full-sequence Mamba2 block. x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    d_inner = expand * d
+    nh = d_inner // head_dim
+
+    z = jnp.einsum("bsd,di->bsi", x, params["w_z"].astype(x.dtype))
+    xi = jnp.einsum("bsd,di->bsi", x, params["w_x"].astype(x.dtype))
+    bc = jnp.einsum("bsd,dn->bsn", x, params["w_bc"].astype(x.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, params["w_dt"].astype(x.dtype))
+    z = ctx.constrain(z, "batch", None, "mlp")
+    xi = ctx.constrain(xi, "batch", None, "mlp")
+
+    xi_raw, bc_raw = xi, bc            # pre-conv tails feed the decode cache
+    xi = jax.nn.silu(_causal_depthwise_conv(xi, params["conv_x"].astype(x.dtype)))
+    bc = jax.nn.silu(_causal_depthwise_conv(bc, params["conv_bc"].astype(x.dtype)))
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xi.reshape(B, S, nh, head_dim)
+    xh = ctx.constrain(xh, "batch", None, "mlp", None)
+
+    y, final_state = ssd_chunked(xh, dt, A, Bm, Cm, chunk,
+                                 init_state=init_state)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_scale"])
+    out = jnp.einsum("bsi,id->bsd", y, params["w_out"].astype(x.dtype))
+    if return_state:
+        # PRE-conv tails continue the depthwise conv window at decode time
+        cw = params["conv_x"].shape[0]
+        cache = {
+            "ssm_state": final_state,
+            "conv_x": xi_raw[:, S - (cw - 1):, :].astype(jnp.float32),
+            "conv_bc": bc_raw[:, S - (cw - 1):, :].astype(jnp.float32),
+        }
+        return out, cache
+    return out
+
+
+def mamba2_decode(params: Params, x: jax.Array, cache: Dict[str, jax.Array], *,
+                  state: int, head_dim: int, expand: int, ctx: ShardCtx
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token recurrent step. x: (B, 1, d)."""
+    B, _, d = x.shape
+    d_inner = expand * d
+    nh = d_inner // head_dim
+    xt = x[:, 0]                                                   # (B, d)
+
+    z = xt @ params["w_z"].astype(x.dtype)
+    xi = xt @ params["w_x"].astype(x.dtype)
+    bc = xt @ params["w_bc"].astype(x.dtype)
+    dt = xt @ params["w_dt"].astype(x.dtype)
+
+    # depthwise causal conv with stored tail
+    cx, cbc = params["conv_x"].astype(jnp.float32), params["conv_bc"].astype(jnp.float32)
+    W = cx.shape[0]
+    win_x = jnp.concatenate([cache["conv_x"], xi.astype(jnp.float32)[:, None, :]], axis=1)
+    win_bc = jnp.concatenate([cache["conv_bc"], bc.astype(jnp.float32)[:, None, :]], axis=1)
+    xi_c = jax.nn.silu(jnp.einsum("bwc,wc->bc", win_x, cx))
+    bc_c = jax.nn.silu(jnp.einsum("bwc,wc->bc", win_bc, cbc))
+    new_conv_x = win_x[:, 1:, :]
+    new_conv_bc = win_bc[:, 1:, :]
+
+    Bm, Cm = jnp.split(bc_c, 2, axis=-1)                           # (B, N)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32)
+                          + params["dt_bias"].astype(jnp.float32))  # (B, nh)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))               # (nh,)
+    xh = xi_c.reshape(B, nh, head_dim)                              # (B,nh,P)
+
+    h = cache["ssm_state"]                                          # (B,nh,P,N)
+    dA = jnp.exp(dtp * A[None, :])                                  # (B,nh)
+    h_new = (h * dA[:, :, None, None]
+             + (dtp[:, :, None] * xh)[..., None] * Bm[:, None, None, :])
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cm)                       # (B,nh,P)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_scale"])
+    out = (y @ params["w_out"].astype(x.dtype))[:, None, :]         # (B,1,d)
+    new_cache = {"ssm_state": h_new, "conv_x": new_conv_x, "conv_bc": new_conv_bc}
+    return out, new_cache

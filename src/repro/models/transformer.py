@@ -1,0 +1,368 @@
+"""Model assembly for every assigned architecture family.
+
+Families
+  dense / moe      : scan over stacked {attn, ffn} blocks
+  ssm              : scan over stacked Mamba2 blocks
+  hybrid (zamba2)  : outer scan over sites x inner scan over Mamba2 layers,
+                     one *shared* attention+MLP block applied per site
+  vlm (llama-3.2v) : outer scan over sites x inner scan over self-attn layers,
+                     per-site gated cross-attention blocks to image embeddings
+  encdec (seamless): bidirectional encoder over frame embeddings + causal
+                     decoder with per-layer cross-attention
+
+Layer stacks are scanned (``lax.scan``) so HLO size and compile time stay
+O(1) in depth; remat policy wraps the scan body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn_lib
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .layers import (Params, Axes, ShardCtx, apply_norm, init_norm, init_mlp,
+                     mlp_fwd, init_embedding, embed_tokens, unembed_matrix,
+                     winit, zeros)
+from .losses import per_sample_xent, last_token_logits
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Remat / scan helpers
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn)
+    if policy == "selective":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(policy)
+
+
+def _scan_stack(body, x: jax.Array, stacked: PyTree, policy: str,
+                unroll: bool = False) -> jax.Array:
+    """Scan ``body(x, layer_params) -> x`` over the leading (layer) axis.
+
+    ``unroll=True`` fully unrolls (dry-run cost accounting; see
+    ModelConfig.scan_unroll) — XLA's HLO cost analysis counts while-loop
+    bodies once, so roofline FLOPs/collective-bytes need unrolled lowering.
+    """
+    def step(carry, p):
+        return body(carry, p), None
+    step = _maybe_remat(step, policy)
+    x, _ = jax.lax.scan(step, x, stacked, unroll=True if unroll else 1)
+    return x
+
+
+def _scan_cached(body, x: jax.Array, stacked: PyTree, caches: PyTree,
+                 unroll: bool = False):
+    """Scan ``body(x, p, cache) -> (x, new_cache)`` collecting new caches."""
+    def step(carry, inp):
+        p, c = inp
+        return body(carry, p, c)
+    x, new_caches = jax.lax.scan(step, x, (stacked, caches),
+                                 unroll=True if unroll else 1)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Block inits
+# ---------------------------------------------------------------------------
+
+def _init_dense_block(cfg: ModelConfig, key, stacked) -> Tuple[Params, Axes]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {}
+    a: Axes = {}
+    ln1, ln1_ax = init_norm(cfg.norm_kind, cfg.d_model, stacked)
+    ln2, ln2_ax = init_norm(cfg.norm_kind, cfg.d_model, stacked)
+    attn_p, attn_a = attn_lib.init_attn(
+        k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+        cfg.resolved_head_dim(), qkv_bias=cfg.qkv_bias, stacked=stacked)
+    p.update({"attn": attn_p})
+    a.update({"attn": attn_a})
+    if ln1 is not None:
+        p.update({"ln1": ln1, "ln2": ln2})
+        a.update({"ln1": ln1_ax, "ln2": ln2_ax})
+    if cfg.num_experts > 0:
+        moe_p, moe_a = moe_lib.init_moe(k2, cfg.d_model, cfg.d_ff,
+                                        cfg.num_experts, stacked)
+        p["moe"], a["moe"] = moe_p, moe_a
+        if cfg.moe_dense_residual:
+            dr_p, dr_a = init_mlp(k3, "swiglu", cfg.d_model,
+                                  cfg.dense_residual_d_ff, stacked)
+            p["dense_res"], a["dense_res"] = dr_p, dr_a
+    else:
+        mlp_p, mlp_a = init_mlp(k4, cfg.mlp_kind, cfg.d_model, cfg.d_ff, stacked)
+        p["mlp"], a["mlp"] = mlp_p, mlp_a
+    return p, a
+
+
+def _init_mamba_block(cfg: ModelConfig, key, stacked) -> Tuple[Params, Axes]:
+    p: Params = {}
+    a: Axes = {}
+    ln1, ln1_ax = init_norm(cfg.norm_kind, cfg.d_model, stacked)
+    if ln1 is not None:
+        p["ln1"], a["ln1"] = ln1, ln1_ax
+    mp, ma = ssm_lib.init_mamba2(key, cfg.d_model, state=cfg.ssm_state,
+                                 head_dim=cfg.ssm_head_dim,
+                                 expand=cfg.ssm_expand,
+                                 conv_width=cfg.ssm_conv_width, stacked=stacked)
+    p["mamba"], a["mamba"] = mp, ma
+    return p, a
+
+
+def _init_cross_block(cfg: ModelConfig, key, stacked) -> Tuple[Params, Axes]:
+    """Gated cross-attention block (llama-3.2-vision style)."""
+    k1, k2 = jax.random.split(key)
+    lead_ax = tuple("layers" for _ in stacked)
+    p: Params = {}
+    a: Axes = {}
+    ln1, ln1_ax = init_norm(cfg.norm_kind, cfg.d_model, stacked)
+    ln2, ln2_ax = init_norm(cfg.norm_kind, cfg.d_model, stacked)
+    if ln1 is not None:
+        p.update({"ln1": ln1, "ln2": ln2})
+        a.update({"ln1": ln1_ax, "ln2": ln2_ax})
+    ap, aa = attn_lib.init_attn(k1, cfg.d_model, cfg.num_heads,
+                                cfg.num_kv_heads, cfg.resolved_head_dim(),
+                                stacked=stacked)
+    mp, ma = init_mlp(k2, cfg.mlp_kind, cfg.d_model, cfg.d_ff, stacked)
+    p.update({"attn": ap, "mlp": mp,
+              "gate_attn": zeros(tuple(stacked) + (1,)),
+              "gate_mlp": zeros(tuple(stacked) + (1,))})
+    a.update({"attn": aa, "mlp": ma,
+              "gate_attn": lead_ax + (None,), "gate_mlp": lead_ax + (None,)})
+    return p, a
+
+
+# ---------------------------------------------------------------------------
+# Block forwards
+# ---------------------------------------------------------------------------
+
+def _dense_block_fwd(cfg: ModelConfig, p: Params, x: jax.Array, ctx: ShardCtx,
+                     positions: Optional[jax.Array] = None) -> jax.Array:
+    h = apply_norm(cfg.norm_kind, x, p.get("ln1"))
+    x = x + attn_lib.mha(p["attn"], h, n_heads=cfg.num_heads,
+                         n_kv=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim(),
+                         rope_theta=cfg.rope_theta, ctx=ctx,
+                         chunk_q=cfg.attn_chunk_q, positions=positions)
+    x = ctx.constrain(x, "batch", None, None)
+    h = apply_norm(cfg.norm_kind, x, p.get("ln2"))
+    if cfg.num_experts > 0:
+        y = moe_lib.moe_fwd(p["moe"], h, n_experts=cfg.num_experts,
+                            top_k=cfg.num_experts_per_tok, ctx=ctx,
+                            capacity_factor=cfg.capacity_factor,
+                            n_groups=cfg.moe_groups)
+        if cfg.moe_dense_residual:
+            y = y + mlp_fwd("swiglu", p["dense_res"], h, ctx)
+    else:
+        y = mlp_fwd(cfg.mlp_kind, p["mlp"], h, ctx)
+    return ctx.constrain(x + y, "batch", None, None)
+
+
+def _mamba_block_fwd(cfg: ModelConfig, p: Params, x: jax.Array,
+                     ctx: ShardCtx) -> jax.Array:
+    h = apply_norm(cfg.norm_kind, x, p.get("ln1"))
+    y = ssm_lib.mamba2_fwd(p["mamba"], h, state=cfg.ssm_state,
+                           head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand,
+                           chunk=cfg.ssm_chunk, ctx=ctx)
+    return ctx.constrain(x + y, "batch", None, None)
+
+
+def _cross_block_fwd(cfg: ModelConfig, p: Params, x: jax.Array,
+                     memory: jax.Array, ctx: ShardCtx) -> jax.Array:
+    h = apply_norm(cfg.norm_kind, x, p.get("ln1"))
+    y = attn_lib.cross_attn(p["attn"], h, memory, n_heads=cfg.num_heads,
+                            n_kv=cfg.num_kv_heads,
+                            head_dim=cfg.resolved_head_dim(), ctx=ctx)
+    x = x + jnp.tanh(p["gate_attn"].astype(x.dtype)) * y
+    h = apply_norm(cfg.norm_kind, x, p.get("ln2"))
+    y = mlp_fwd(cfg.mlp_kind, p["mlp"], h, ctx)
+    return x + jnp.tanh(p["gate_mlp"].astype(x.dtype)) * y
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def _n_sites(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_sites, layers_per_site) for hybrid/vlm grouped stacks."""
+    every = cfg.hybrid_attn_every if cfg.family == "hybrid" else cfg.cross_attn_every
+    assert every > 0 and cfg.num_layers % every == 0, (cfg.num_layers, every)
+    return cfg.num_layers // every, every
+
+
+def init_lm(cfg: ModelConfig, key: jax.Array) -> Tuple[Params, Axes]:
+    keys = jax.random.split(key, 8)
+    params: Params = {}
+    axes: Axes = {}
+
+    emb_p, emb_a = init_embedding(keys[0], cfg.vocab_size, cfg.d_model,
+                                  cfg.tie_embeddings)
+    params["embed"], axes["embed"] = emb_p, emb_a
+    fn, fn_ax = init_norm(cfg.norm_kind, cfg.d_model)
+    if fn is not None:
+        params["final_norm"], axes["final_norm"] = fn, fn_ax
+
+    if cfg.family in ("dense", "moe"):
+        p, a = _init_dense_block(cfg, keys[1], (cfg.num_layers,))
+        params["layers"], axes["layers"] = p, a
+    elif cfg.family == "ssm":
+        p, a = _init_mamba_block(cfg, keys[1], (cfg.num_layers,))
+        params["layers"], axes["layers"] = p, a
+    elif cfg.family == "hybrid":
+        ns, k = _n_sites(cfg)
+        p, a = _init_mamba_block(cfg, keys[1], (ns, k))
+        params["layers"], axes["layers"] = p, a
+        sp, sa = _init_dense_block(
+            dataclasses_replace_dense(cfg), keys[2], ())
+        params["shared"], axes["shared"] = sp, sa
+    elif cfg.family == "vlm":
+        ns, k = _n_sites(cfg)
+        p, a = _init_dense_block(cfg, keys[1], (ns, k))
+        params["layers"], axes["layers"] = p, a
+        cp, ca = _init_cross_block(cfg, keys[2], (ns,))
+        params["cross"], axes["cross"] = cp, ca
+    elif cfg.family == "encdec":
+        p, a = _init_dense_block(cfg, keys[1], (cfg.num_layers,))
+        params["layers"], axes["layers"] = p, a
+        # decoder cross-attn (per decoder layer)
+        cp, ca = attn_lib.init_attn(keys[2], cfg.d_model, cfg.num_heads,
+                                    cfg.num_kv_heads, cfg.resolved_head_dim(),
+                                    stacked=(cfg.num_layers,))
+        lnc, lnc_ax = init_norm(cfg.norm_kind, cfg.d_model, (cfg.num_layers,))
+        params["cross"] = {"attn": cp}
+        axes["cross"] = {"attn": ca}
+        if lnc is not None:
+            params["cross"]["ln"], axes["cross"]["ln"] = lnc, lnc_ax
+        ep, ea = _init_dense_block(cfg, keys[3], (cfg.num_encoder_layers,))
+        params["encoder"], axes["encoder"] = ep, ea
+        fd = cfg.frontend_dim or cfg.d_model
+        params["frontend_proj"] = winit(keys[4], (fd, cfg.d_model))
+        axes["frontend_proj"] = (None, "embed")
+        efn, efn_ax = init_norm(cfg.norm_kind, cfg.d_model)
+        if efn is not None:
+            params["enc_final_norm"], axes["enc_final_norm"] = efn, efn_ax
+    else:
+        raise ValueError(cfg.family)
+    return params, axes
+
+
+def dataclasses_replace_dense(cfg: ModelConfig) -> ModelConfig:
+    """Shared zamba2 attn block config: dense attn+MLP at d_model width."""
+    import dataclasses
+    return dataclasses.replace(cfg, family="dense", num_experts=0)
+
+
+# ---------------------------------------------------------------------------
+# Hidden-state forward (training / scoring path)
+# ---------------------------------------------------------------------------
+
+def lm_hidden(cfg: ModelConfig, params: Params, tokens: jax.Array,
+              ctx: ShardCtx, *, memory: Optional[jax.Array] = None) -> jax.Array:
+    """tokens: (B, S) -> final-normed hidden states (B, S, d)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], tokens, dt)
+    x = ctx.constrain(x, "batch", None, None)
+    if memory is not None:
+        memory = memory.astype(dt)
+
+    if cfg.family in ("dense", "moe"):
+        body = lambda h, p: _dense_block_fwd(cfg, p, h, ctx)
+        x = _scan_stack(body, x, params["layers"], cfg.remat_policy,
+                        cfg.scan_unroll)
+    elif cfg.family == "ssm":
+        body = lambda h, p: _mamba_block_fwd(cfg, p, h, ctx)
+        x = _scan_stack(body, x, params["layers"], cfg.remat_policy,
+                        cfg.scan_unroll)
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+        scfg = dataclasses_replace_dense(cfg)
+
+        def site_body(h, site_p):
+            inner = lambda hh, p: _mamba_block_fwd(cfg, p, hh, ctx)
+            h = _scan_stack(inner, h, site_p, cfg.remat_policy,
+                            cfg.scan_unroll)
+            return _dense_block_fwd(scfg, shared, h, ctx)
+
+        x = _scan_stack(site_body, x, params["layers"], cfg.remat_policy,
+                        cfg.scan_unroll)
+    elif cfg.family == "vlm":
+        assert memory is not None, "vlm needs image embeddings"
+
+        def site_body(h, site_p):
+            sp, cp = site_p
+            inner = lambda hh, p: _dense_block_fwd(cfg, p, hh, ctx)
+            h = _scan_stack(inner, h, sp, cfg.remat_policy, cfg.scan_unroll)
+            return _cross_block_fwd(cfg, cp, h, memory, ctx)
+
+        x = _scan_stack(site_body, x, (params["layers"], params["cross"]),
+                        cfg.remat_policy, cfg.scan_unroll)
+    elif cfg.family == "encdec":
+        assert memory is not None, "encdec needs frame embeddings"
+        enc = encode(cfg, params, memory, ctx)
+
+        def dec_body(h, inp):
+            p, cp = inp
+            hh = apply_norm(cfg.norm_kind, h, p.get("ln1"))
+            h = h + attn_lib.mha(p["attn"], hh, n_heads=cfg.num_heads,
+                                 n_kv=cfg.num_kv_heads,
+                                 head_dim=cfg.resolved_head_dim(),
+                                 rope_theta=cfg.rope_theta, ctx=ctx,
+                                 chunk_q=cfg.attn_chunk_q)
+            hh = apply_norm(cfg.norm_kind, h, cp.get("ln"))
+            h = h + attn_lib.cross_attn(cp["attn"], hh, enc,
+                                        n_heads=cfg.num_heads,
+                                        n_kv=cfg.num_kv_heads,
+                                        head_dim=cfg.resolved_head_dim(),
+                                        ctx=ctx)
+            hh = apply_norm(cfg.norm_kind, h, p.get("ln2"))
+            return h + mlp_fwd(cfg.mlp_kind, p["mlp"], hh, ctx)
+
+        x = _scan_stack(dec_body, x, (params["layers"], params["cross"]),
+                        cfg.remat_policy, cfg.scan_unroll)
+    else:
+        raise ValueError(cfg.family)
+
+    return apply_norm(cfg.norm_kind, x, params.get("final_norm"))
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jax.Array,
+           ctx: ShardCtx) -> jax.Array:
+    """Encoder over precomputed frame embeddings (frontend stub)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(dt) @ params["frontend_proj"].astype(dt)
+    x = ctx.constrain(x, "batch", None, None)
+
+    def body(h, p):
+        hh = apply_norm(cfg.norm_kind, h, p.get("ln1"))
+        h = h + attn_lib.mha(p["attn"], hh, n_heads=cfg.num_heads,
+                             n_kv=cfg.num_kv_heads,
+                             head_dim=cfg.resolved_head_dim(),
+                             rope_theta=cfg.rope_theta, ctx=ctx,
+                             chunk_q=cfg.attn_chunk_q, causal=False)
+        hh = apply_norm(cfg.norm_kind, h, p.get("ln2"))
+        return h + mlp_fwd(cfg.mlp_kind, p["mlp"], hh, ctx)
+
+    x = _scan_stack(body, x, params["encoder"], cfg.remat_policy,
+                    cfg.scan_unroll)
+    return apply_norm(cfg.norm_kind, x, params.get("enc_final_norm"))
+
+
+def lm_per_sample_loss(cfg: ModelConfig, params: Params,
+                       batch: Dict[str, jax.Array], ctx: ShardCtx,
+                       seq_chunk: int = 1024) -> Tuple[jax.Array, jax.Array]:
+    """Returns (per_sample_loss (B,), mean_loss ())."""
+    memory = batch.get("frames") if cfg.is_encdec else batch.get("image_embeds")
+    h = lm_hidden(cfg, params, batch["tokens"], ctx, memory=memory)
+    w_out = unembed_matrix(params["embed"])
+    return per_sample_xent(h, w_out, batch["labels"], ctx=ctx,
+                           seq_chunk=seq_chunk)

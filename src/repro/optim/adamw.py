@@ -1,0 +1,116 @@
+"""AdamW + SGD-momentum in pure JAX (no optax in this environment).
+
+State is a pytree mirroring params; ``m``/``v`` dtype is configurable
+(bf16 halves optimizer memory for the largest MoEs — see configs).
+ES is optimizer-agnostic (paper §3.1); both optimizers are exercised in
+tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"              # adamw | sgdm
+    lr: float = 3e-4                 # base LR; scaled by schedule(step)
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    momentum: float = 0.9            # sgdm
+    grad_clip_norm: float = 1.0      # 0 disables
+    state_dtype: str = "float32"     # m/v dtype
+    compress_grads: bool = False     # int8 + error feedback (see
+    #                                  distributed/compression.py)
+
+
+class OptState(NamedTuple):
+    step: jax.Array          # () i32
+    m: PyTree                # first moment / momentum
+    v: Optional[PyTree]      # second moment (adamw only)
+
+
+def init_opt_state(cfg: OptConfig, params: PyTree) -> OptState:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dt), params)
+    v = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dt), params) \
+        if cfg.kind == "adamw" else None
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros, v=v)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float
+                        ) -> Tuple[PyTree, jax.Array]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gnorm
+
+
+def apply_updates(cfg: OptConfig, params: PyTree, grads: PyTree,
+                  state: OptState, lr_scale: jax.Array
+                  ) -> Tuple[PyTree, OptState, dict]:
+    """One optimizer step. ``lr_scale`` is schedule(step) in [0, 1]."""
+    metrics = {}
+    if cfg.grad_clip_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+        metrics["grad_norm"] = gnorm
+    step = state.step + 1
+    lr = cfg.lr * lr_scale
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    if cfg.kind == "adamw":
+        b1, b2 = cfg.beta1, cfg.beta2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g32)
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if cfg.weight_decay > 0:
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * delta
+            return newp.astype(p.dtype), m32.astype(sdt), v32.astype(sdt)
+
+        out = jax.tree.map(upd, params, grads, state.m, state.v)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, OptState(step, new_m, new_v), metrics
+
+    if cfg.kind == "sgdm":
+        def upd(p, g, m):
+            g32 = g.astype(jnp.float32)
+            if cfg.weight_decay > 0:
+                g32 = g32 + cfg.weight_decay * p.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * cfg.momentum + g32
+            newp = p.astype(jnp.float32) - lr * m32
+            return newp.astype(p.dtype), m32.astype(sdt)
+
+        out = jax.tree.map(upd, params, grads, state.m)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, OptState(step, new_m, None), metrics
+
+    raise ValueError(cfg.kind)

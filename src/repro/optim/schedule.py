@@ -1,0 +1,63 @@
+"""LR schedules as pure functions step -> scale in [0, 1].
+
+onecycle mirrors the paper's CIFAR setup (Smith & Topin); cosine+warmup is
+the LM default; polynomial-decay+warmup mirrors the ALBERT/GLUE setup.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def constant() -> Callable:
+    return lambda step: jnp.asarray(1.0, jnp.float32)
+
+
+def warmup_cosine(total_steps: int, warmup_steps: int,
+                  final_frac: float = 0.1) -> Callable:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        prog = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        prog = jnp.clip(prog, 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def onecycle(total_steps: int, pct_start: float = 0.3) -> Callable:
+    """Linear ramp to peak then cosine anneal to ~0 (OneCycle)."""
+    up = max(1, int(total_steps * pct_start))
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        ramp = step / up
+        prog = jnp.clip((step - up) / jnp.maximum(total_steps - up, 1), 0.0, 1.0)
+        down = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < up, ramp, down)
+    return fn
+
+
+def warmup_poly(total_steps: int, warmup_steps: int, power: float = 1.0,
+                final_frac: float = 0.0) -> Callable:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        poly = final_frac + (1 - final_frac) * (1 - prog) ** power
+        return jnp.where(step < warmup_steps, warm, poly)
+    return fn
+
+
+def get_schedule(name: str, total_steps: int, warmup_steps: int = 0) -> Callable:
+    if name == "constant":
+        return constant()
+    if name == "cosine":
+        return warmup_cosine(total_steps, warmup_steps)
+    if name == "onecycle":
+        return onecycle(total_steps)
+    if name == "poly":
+        return warmup_poly(total_steps, warmup_steps)
+    raise ValueError(name)

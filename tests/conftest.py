@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests see the default 1-device CPU backend (the dry-run alone uses 512
+# placeholder devices, in its own process)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks pkg

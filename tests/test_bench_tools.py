@@ -1,0 +1,52 @@
+"""Benchmark/report tooling sanity (roofline readers, model-FLOPs calc)."""
+import json
+from pathlib import Path
+
+import pytest
+
+from benchmarks.roofline import model_flops_per_chip, load_cells, DRYRUN_DIR
+from benchmarks.perf_compare import compare
+
+
+def test_model_flops_train_formula():
+    cell = {"active_params": 1e9, "kind": "train",
+            "tokens_meta": 1000, "tokens_bp": 250,
+            "mesh_info": {"n_devices": 256}}
+    want = (2e9 * 1000 + 6e9 * 250) / 256
+    assert model_flops_per_chip(cell) == pytest.approx(want)
+
+
+def test_model_flops_serve_formula():
+    cell = {"active_params": 2e9, "kind": "decode",
+            "tokens_meta": 128, "tokens_bp": 0,
+            "mesh_info": {"n_devices": 256}}
+    assert model_flops_per_chip(cell) == pytest.approx(2 * 2e9 * 128 / 256)
+
+
+@pytest.mark.skipif(not any(DRYRUN_DIR.glob("*__single__es.json")),
+                    reason="no dry-run artifacts")
+def test_dryrun_artifacts_complete_and_well_formed():
+    """All 64 runnable cells x 2 meshes have roofline terms; 16 skips."""
+    ok = skip = 0
+    for f in DRYRUN_DIR.glob("*__es.json"):
+        d = json.loads(f.read_text())
+        assert "error" not in d, (f.name, d.get("error"))
+        if "skipped" in d:
+            skip += 1
+            assert "long_500k" in f.name
+            continue
+        ok += 1
+        rt = d["roofline"]
+        for term in ("compute_s", "memory_s", "collective_s"):
+            assert rt[term] >= 0
+        assert rt["bottleneck"] in ("compute", "memory", "collective")
+        assert d["hlo_flops"] > 0
+    assert ok == 64 and skip == 16, (ok, skip)
+
+
+@pytest.mark.skipif(not any(DRYRUN_DIR.glob(
+    "llama3-8b__train_4k__single__*.json")), reason="no artifacts")
+def test_perf_compare_reads_variants():
+    rows = compare("llama3-8b", "train_4k", "single")
+    assert len(rows) >= 2
+    assert rows[0]["bound"] <= rows[-1]["bound"]   # sorted ascending

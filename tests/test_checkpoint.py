@@ -1,0 +1,87 @@
+"""Checkpointer: roundtrip, async, atomicity, keep-K, restore semantics."""
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.scores import ESScores, init_scores
+
+
+def _state(seed=0):
+    key = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(key, (8, 4)),
+                   "b": jnp.zeros((4,))},
+        "scores": init_scores(16),
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    state = _state()
+    ck.save(state, step=7, metadata={"epoch": 1})
+    restored = ck.restore(_state(seed=99), step=7)
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]),
+                               np.asarray(state["params"]["w"]))
+    np.testing.assert_allclose(np.asarray(restored["scores"].s),
+                               np.asarray(state["scores"].s))
+    assert int(restored["step"]) == 7
+    assert ck.manifest(7)["metadata"]["epoch"] == 1
+
+
+def test_async_save_and_wait(tmp_path):
+    ck = Checkpointer(tmp_path)
+    state = _state()
+    ck.save_async(state, step=3)
+    ck.wait()
+    assert ck.latest_step() == 3
+    restored = ck.restore(_state(seed=1), step=3)
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]),
+                               np.asarray(state["params"]["w"]))
+
+
+def test_keep_k_gc(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(_state(s), step=s)
+    assert ck.all_steps() == [3, 4]
+
+
+def test_no_tmp_dirs_left_behind(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(_state(), step=1)
+    assert not any(p.name.endswith(".tmp") for p in ck.dir.iterdir())
+
+
+def test_restore_latest_by_default(tmp_path):
+    ck = Checkpointer(tmp_path, keep=5)
+    for s in (10, 20):
+        ck.save(_state(s), step=s)
+    restored = ck.restore(_state(0))
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]),
+                               np.asarray(_state(20)["params"]["w"]))
+
+
+def test_restore_casts_to_template_dtype(tmp_path):
+    """Elastic/precision-change restore: leaves adopt the template dtype."""
+    ck = Checkpointer(tmp_path)
+    ck.save({"w": jnp.ones((4,), jnp.float32)}, step=1)
+    template = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    restored = ck.restore(template, step=1)
+    assert restored["w"].dtype == jnp.bfloat16
+
+
+def test_overwrite_same_step_is_atomic(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(_state(1), step=5)
+    ck.save(_state(2), step=5)
+    restored = ck.restore(_state(0), step=5)
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]),
+                               np.asarray(_state(2)["params"]["w"]))

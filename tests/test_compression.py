@@ -1,0 +1,81 @@
+"""Gradient compression: quantization error bounds + error feedback."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.compression import (quantize_int8, dequantize_int8,
+                                           compress_decompress,
+                                           wire_bytes_per_element,
+                                           ErrorFeedbackState)
+
+
+def test_quantization_error_bound():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1000,)) * 3.0
+    q, scale = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, scale) - x))
+    assert err.max() <= float(scale) * 0.5 + 1e-6
+
+
+def test_error_feedback_is_unbiased_over_time():
+    """With error feedback the CUMULATIVE compressed signal tracks the
+    cumulative true signal (residual never lost)."""
+    key = jax.random.PRNGKey(1)
+    g = jax.random.normal(key, (256,))
+    err = jnp.zeros_like(g)
+    total = jnp.zeros_like(g)
+    for _ in range(50):
+        deq, err = compress_decompress(g, err)
+        total = total + deq
+    np.testing.assert_allclose(np.asarray(total) / 50, np.asarray(g),
+                               atol=float(jnp.max(jnp.abs(g))) / 127 * 1.1)
+
+
+def test_wire_savings():
+    comp, ring = wire_bytes_per_element(16)
+    assert comp < ring / 3           # >3x wire traffic reduction at dp=16
+
+
+def test_error_feedback_state_shapes():
+    grads = {"a": jnp.ones((3, 4)), "b": jnp.ones((5,))}
+    st = ErrorFeedbackState.init(grads)
+    assert st["a"].shape == (3, 4) and st["b"].dtype == jnp.float32
+
+
+def test_compressed_allreduce_multidevice_subprocess():
+    """Runs the shard_map int8 reduce on 8 placeholder devices — checks the
+    compressed mean is within quantization tolerance of the true mean."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.distributed.compression import _compressed_mean_1d
+        import functools
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        locals_ = rng.normal(size=(8, 64)).astype(np.float32)
+        f = shard_map(functools.partial(_compressed_mean_1d,
+                                        axis_name="data", axis_size=8),
+                      mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+                      check_rep=False)
+        # feed each device ITS row: stack along sharded axis
+        out = np.asarray(f(jnp.asarray(locals_.reshape(-1))))
+        want = locals_.mean(axis=0)
+        got = out.reshape(8, 64)
+        for d in range(8):
+            err = np.abs(got[d] - want).max()
+            assert err < np.abs(locals_).max() / 127 * 4, (d, err)
+        print("OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=str(__import__("pathlib").Path(
+                           __file__).parent.parent))
+    assert "OK" in r.stdout, r.stdout + r.stderr

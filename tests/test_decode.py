@@ -1,0 +1,113 @@
+"""Serving-path correctness: prefill + decode == teacher-forced forward.
+
+For every family, the next-token logits produced by (prefill, then
+decode_step) must match the logits of a single full forward pass over the
+same token prefix (f32 compute for exactness).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.models.layers import ShardCtx
+from repro.models.model import (init_cache, prefill, decode_step,
+                                encoder_len, image_tokens)
+from repro.models.transformer import init_lm, lm_hidden
+from repro.models.losses import last_token_logits
+from repro.models.layers import unembed_matrix
+
+CTX = ShardCtx()
+FAMILY_ARCHS = ["llama3-8b", "mamba2-780m", "zamba2-2.7b",
+                "seamless-m4t-large-v2", "llama-3.2-vision-11b",
+                "arctic-480b"]
+
+
+def _f32(cfg):
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    if cfg.num_experts:
+        # dropless capacity: teacher-forced forward and incremental decode
+        # route identically only when no token is ever dropped (capacity
+        # pressure differs between a 1-token step and a full-sequence pass)
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.num_experts))
+    return cfg
+
+
+def _aux(cfg, key, B, S):
+    extra = {}
+    if cfg.family == "encdec":
+        fd = cfg.frontend_dim or cfg.d_model
+        extra["frames"] = jax.random.normal(key, (B, encoder_len(cfg, S), fd))
+    if cfg.family == "vlm":
+        extra["image_embeds"] = jax.random.normal(
+            key, (B, image_tokens(cfg), cfg.d_model))
+    return extra
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_prefill_then_decode_matches_full_forward(arch):
+    cfg = _f32(get_smoke_config(arch))
+    key = jax.random.PRNGKey(0)
+    B, P, T = 2, 12, 3
+    toks = jax.random.randint(key, (B, P + T), 0, cfg.vocab_size)
+    params, _ = init_lm(cfg, key)
+    aux = _aux(cfg, key, B, P)
+    memory = aux["frames"] if "frames" in aux else aux.get("image_embeds")
+
+    def full_logits(upto):
+        h = lm_hidden(cfg, params, toks[:, :upto], CTX, memory=memory)
+        return last_token_logits(h[:, -1:], unembed_matrix(params["embed"]),
+                                 CTX)
+
+    cache = init_cache(cfg, B, P + T, dtype=jnp.float32)
+    batch = {"tokens": toks[:, :P], **aux}
+    logits, cache = prefill(cfg, params, batch, cache, CTX)
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(full_logits(P)), atol=2e-3,
+                               rtol=1e-3)
+    for t in range(T):
+        tok = toks[:, P + t][:, None]
+        logits, cache = decode_step(cfg, params, tok, cache,
+                                    jnp.int32(P + t), CTX)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full_logits(P + t + 1)),
+                                   atol=2e-3, rtol=1e-3,
+                                   err_msg=f"{arch} step {t}")
+
+
+def test_ssd_chunked_matches_recurrent_decode():
+    """The SSD chunked scan and the O(1) recurrence are the same operator:
+    prefill final state == state after feeding tokens one by one."""
+    from repro.models import ssm as ssm_lib
+    cfg = _f32(get_smoke_config("mamba2-780m"))
+    key = jax.random.PRNGKey(1)
+    d = cfg.d_model
+    p, _ = ssm_lib.init_mamba2(key, d, state=cfg.ssm_state,
+                               head_dim=cfg.ssm_head_dim,
+                               expand=cfg.ssm_expand,
+                               conv_width=cfg.ssm_conv_width)
+    B, S = 2, 32
+    x = jax.random.normal(key, (B, S, d)) * 0.5
+    y_seq, cache = ssm_lib.mamba2_fwd(p, x, state=cfg.ssm_state,
+                                      head_dim=cfg.ssm_head_dim,
+                                      expand=cfg.ssm_expand,
+                                      chunk=16, ctx=CTX, return_state=True)
+    cache_r = ssm_lib.init_ssm_cache(B, d, state=cfg.ssm_state,
+                                     head_dim=cfg.ssm_head_dim,
+                                     expand=cfg.ssm_expand,
+                                     conv_width=cfg.ssm_conv_width)
+    ys = []
+    for t in range(S):
+        y_t, cache_r = ssm_lib.mamba2_decode(p, x[:, t:t + 1], cache_r,
+                                             state=cfg.ssm_state,
+                                             head_dim=cfg.ssm_head_dim,
+                                             expand=cfg.ssm_expand, ctx=CTX)
+        ys.append(y_t)
+    y_rec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_rec),
+                               atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(cache["ssm_state"]),
+                               np.asarray(cache_r["ssm_state"]), atol=2e-4,
+                               rtol=1e-3)

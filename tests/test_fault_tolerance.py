@@ -1,0 +1,62 @@
+"""Fault tolerance: preemption, straggler detection, elastic restore."""
+import os
+import signal
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.fault_tolerance import (PreemptionHandler,
+                                               StragglerMonitor,
+                                               elastic_restart)
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+def test_preemption_handler_sets_flag():
+    h = PreemptionHandler(signals=(signal.SIGUSR1,)).install()
+    try:
+        assert not h.preemption_requested
+        os.kill(os.getpid(), signal.SIGUSR1)
+        time.sleep(0.05)
+        assert h.preemption_requested
+    finally:
+        h.uninstall()
+
+
+def test_straggler_monitor_flags_outliers():
+    m = StragglerMonitor(threshold=2.0, warmup_steps=3)
+    for i in range(10):
+        r = m.record(i, 0.1)
+        assert r is None
+    r = m.record(10, 0.5)            # 5x the mean
+    assert r is not None and r.ratio > 2.0
+    # outlier must not pollute the running mean
+    assert abs(m.mean_step_time - 0.1) < 1e-6
+    r2 = m.record(11, 0.11)
+    assert r2 is None
+
+
+def test_straggler_monitor_warmup_no_flags():
+    m = StragglerMonitor(threshold=1.5, warmup_steps=5)
+    for i, d in enumerate([0.1, 0.9, 0.1, 0.7, 0.1]):
+        assert m.record(i, d) is None
+
+
+def test_elastic_restore_reshapes_state(tmp_path):
+    """Save under one 'mesh', restore as a new-template state (the
+    single-process analogue of losing nodes and restarting)."""
+    ck = Checkpointer(tmp_path)
+    state = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4),
+             "step": jnp.asarray(5)}
+    ck.save(state, step=5)
+
+    def make_template(mesh):
+        return {"w": jnp.zeros((4, 4), jnp.float32),
+                "step": jnp.asarray(0)}
+
+    mesh, restored = elastic_restart(ck, make_template, model_parallel=1)
+    np.testing.assert_allclose(np.asarray(restored["w"]),
+                               np.asarray(state["w"]))
+    assert mesh.size == len(jax.devices())

@@ -1,0 +1,85 @@
+"""The while-loop-aware HLO cost analyzer vs known-cost programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import analyze, HloCostModel
+from repro.launch.hlo_analysis import collective_bytes, roofline_terms
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_dot_flops_counted():
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 512), jnp.float32)
+    txt = _compiled_text(lambda x, y: x @ y, a, b)
+    res = analyze(txt)
+    want = 2 * 128 * 256 * 512
+    np.testing.assert_allclose(res["flops"], want, rtol=0.05)
+
+
+def test_scan_body_multiplied_by_trip_count():
+    """The whole point: a scanned matmul must count ~L x one matmul."""
+    L = 8
+    w = jnp.zeros((L, 64, 64), jnp.float32)
+    x = jnp.zeros((4, 64), jnp.float32)
+
+    def scanned(x, w):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h
+
+    def single(x, w0):
+        return jnp.tanh(x @ w0)
+
+    f_scan = analyze(_compiled_text(scanned, x, w))["flops"]
+    f_one = analyze(_compiled_text(single, x, w[0]))["flops"]
+    assert f_one > 0
+    np.testing.assert_allclose(f_scan, L * f_one, rtol=0.1)
+
+
+def test_trip_counts_detected():
+    L = 13
+    w = jnp.zeros((L, 32, 32), jnp.float32)
+    x = jnp.zeros((2, 32), jnp.float32)
+
+    def scanned(x, w):
+        def body(h, wi):
+            return h @ wi, None
+        return jax.lax.scan(body, x, w)[0]
+
+    res = analyze(_compiled_text(scanned, x, w))
+    assert any(abs(t - L) < 0.5 for t in res["while_trips"].values()), \
+        res["while_trips"]
+
+
+def test_roofline_terms_bottleneck_selection():
+    t = roofline_terms(flops_per_chip=197e12, bytes_per_chip=1.0,
+                       coll_bytes_per_chip=1.0)
+    assert t["bottleneck"] == "compute"
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    t = roofline_terms(flops_per_chip=1.0, bytes_per_chip=819e9 * 2,
+                       coll_bytes_per_chip=1.0)
+    assert t["bottleneck"] == "memory"
+    t = roofline_terms(flops_per_chip=1.0, bytes_per_chip=1.0,
+                       coll_bytes_per_chip=50e9 * 3)
+    assert t["bottleneck"] == "collective"
+    assert t["step_s_lower_bound"] == pytest.approx(3.0)
+
+
+def test_collective_bytes_regex_parser():
+    hlo = """
+ENTRY %main (p: f32[16]) -> f32[16] {
+  %p = f32[16]{0} parameter(0)
+  %ar = f32[16]{0} all-reduce(%p), replica_groups={}, to_apply=%add
+  ROOT %ag = bf16[32]{0} all-gather(%ar), dimensions={0}
+}
+"""
+    res = collective_bytes(hlo)
+    assert res["all-reduce"]["bytes"] == 64
+    assert res["all-gather"]["bytes"] == 64
+    assert res["all-reduce"]["count"] == 1

@@ -1,0 +1,96 @@
+"""MoE dispatch: routing, capacity, grouped-dispatch equivalence + guards."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.moe import (init_moe, moe_fwd, capacity, _auto_groups,
+                              moe_aux_loss)
+from repro.models.layers import ShardCtx
+
+CTX = ShardCtx()
+
+
+def _setup(d=32, f=64, E=8, seed=0):
+    key = jax.random.PRNGKey(seed)
+    p, axes = init_moe(key, d, f, E)
+    return p, axes, key
+
+
+def test_moe_output_shape_and_finite():
+    p, _, key = _setup()
+    x = jax.random.normal(key, (2, 16, 32))
+    y = moe_fwd(p, x, n_experts=8, top_k=2, ctx=CTX)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4).map(lambda i: 2 ** i), st.integers(0, 3))
+def test_grouped_equals_global_when_dropless(G, seed):
+    """Hillclimb invariant: grouped dispatch is bit-identical to global
+    dispatch when no token is dropped (dropless capacity)."""
+    p, _, key = _setup(seed=seed)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 7), (4, 16, 32))
+    y1 = moe_fwd(p, x, n_experts=8, top_k=2, ctx=CTX,
+                 capacity_factor=8.0, n_groups=1)
+    yG = moe_fwd(p, x, n_experts=8, top_k=2, ctx=CTX,
+                 capacity_factor=8.0, n_groups=G)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(yG), atol=1e-5)
+
+
+def test_grouped_gradients_flow():
+    p, _, key = _setup()
+    x = jax.random.normal(key, (4, 16, 32))
+
+    def loss(xx):
+        return jnp.sum(moe_fwd(p, xx, n_experts=8, top_k=2, ctx=CTX,
+                               n_groups=4) ** 2)
+
+    g = jax.grad(loss)(x)
+    assert np.isfinite(np.asarray(g)).all()
+    assert float(jnp.max(jnp.abs(g))) > 0
+
+
+def test_capacity_drops_zero_contribution():
+    """Dropped tokens contribute exactly zero to the output (no garbage)."""
+    p, _, key = _setup(E=2)
+    x = jax.random.normal(key, (1, 64, 32))
+    y_tight = moe_fwd(p, x, n_experts=2, top_k=1, ctx=CTX,
+                      capacity_factor=0.25)
+    assert np.isfinite(np.asarray(y_tight)).all()
+    # with capacity ~0, many rows must be exactly zero (dropped)
+    norms = np.linalg.norm(np.asarray(y_tight[0]), axis=-1)
+    assert (norms == 0).sum() > 0
+
+
+def test_capacity_formula():
+    assert capacity(1024, 8, 2, 1.0) == 256
+    assert capacity(1024, 8, 2, 1.25) == 320
+    assert capacity(8, 128, 2, 1.0) == 8          # floor multiple_of
+    assert capacity(4, 2, 1, 100.0) == 4          # min(c, n_tokens)
+
+
+class _FakeMeshCtx(ShardCtx):
+    pass
+
+
+def test_auto_groups_guard_small_token_counts():
+    """Decode regression guard: T/G must stay >= 2*E."""
+    import jax.sharding
+    # no mesh -> 1
+    assert _auto_groups(ShardCtx(), 1024, 128) == 1
+    # fake: emulate via a real 1-device mesh with dp axis size 1
+    mesh = jax.make_mesh((1,), ("data",))
+    ctx = ShardCtx(mesh=mesh, rules=(("batch", ("data",)),))
+    assert _auto_groups(ctx, 1024, 8) == 1
+
+
+def test_aux_loss_balanced_router_is_near_one():
+    T, E = 4096, 8
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (T, E)) * 0.01   # near-uniform router
+    _, eidx = jax.lax.top_k(logits, 2)
+    aux = float(moe_aux_loss(logits, eidx, E))
+    assert 0.8 < aux < 1.3

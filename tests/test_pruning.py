@@ -1,0 +1,78 @@
+"""Set-level pruning policies (ESWP / InfoBatch / UCB / KA / Random)."""
+import numpy as np
+import pytest
+
+from repro.core.pruning import prune_epoch
+
+
+def _stats(n=512, seed=0):
+    rng = np.random.default_rng(seed)
+    w = np.abs(rng.normal(1.0, 0.5, n)).astype(np.float32)
+    losses = np.abs(rng.normal(1.0, 0.5, n)).astype(np.float32)
+    seen = rng.integers(1, 10, n).astype(np.int32)
+    return w, losses, seen
+
+
+@pytest.mark.parametrize("method", ["eswp", "random", "ucb", "ka"])
+def test_prune_keeps_requested_fraction(method):
+    w, losses, seen = _stats()
+    rng = np.random.default_rng(1)
+    res = prune_epoch(method, rng, weights=w, losses=losses, seen=seen,
+                      prev_losses=losses * 1.1, ratio=0.25)
+    n = len(w)
+    assert abs(len(res.kept) - 0.75 * n) <= max(2, 0.05 * n) or method == "ka"
+    assert len(np.unique(res.kept)) == len(res.kept)
+    assert res.kept.min() >= 0 and res.kept.max() < n
+
+
+def test_eswp_prefers_high_weight_samples():
+    n = 1000
+    w = np.ones(n, np.float32) * 0.01
+    w[:100] = 10.0                       # heavy head
+    rng = np.random.default_rng(0)
+    res = prune_epoch("eswp", rng, weights=w, losses=w, ratio=0.5)
+    head_kept = np.sum(res.kept < 100)
+    assert head_kept >= 95                # nearly all heavy samples survive
+
+
+def test_infobatch_rescale_unbiased():
+    """InfoBatch: E[sum of rescaled kept below-mean grads] == original sum."""
+    n = 20000
+    rng0 = np.random.default_rng(0)
+    losses = np.abs(rng0.normal(1.0, 0.6, n)).astype(np.float32)
+    w = losses.copy()
+    total = 0.0
+    reps = 20
+    for r in range(reps):
+        rng = np.random.default_rng(r)
+        res = prune_epoch("infobatch", rng, weights=w, losses=losses,
+                          ratio=0.5)
+        total += res.grad_scale[res.kept].sum()
+    np.testing.assert_allclose(total / reps, n, rtol=0.02)
+
+
+def test_infobatch_only_prunes_below_mean():
+    w, losses, _ = _stats()
+    rng = np.random.default_rng(2)
+    res = prune_epoch("infobatch", rng, weights=w, losses=losses, ratio=0.9)
+    dropped = np.setdiff1d(np.arange(len(w)), res.kept)
+    assert (losses[dropped] < losses.mean()).all()
+
+
+def test_ka_move_back_readmits_worsening_samples():
+    n = 100
+    losses = np.linspace(0.1, 2.0, n).astype(np.float32)
+    prev = losses.copy()
+    prev[:10] = 0.01                      # these got WORSE since last epoch
+    rng = np.random.default_rng(0)
+    res = prune_epoch("ka", rng, weights=losses, losses=losses,
+                      prev_losses=prev, ratio=0.3)
+    for i in range(10):                   # moved back despite low loss
+        assert i in res.kept
+
+
+def test_none_method_keeps_everything():
+    w, losses, _ = _stats(64)
+    res = prune_epoch("none", np.random.default_rng(0), weights=w,
+                      losses=losses, ratio=0.5)
+    assert len(res.kept) == 64 and res.grad_scale is None

@@ -1,0 +1,89 @@
+"""Property tests for the ES score recursion (paper Prop. 3.1 / Thm. 3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scores import (init_scores, update_scores, batch_weights,
+                               explicit_weights, expansion_weights,
+                               transfer_function)
+
+betas = st.floats(0.01, 0.99)
+loss_seqs = st.lists(st.floats(1e-3, 10.0), min_size=1, max_size=30)
+
+
+@settings(max_examples=60, deadline=None)
+@given(loss_seqs, betas, betas)
+def test_prop31_recursion_equals_expansion(losses, beta1, beta2):
+    """Eq. (3.1) recursion == Eq. (3.2) EMA + difference expansion, exactly
+    (the O(beta2^t) tail kept exact in expansion_weights)."""
+    l = np.asarray(losses, np.float64)   # numpy: exact f64 regardless of x64
+    s0 = 0.25
+    w_rec = explicit_weights(l, beta1, beta2, s0)
+    w_exp = expansion_weights(l, beta1, beta2, s0)
+    np.testing.assert_allclose(float(w_rec), float(w_exp), rtol=1e-6,
+                               atol=1e-8)
+
+
+@settings(max_examples=30, deadline=None)
+@given(loss_seqs, betas, betas)
+def test_update_scores_matches_scalar_recursion(losses, beta1, beta2):
+    """The vectorized scatter update replays the scalar Eq. (3.1)."""
+    n = 4
+    scores = init_scores(n)
+    sid = jnp.asarray([2], jnp.int32)
+    s_ref, w_ref = 1.0 / n, 1.0 / n
+    for l in losses:
+        larr = jnp.asarray([l], jnp.float32)
+        w_now = batch_weights(scores, sid, larr, beta1, beta2)
+        scores = update_scores(scores, sid, larr, beta1, beta2)
+        w_ref = beta1 * s_ref + (1 - beta1) * l
+        s_ref = beta2 * s_ref + (1 - beta2) * l
+        np.testing.assert_allclose(float(w_now[0]), w_ref, rtol=1e-4)
+    np.testing.assert_allclose(float(scores.s[2]), s_ref, rtol=1e-4)
+    np.testing.assert_allclose(float(scores.w[2]), w_ref, rtol=1e-4)
+    assert int(scores.seen[2]) == len(losses)
+    # untouched rows stay at init
+    np.testing.assert_allclose(float(scores.s[0]), 1.0 / n)
+
+
+def test_es_reduces_to_loss_weighting_at_zero_betas():
+    """Paper: Eq. (3.1) with beta1=beta2=0 IS Eq. (2.3) loss weighting."""
+    scores = init_scores(8)
+    ids = jnp.arange(4, dtype=jnp.int32)
+    losses = jnp.asarray([0.5, 1.5, 3.0, 0.1])
+    w = batch_weights(scores, ids, losses, 0.0, 0.0)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(losses), rtol=1e-6)
+
+
+@settings(max_examples=60, deadline=None)
+@given(betas, betas, st.floats(1e-3, 1e3))
+def test_transfer_gain_bounded_by_one(beta1, beta2, omega):
+    """Thm. 3.2 (i): |H(iw)| <= 1 for all frequencies."""
+    g = float(transfer_function(beta1, beta2, jnp.asarray(omega)))
+    assert g <= 1.0 + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(betas, betas)
+def test_transfer_gain_high_frequency_limit(beta1, beta2):
+    """Thm. 3.2 (ii): |H(iw)| -> |beta2 - beta1| as w -> inf."""
+    g = float(transfer_function(beta1, beta2, jnp.asarray(1e9)))
+    np.testing.assert_allclose(g, abs(beta2 - beta1), rtol=1e-3, atol=1e-6)
+
+
+def test_difference_term_damps_oscillating_losses():
+    """Fig. 1's claim: an oscillating (non-improving) loss gets a *smoother*
+    weight signal under ES than under raw loss weighting."""
+    t = np.arange(200)
+    osc = 2.0 + np.sin(t * 2.5)                      # pure oscillation
+    w_es = []
+    s = 1.0
+    b1, b2 = 0.2, 0.9
+    for l in osc:
+        w_es.append(b1 * s + (1 - b1) * l)
+        s = b2 * s + (1 - b2) * l
+    w_es = np.asarray(w_es)
+    # variance of the ES weight signal < variance of raw losses
+    assert np.var(w_es[50:]) < np.var(osc[50:])
