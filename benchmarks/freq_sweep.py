@@ -1,0 +1,160 @@
+"""Scoring-frequency sweep: step time vs k for baseline / es / scheduled.
+
+Times the three step flavours at the raw jitted-step level (no Trainer
+overhead) and emits ``BENCH_freq_sweep.json``: per-step wall time as the
+scoring period k grows.  The paper's §3.3 claim is that decimating the
+scoring forward ("frequency tuning") recovers most of serial ES's extra
+cost; here that shows up as mean step time monotonically non-increasing
+in k (the scoring fraction is 1/k).
+
+    PYTHONPATH=src:. python benchmarks/freq_sweep.py [--smoke] \
+        [--ks 1,2,4,8] [--steps 48] [--out BENCH_freq_sweep.json]
+
+``--smoke`` shrinks the model and sweep for the CI benchmark-smoke job.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.es_step import ESConfig, init_train_state, make_steps
+from repro.core.frequency import FreqSchedule
+from repro.data.synthetic import SyntheticConfig, SyntheticLM
+from repro.models.layers import ShardCtx
+from repro.optim.adamw import OptConfig
+
+BENCH_MODEL = ModelConfig(
+    name="bench-freq", family="dense",
+    num_layers=4, d_model=128, num_heads=4, num_kv_heads=4, head_dim=32,
+    d_ff=512, vocab_size=512, tie_embeddings=True,
+    norm_kind="rmsnorm", mlp_kind="swiglu",
+    remat_policy="none", fsdp_params=False, attn_chunk_q=0,
+)
+
+SMOKE_MODEL = dataclasses.replace(BENCH_MODEL, name="bench-freq-smoke",
+                                  num_layers=2, d_model=64, d_ff=256,
+                                  num_heads=2, num_kv_heads=2,
+                                  vocab_size=256)
+
+
+def _make_batches(n_batches: int, meta_batch: int, seq_len: int,
+                  vocab: int) -> List[Dict[str, jax.Array]]:
+    ds = SyntheticLM(SyntheticConfig(n_samples=n_batches * meta_batch,
+                                     seq_len=seq_len,
+                                     vocab_size=min(vocab, 64), seed=0))
+    return [{k: jnp.asarray(v) for k, v in
+             ds.batch(np.arange(i * meta_batch, (i + 1) * meta_batch)).items()}
+            for i in range(n_batches)]
+
+
+def _time_step(step_fn: Callable, state, batches: List[Dict[str, jax.Array]],
+               steps: int, reps: int, warmup: int) -> float:
+    """Mean ms/step, min over ``reps`` timed passes (state threads through)."""
+    nb = len(batches)
+    for i in range(warmup):
+        state, m = step_fn(state, batches[i % nb])
+    jax.block_until_ready(m)
+    means = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for i in range(steps):
+            state, m = step_fn(state, batches[i % nb])
+        jax.block_until_ready(m)
+        means.append((time.perf_counter() - t0) / steps * 1e3)
+    return min(means)
+
+
+def run_sweep(args) -> Dict:
+    model_cfg = SMOKE_MODEL if args.smoke else BENCH_MODEL
+    meta_batch = args.meta_batch
+    # the monotonicity flag means "as k grows": sweep in sorted order
+    ks = sorted({int(k) for k in args.ks.split(",")})
+    es_cfg = ESConfig(method="es", minibatch=args.minibatch,
+                      n_train=args.n_batches * meta_batch, seq_chunk=0)
+    opt_cfg = OptConfig(kind="adamw", lr=1e-3)
+    schedule = lambda s: jnp.asarray(1.0, jnp.float32)  # noqa: E731
+    ctx = ShardCtx()
+    batches = _make_batches(args.n_batches, meta_batch, args.seq_len,
+                            model_cfg.vocab_size)
+    key = jax.random.PRNGKey(0)
+
+    def fresh_state():
+        return init_train_state(model_cfg, es_cfg, opt_cfg, key, meta_batch)
+
+    rows = []
+
+    def bench(name: str, k, step_fn):
+        ms = _time_step(jax.jit(step_fn, donate_argnums=0), fresh_state(),
+                        batches, args.steps, args.reps, warmup=max(ks) + 2)
+        rows.append({"method": name, "k": k, "mean_step_ms": round(ms, 4),
+                     "scoring_fraction": (1.0 / k) if k else 1.0})
+        print(f"{name:<10} k={k!s:<5} {ms:8.3f} ms/step", flush=True)
+        return ms
+
+    base_steps = make_steps(model_cfg, es_cfg, opt_cfg, schedule, ctx)
+    bench("baseline", None, base_steps["baseline_step"])
+    bench("es", 1, base_steps["es_step"])
+
+    sched_ms = []
+    for k in ks:
+        steps_k = make_steps(model_cfg, es_cfg, opt_cfg, schedule, ctx,
+                             freq=FreqSchedule(kind="fixed", k=k))
+        sched_ms.append(bench("scheduled", k, steps_k["scheduled_step"]))
+
+    monotone = all(b <= a * (1.0 + args.tolerance)
+                   for a, b in zip(sched_ms, sched_ms[1:]))
+    return {
+        "bench": "freq_sweep",
+        "config": {
+            "model": model_cfg.name, "smoke": args.smoke,
+            "meta_batch": meta_batch, "minibatch": args.minibatch,
+            "seq_len": args.seq_len, "steps": args.steps, "reps": args.reps,
+            "ks": ks, "backend": jax.default_backend(),
+        },
+        "rows": rows,
+        "scheduled_monotone_non_increasing": monotone,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized model and sweep")
+    ap.add_argument("--ks", default="1,2,4,8",
+                    help="comma-separated scoring periods")
+    ap.add_argument("--steps", type=int, default=48,
+                    help="timed steps per pass (use a multiple of max k)")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--meta-batch", type=int, default=32)
+    ap.add_argument("--minibatch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--n-batches", type=int, default=8)
+    ap.add_argument("--tolerance", type=float, default=0.0,
+                    help="slack for the monotonicity check")
+    ap.add_argument("--out", default="BENCH_freq_sweep.json")
+    args = ap.parse_args()
+    if args.smoke:
+        args.steps = min(args.steps, 24)
+        args.seq_len = min(args.seq_len, 32)
+        args.meta_batch = min(args.meta_batch, 16)
+        # the smoke deltas between adjacent k are a few percent of step
+        # time; more min-of-means passes keep the sweep noise-proof
+        args.reps = max(args.reps, 5)
+
+    out = run_sweep(args)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out} "
+          f"(monotone={out['scheduled_monotone_non_increasing']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -43,6 +43,10 @@ def main():
     ap.add_argument("--meta-batch", type=int, default=32)
     ap.add_argument("--minibatch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--score-every", type=int, default=1,
+                    help="k: scoring forward every k-th step (paper §3.3)")
+    ap.add_argument("--freq-schedule", default="fixed",
+                    choices=["fixed", "warmup", "adaptive"])
     ap.add_argument("--ckpt", default="/tmp/repro_es_ckpt")
     args = ap.parse_args()
 
@@ -56,6 +60,7 @@ def main():
         minibatch=args.minibatch,
         n_samples=4096, seq_len=args.seq_len,
         lr=6e-4, schedule="cosine",
+        score_every=args.score_every, freq_schedule=args.freq_schedule,
         ckpt_dir=args.ckpt, ckpt_every_steps=50,
         anneal_ratio=0.0,
     )
@@ -65,7 +70,8 @@ def main():
     out = trainer.train()
     print(f"done: steps={out['steps']} loss={out['final_loss']:.4f} "
           f"wall={out['wall_time']:.1f}s "
-          f"bp_samples={int(out['bp_samples_total'])}")
+          f"bp_samples={int(out['bp_samples_total'])} "
+          f"scoring_steps={int(out['scoring_steps_total'])}")
     print(f"checkpoints under {args.ckpt}: kill and re-run to resume.")
 
 

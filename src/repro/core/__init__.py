@@ -3,4 +3,5 @@ from .scores import ESScores, init_scores, update_scores, batch_weights
 from .selection import select_minibatch, gumbel_topk_select, topk_select
 from .pruning import prune_epoch, PruneResult
 from .annealing import AnnealSchedule
+from .frequency import FreqSchedule, adaptive_period, make_schedule
 from .es_step import ESConfig, TrainState, init_train_state, make_steps

@@ -1,6 +1,6 @@
 """The ES(WP) train step — the paper's technique as a first-class jitted op.
 
-Three step flavours (all pjit-able, static shapes, no host sync):
+Four step flavours (all pjit-able, static shapes, no host sync):
 
   baseline_step   : standard batched training on the full meta-batch
                     (paper baseline; also the annealing branch).
@@ -12,11 +12,23 @@ Three step flavours (all pjit-able, static shapes, no host sync):
                     When b == B (set-level-only ESWP) the scoring forward is
                     FUSED into the training forward — no extra FP, matching
                     the paper's "can be omitted" remark (§3.3).
+  scheduled_step  : frequency-tuned ES (§3.3) — runs the scoring forward
+                    only when ``FreqSchedule.should_score(opt.step)`` fires;
+                    in between, selection reuses the (stale) store weights
+                    via a runtime lax.cond, so skipped steps pay only the
+                    mini-batch fwd+bwd.  With a k=1 schedule the decimation
+                    is a no-op and the call delegates to ``es_step`` —
+                    bit-identical by construction.
   pipelined_step  : beyond-paper — scores meta-batch t+1 concurrently with
                     the grad step on the mini-batch selected (last step) from
                     meta-batch t.  The two subgraphs share no data edges, so
                     XLA overlaps them; selection weights are one step stale
                     (ablated in benchmarks).
+
+Score-store updates go through the fused Pallas ``score_update`` kernel
+(one kernel for the three Eq. 3.1 scatters) on TPU; off-TPU the ops
+wrapper falls back to the XLA scatter path (faster there than interpret
+mode).  ``ESConfig.fused_scores=False`` forces the scatter path everywhere.
 
 Batch dict: tokens (B,S) i32, labels (B,S) i32 (-1 = masked),
 sample_ids (B,) i32, optional grad_scale (B,) f32 (InfoBatch rescale),
@@ -34,6 +46,7 @@ from ..configs.base import ModelConfig
 from ..models.layers import ShardCtx
 from ..models.transformer import lm_per_sample_loss
 from ..optim.adamw import OptConfig, OptState, init_opt_state, apply_updates
+from .frequency import FreqSchedule
 from .scores import ESScores, init_scores, update_scores, batch_weights
 from .selection import select_minibatch
 
@@ -49,6 +62,7 @@ class ESConfig:
     n_train: int = 1 << 20        # score-store size
     pipelined: bool = False       # beyond-paper overlap variant
     seq_chunk: int = 1024         # xent seq chunking
+    fused_scores: bool = True     # Pallas score_update kernel vs XLA scatter
 
 
 @jax.tree_util.register_dataclass
@@ -105,11 +119,38 @@ def _loss_fn(model_cfg: ModelConfig, es_cfg: ESConfig, ctx: ShardCtx):
 
 
 def make_steps(model_cfg: ModelConfig, es_cfg: ESConfig, opt_cfg: OptConfig,
-               schedule: Callable, ctx: ShardCtx
+               schedule: Callable, ctx: ShardCtx,
+               freq: Optional[FreqSchedule] = None
                ) -> Dict[str, Callable]:
-    """Build {baseline_step, es_step, pipelined_step}(state, batch)."""
+    """Build {baseline_step, es_step, scheduled_step, pipelined_step}."""
     loss_fn = _loss_fn(model_cfg, es_cfg, ctx)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    freq = freq or FreqSchedule()          # default: score every step
+
+    def _update_scores(scores: ESScores, ids: jax.Array,
+                       losses: jax.Array) -> ESScores:
+        if es_cfg.fused_scores:
+            from ..kernels.score_update.ops import update_scores_fused
+            return update_scores_fused(scores, ids, losses,
+                                       es_cfg.beta1, es_cfg.beta2)
+        return update_scores(scores, ids, losses, es_cfg.beta1, es_cfg.beta2)
+
+    def _score_meta_batch(params: PyTree, scores: ESScores,
+                          batch: Dict[str, jax.Array]
+                          ) -> Tuple[jax.Array, ESScores, jax.Array]:
+        """Scoring forward + Eq. (3.1): -> (weights, new scores, meta loss).
+
+        Shared by es_step and scheduled_step's scoring branch so the two
+        stay bit-identical at scoring steps.
+        """
+        meta_losses, _ = lm_per_sample_loss(
+            model_cfg, jax.lax.stop_gradient(params), batch, ctx,
+            seq_chunk=es_cfg.seq_chunk)
+        meta_losses = jax.lax.stop_gradient(meta_losses)
+        w = batch_weights(scores, batch["sample_ids"], meta_losses,
+                          es_cfg.beta1, es_cfg.beta2)
+        new_scores = _update_scores(scores, batch["sample_ids"], meta_losses)
+        return w, new_scores, jnp.mean(meta_losses)
 
     def _optim(state: TrainState, grads: PyTree,
                metrics: Dict[str, jax.Array]):
@@ -140,9 +181,8 @@ def make_steps(model_cfg: ModelConfig, es_cfg: ESConfig, opt_cfg: OptConfig,
         metrics = {"loss": mean, "bp_samples": jnp.asarray(
             batch["tokens"].shape[0], jnp.float32)}
         new_params, new_opt, new_err = _optim(state, grads, metrics)
-        scores = update_scores(state.scores, batch["sample_ids"],
-                               jax.lax.stop_gradient(per_sample),
-                               es_cfg.beta1, es_cfg.beta2)
+        scores = _update_scores(state.scores, batch["sample_ids"],
+                                jax.lax.stop_gradient(per_sample))
         return dataclasses.replace(state, params=new_params, opt=new_opt,
                                    scores=scores, grad_err=new_err), metrics
 
@@ -155,17 +195,9 @@ def make_steps(model_cfg: ModelConfig, es_cfg: ESConfig, opt_cfg: OptConfig,
             # set-level-only ESWP: fuse scoring into the training forward
             return baseline_step(state, batch)
 
-        # (1) scoring forward (no grad)
-        meta_losses, _ = lm_per_sample_loss(
-            model_cfg, jax.lax.stop_gradient(state.params), batch, ctx,
-            seq_chunk=es_cfg.seq_chunk)
-        meta_losses = jax.lax.stop_gradient(meta_losses)
-
-        # (2) Eq. (3.1): weights from s(t-1) + current losses, then update
-        w = batch_weights(state.scores, batch["sample_ids"], meta_losses,
-                          es_cfg.beta1, es_cfg.beta2)
-        scores = update_scores(state.scores, batch["sample_ids"], meta_losses,
-                               es_cfg.beta1, es_cfg.beta2)
+        # (1)+(2) scoring forward + Eq. (3.1) weight/score update
+        w, scores, meta_loss = _score_meta_batch(state.params, state.scores,
+                                                 batch)
 
         # (3) mini-batch selection (replicated PRNG: same on all hosts)
         rng, sel_key = jax.random.split(state.rng)
@@ -175,11 +207,60 @@ def make_steps(model_cfg: ModelConfig, es_cfg: ESConfig, opt_cfg: OptConfig,
         # (4) grad step on the mini-batch
         (mean, _), grads = grad_fn(state.params, sel)
         metrics = {
-            "loss": jnp.mean(meta_losses),
+            "loss": meta_loss,
             "sel_loss": mean,
             "bp_samples": jnp.asarray(b, jnp.float32),
             "w_mean": jnp.mean(w),
             "w_max": jnp.max(w),
+        }
+        new_params, new_opt, new_err = _optim(state, grads, metrics)
+        return dataclasses.replace(state, params=new_params, opt=new_opt,
+                                   scores=scores, rng=rng,
+                                   grad_err=new_err), metrics
+
+    # ------------------------------------------------------------------
+    def scheduled_step(state: TrainState, batch: Dict[str, jax.Array]
+                       ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        """Frequency-tuned ES: decimate the scoring forward to the steps the
+        ``FreqSchedule`` fires on; in between, select with the stale store
+        weights.  The branch is a runtime lax.cond on the optimizer step, so
+        one compiled graph serves both phases and skipped steps never pay
+        the meta-batch forward."""
+        B = batch["tokens"].shape[0]
+        b = min(es_cfg.minibatch, B)
+        if b >= B:
+            # set-level-only ESWP: scoring rides the training forward for
+            # free, so there is nothing to decimate
+            return baseline_step(state, batch)
+        if freq.always_scores():
+            return es_step(state, batch)   # k=1: decimation is a no-op
+
+        ids = batch["sample_ids"]
+
+        def _score(_):
+            return _score_meta_batch(state.params, state.scores, batch)
+
+        def _stale(_):
+            # reuse the last Eq. (3.1) weights for this batch's samples
+            return (state.scores.w[ids], state.scores,
+                    jnp.mean(state.scores.s[ids]))
+
+        do_score = freq.should_score(state.opt.step)
+        w, scores, meta_loss = jax.lax.cond(do_score, _score, _stale, None)
+
+        rng, sel_key = jax.random.split(state.rng)
+        idx = select_minibatch(es_cfg.method, sel_key, w, b)
+        sel = _gather_batch(batch, idx)
+
+        (mean, _), grads = grad_fn(state.params, sel)
+        metrics = {
+            # skipped steps have no meta loss; log the measured sel loss
+            "loss": jnp.where(do_score, meta_loss, mean),
+            "sel_loss": mean,
+            "bp_samples": jnp.asarray(b, jnp.float32),
+            "w_mean": jnp.mean(w),
+            "w_max": jnp.max(w),
+            "scored": do_score.astype(jnp.float32),
         }
         new_params, new_opt, new_err = _optim(state, grads, metrics)
         return dataclasses.replace(state, params=new_params, opt=new_opt,
@@ -211,8 +292,7 @@ def make_steps(model_cfg: ModelConfig, es_cfg: ESConfig, opt_cfg: OptConfig,
         nxt_losses = jax.lax.stop_gradient(nxt_losses)
         w_next = batch_weights(state.scores, nxt["sample_ids"], nxt_losses,
                                es_cfg.beta1, es_cfg.beta2)
-        scores = update_scores(state.scores, nxt["sample_ids"], nxt_losses,
-                               es_cfg.beta1, es_cfg.beta2)
+        scores = _update_scores(state.scores, nxt["sample_ids"], nxt_losses)
 
         metrics = {"loss": jnp.mean(nxt_losses), "sel_loss": mean,
                    "bp_samples": jnp.asarray(b, jnp.float32)}
@@ -222,4 +302,5 @@ def make_steps(model_cfg: ModelConfig, es_cfg: ESConfig, opt_cfg: OptConfig,
                                    grad_err=new_err), metrics
 
     return {"baseline_step": baseline_step, "es_step": es_step,
+            "scheduled_step": scheduled_step,
             "pipelined_step": pipelined_step}

@@ -1,0 +1,191 @@
+"""Scoring-frequency schedules for Evolved Sampling (paper §3.3).
+
+ES decouples *scoring* (a forward pass on the meta-batch) from *training*
+(fwd+bwd on the selected mini-batch).  The paper notes that ES "enables
+flexible frequency tuning": because the weight signal w(t) is the output of
+the Eq. (3.1) low-pass filter, it cannot change faster than the filter's
+response time, so scoring every step is wasted work — the meta-batch forward
+can be decimated to every k-th step with stale weights reused in between.
+
+``FreqSchedule`` provides three variants:
+
+  fixed    : score every k-th step (k = 1 reproduces serial ES exactly).
+  warmup   : score every step for ``warmup_steps`` (the score store is still
+             cold), then ramp the period linearly from 1 to k over
+             ``ramp_steps``.
+  adaptive : resolve the period from the Thm. 3.2 frequency response
+             |H(i w)| (``core.theory.transfer_gain``): pick the largest
+             period whose Nyquist rate still retains a ``gain_floor``
+             fraction of the filter's total passband energy.  High beta2
+             (slow filter) => long period; beta1 ~ beta2 (differences
+             suppressed) => the response is flat and short periods buy
+             nothing.
+
+``period_at``/``should_score`` are pure jnp on the step counter, so they
+trace into the jitted train step (``core.es_step.scheduled_step``) with no
+host sync; the adaptive search itself runs once, host-side, at construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .theory import transfer_gain
+
+Step = Union[int, jax.Array]
+
+KINDS = ("fixed", "warmup", "adaptive")
+
+
+@functools.lru_cache(maxsize=None)
+def adaptive_period(beta1: float, beta2: float, gain_floor: float,
+                    k_cap: int, grid: int = 2048) -> int:
+    """Largest period p <= k_cap retaining >= gain_floor of passband energy.
+
+    Scoring every p steps resolves loss-signal frequencies up to the Nyquist
+    rate w_p = pi / p; components above it are lost to the (stale) weights.
+    We keep the largest p whose retained fraction
+
+        r(p) = int_0^{pi/p} |H(i w)| dw  /  int_0^pi |H(i w)| dw
+
+    (|H| from Thm. 3.2) stays >= gain_floor.  r is non-increasing in p, so
+    this is a simple scan; p is clipped to [1, k_cap].
+    """
+    if k_cap <= 1:
+        return 1
+    omega = np.linspace(0.0, np.pi, grid)
+    gain = transfer_gain(beta1, beta2, omega)
+    cum = np.concatenate([[0.0], np.cumsum((gain[1:] + gain[:-1]) * 0.5
+                                           * np.diff(omega))])
+    total = cum[-1]
+    if total <= 0.0:
+        return k_cap
+    best = 1
+    for p in range(2, k_cap + 1):
+        cut = np.interp(np.pi / p, omega, cum)
+        if cut / total >= gain_floor:
+            best = p
+        else:
+            break
+    return best
+
+
+@dataclasses.dataclass(frozen=True)
+class FreqSchedule:
+    """Scoring period as a function of the (0-indexed) optimizer step."""
+    kind: str = "fixed"        # fixed | warmup | adaptive
+    k: int = 1                 # target / maximum scoring period
+    warmup_steps: int = 0      # warmup: score every step this long
+    ramp_steps: int = 0        # warmup: linear 1 -> k ramp length
+    beta1: float = 0.2         # adaptive: ES filter coefficients
+    beta2: float = 0.9
+    gain_floor: float = 0.5    # adaptive: retained passband fraction
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown freq schedule kind {self.kind!r}")
+        if self.k < 1:
+            raise ValueError(f"scoring period k must be >= 1, got {self.k}")
+
+    # -- resolved target period (host-side, static per schedule) ----------
+    @functools.cached_property
+    def target_period(self) -> int:
+        if self.kind == "adaptive":
+            return adaptive_period(self.beta1, self.beta2, self.gain_floor,
+                                   self.k)
+        return self.k
+
+    def always_scores(self) -> bool:
+        """True iff every step scores — scheduled_step inlines serial ES.
+
+        The warmup ramp tops out at k == target_period, so target_period == 1
+        implies period 1 everywhere for every kind.
+        """
+        return self.target_period == 1
+
+    # -- jnp-traceable step functions -------------------------------------
+    def period_at(self, step: Step) -> jax.Array:
+        """Scoring period at ``step`` — works on ints and traced arrays."""
+        k = self.target_period
+        if self.kind == "fixed" or self.kind == "adaptive":
+            return jnp.full_like(jnp.asarray(step, jnp.int32), k)
+        # warmup: 1 during warmup, then linear ramp to k, then k
+        step = jnp.asarray(step, jnp.int32)
+        ramp = max(self.ramp_steps, 1)
+        frac = (step - self.warmup_steps).astype(jnp.float32) / ramp
+        frac = jnp.clip(frac, 0.0, 1.0)
+        p = jnp.round(1.0 + frac * (k - 1)).astype(jnp.int32)
+        return jnp.maximum(p, 1)
+
+    @functools.cached_property
+    def _warmup_plan(self):
+        """Greedy firing table for the warmup+ramp window (+ steady anchor).
+
+        ``step % period == 0`` is only a valid decimation for a constant
+        period: with a ramping period the moduli grids shift and consecutive
+        firings can drift further apart than k.  Instead, fire greedily —
+        score step t iff t - last_fired >= period(t) — over the static
+        [0, warmup+ramp) window, precomputed host-side; afterwards the
+        steady k-grid is anchored at the table's last firing so the gap
+        across the seam is exactly k.  Max gap anywhere: target_period.
+        """
+        horizon = self.warmup_steps + self.ramp_steps
+        k = self.target_period
+        ramp = max(self.ramp_steps, 1)
+        t = np.arange(max(horizon, 1))
+        frac = np.clip((t - self.warmup_steps) / ramp, 0.0, 1.0)
+        periods = np.maximum(np.round(1.0 + frac * (k - 1)), 1).astype(int)
+        fires = np.zeros(max(horizon, 1), bool)
+        last = -10 ** 9
+        for i in range(horizon):
+            if i - last >= periods[i]:
+                fires[i] = True
+                last = i
+        anchor = last if horizon else 0   # steady grid: anchor + m*k
+        # keep the table as numpy: converting under a jit trace would cache
+        # a tracer in this property and leak it to later calls
+        return fires, int(anchor), horizon
+
+    def should_score(self, step: Step) -> jax.Array:
+        """Bool: does ``step`` run the scoring forward?  step 0 always does."""
+        step = jnp.asarray(step, jnp.int32)
+        if self.kind != "warmup" or self.target_period == 1:
+            return (step % self.target_period) == 0
+        table, anchor, horizon = self._warmup_plan
+        in_table = step < horizon
+        table_fire = jnp.asarray(table)[jnp.clip(step, 0,
+                                                 max(horizon - 1, 0))]
+        steady_fire = ((step - anchor) % self.target_period) == 0
+        return jnp.where(in_table, table_fire, steady_fire)
+
+    # -- host-side bookkeeping --------------------------------------------
+    def scoring_steps(self, total_steps: int) -> int:
+        """How many of steps [0, total_steps) run the scoring forward."""
+        steps = np.arange(total_steps)
+        return int(np.asarray(jax.jit(self.should_score)(steps)).sum())
+
+
+ADAPTIVE_DEFAULT_CAP = 64
+
+
+def make_schedule(kind: str, k: int, *, steps_per_epoch: int = 0,
+                  beta1: float = 0.2, beta2: float = 0.9,
+                  gain_floor: float = 0.5) -> FreqSchedule:
+    """Trainer-facing constructor with sensible warmup/adaptive defaults."""
+    if kind == "warmup":
+        return FreqSchedule(kind="warmup", k=k,
+                            warmup_steps=max(steps_per_epoch // 2, 1),
+                            ramp_steps=max(steps_per_epoch, 1),
+                            beta1=beta1, beta2=beta2)
+    if kind == "adaptive" and k <= 1:
+        # choosing `adaptive` while leaving --score-every at its default of
+        # 1 would cap the period search at 1 and silently disable the
+        # schedule; open the cap and let the passband heuristic decide
+        k = ADAPTIVE_DEFAULT_CAP
+    return FreqSchedule(kind=kind, k=k, beta1=beta1, beta2=beta2,
+                        gain_floor=gain_floor)

@@ -1,11 +1,19 @@
-"""Jitted wrapper with backend dispatch for the fused score update."""
-from __future__ import annotations
+"""Jitted wrapper with backend dispatch for the fused score update.
 
-from typing import Tuple
+On TPU the fused Pallas kernel replaces the three XLA scatters with one
+in-place VMEM pass.  Off-TPU there is no compiled Pallas path and the
+interpret-mode emulation of the serial update loop is an order of magnitude
+SLOWER than the scatters it fuses, so the wrapper falls back to the pure-JAX
+``core.scores.update_scores`` instead; interpret mode must be requested
+explicitly (``interpret=True`` — tests do, to pin kernel semantics).  The
+two paths agree exactly on the train path's unique-id batches (see
+``ref.py`` for the duplicate-id divergence, covered by tests).
+"""
+from __future__ import annotations
 
 import jax
 
-from ...core.scores import ESScores
+from ...core.scores import ESScores, update_scores
 from .score_update import fused_score_update
 
 
@@ -17,7 +25,9 @@ def update_scores_fused(scores: ESScores, ids: jax.Array, losses: jax.Array,
                         beta1: float, beta2: float,
                         interpret: bool | None = None) -> ESScores:
     if interpret is None:
-        interpret = not _on_tpu()
+        if not _on_tpu():
+            return update_scores(scores, ids, losses, beta1, beta2)
+        interpret = False
     s, w, seen = fused_score_update(scores.s, scores.w, scores.seen, ids,
                                     losses, beta1=beta1, beta2=beta2,
                                     interpret=interpret)

@@ -24,6 +24,7 @@ from ..configs.base import ModelConfig
 from ..configs.registry import get_config, get_smoke_config, list_archs
 from ..core.annealing import AnnealSchedule
 from ..core.es_step import ESConfig, TrainState, init_train_state, make_steps
+from ..core.frequency import make_schedule
 from ..core.pruning import prune_epoch
 from ..checkpoint.checkpointer import Checkpointer
 from ..data.loader import IndexLoader
@@ -54,6 +55,10 @@ class TrainerConfig:
     optimizer: str = "adamw"
     seed: int = 0
     pipelined: bool = False
+    score_every: int = 1          # k: scoring forward every k-th step (§3.3)
+    freq_schedule: str = "fixed"  # fixed | warmup | adaptive
+    gain_floor: float = 0.5       # adaptive: retained Thm. 3.2 passband
+    fused_scores: bool = True     # Pallas score_update kernel in the step
     grad_compression: bool = False   # int8 EF gradient compression
     ckpt_dir: Optional[str] = None
     ckpt_every_steps: int = 50
@@ -90,7 +95,7 @@ class Trainer:
                                beta1=beta1, beta2=beta2,
                                minibatch=minibatch,
                                n_train=len(self.ds), pipelined=tc.pipelined,
-                               seq_chunk=0)
+                               seq_chunk=0, fused_scores=tc.fused_scores)
         self.sel_method = sel_method
         self.opt_cfg = OptConfig(kind=tc.optimizer, lr=tc.lr,
                                  state_dtype=self.model_cfg.optimizer_dtype,
@@ -99,15 +104,20 @@ class Trainer:
         self.schedule = get_schedule(tc.schedule,
                                      steps_per_epoch * tc.epochs,
                                      warmup_steps=steps_per_epoch // 2)
+        self.freq = make_schedule(tc.freq_schedule, tc.score_every,
+                                  steps_per_epoch=steps_per_epoch,
+                                  beta1=beta1, beta2=beta2,
+                                  gain_floor=tc.gain_floor)
         self.ctx = ShardCtx()
         self.steps = make_steps(self.model_cfg, self.es_cfg, self.opt_cfg,
-                                self.schedule, self.ctx)
+                                self.schedule, self.ctx, freq=self.freq)
         self.anneal = AnnealSchedule.from_ratio(tc.epochs, tc.anneal_ratio)
         self.ckpt = Checkpointer(tc.ckpt_dir) if tc.ckpt_dir else None
         self.preempt = PreemptionHandler().install()
         self.straggler = StragglerMonitor()
         self.metrics_log: list = []
         self.bp_samples_total = 0.0
+        self.scoring_steps_total = 0.0
         self.prev_epoch_losses: Optional[np.ndarray] = None
 
         key = jax.random.PRNGKey(tc.seed)
@@ -118,7 +128,10 @@ class Trainer:
         if self.ckpt and self.ckpt.latest_step() is not None:
             self._resume()
 
-        self._jit_es = jax.jit(self.steps["es_step"], donate_argnums=0)
+        # scheduled_step delegates to es_step when the schedule fires every
+        # step, so it is THE batch-level entry point; es_step stays exposed
+        # for parity tests and external callers
+        self._jit_es = jax.jit(self.steps["scheduled_step"], donate_argnums=0)
         self._jit_base = jax.jit(self.steps["baseline_step"], donate_argnums=0)
         self._jit_pipe = jax.jit(self.steps["pipelined_step"],
                                  donate_argnums=0)
@@ -131,6 +144,7 @@ class Trainer:
         self.global_step = md.get("global_step", step)
         self.start_epoch = md.get("epoch", 0)
         self.bp_samples_total = md.get("bp_samples_total", 0.0)
+        self.scoring_steps_total = md.get("scoring_steps_total", 0.0)
         print(f"[resume] step={self.global_step} epoch={self.start_epoch}")
 
     def _checkpoint(self, epoch: int, final: bool = False) -> None:
@@ -138,6 +152,7 @@ class Trainer:
             return
         md = {"global_step": self.global_step, "epoch": epoch,
               "bp_samples_total": self.bp_samples_total,
+              "scoring_steps_total": self.scoring_steps_total,
               "method": self.tc.method}
         if final:
             self.ckpt.save(self.state, self.global_step, md)
@@ -191,8 +206,11 @@ class Trainer:
                 self.straggler.record(self.global_step, dur)
                 self.global_step += 1
                 self.bp_samples_total += float(m["bp_samples"])
+                scored = float(m.get("scored", 1.0))
+                self.scoring_steps_total += scored
                 rec = {"step": self.global_step, "epoch": epoch,
                        "loss": float(m["loss"]),
+                       "scored": scored,
                        "bp_samples_total": self.bp_samples_total,
                        "step_time": dur}
                 self.metrics_log.append(rec)
@@ -216,6 +234,7 @@ class Trainer:
             if self.metrics_log else float("nan"),
             "steps": self.global_step,
             "bp_samples_total": self.bp_samples_total,
+            "scoring_steps_total": self.scoring_steps_total,
             "wall_time": time.time() - t_start,
             "straggler_reports": len(self.straggler.reports),
             "metrics": self.metrics_log,
@@ -254,6 +273,18 @@ def main() -> None:
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--pipelined", action="store_true")
+    ap.add_argument("--score-every", type=int, default=1,
+                    help="k: run the scoring forward every k-th step (§3.3)")
+    ap.add_argument("--freq-schedule", default="fixed",
+                    choices=["fixed", "warmup", "adaptive"],
+                    help="scoring-frequency schedule (core/frequency.py); "
+                         "adaptive treats --score-every as the period cap "
+                         "(64 when left at 1)")
+    ap.add_argument("--gain-floor", type=float, default=0.5,
+                    help="adaptive schedule: retained Thm. 3.2 passband")
+    ap.add_argument("--no-fused-scores", dest="fused_scores",
+                    action="store_false",
+                    help="use XLA scatter instead of the Pallas score kernel")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log", dest="log_path", default=None)
     ap.add_argument("--max-steps", type=int, default=None)
@@ -263,6 +294,10 @@ def main() -> None:
                        minibatch=args.minibatch, n_samples=args.n_samples,
                        seq_len=args.seq_len, lr=args.lr,
                        pipelined=args.pipelined, ckpt_dir=args.ckpt_dir,
+                       score_every=args.score_every,
+                       freq_schedule=args.freq_schedule,
+                       gain_floor=args.gain_floor,
+                       fused_scores=args.fused_scores,
                        log_path=args.log_path, max_steps=args.max_steps)
     out = Trainer(tc).train()
     print(json.dumps({k: v for k, v in out.items() if k != "metrics"},

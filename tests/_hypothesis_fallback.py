@@ -1,0 +1,85 @@
+"""Deterministic stand-in for the tiny slice of hypothesis the suite uses.
+
+When ``hypothesis`` is installed (CI installs it from requirements-dev.txt)
+the real library is used and this module is never imported.  In hermetic
+environments without it, tests fall back to this shim so the tier-1 suite
+still collects and runs: ``@given`` becomes a seeded sweep of
+``max_examples`` random draws per test (seeded from the test name, so
+failures are reproducible), instead of hypothesis' adaptive search.
+
+Covered API: given, settings(max_examples, deadline), strategies.floats /
+integers / lists / sampled_from, and Strategy.map.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw          # rng -> value
+
+    def example(self, rng):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+
+class _StrategiesModule:
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elements.example(rng) for _ in range(size)]
+        return _Strategy(draw)
+
+
+st = _StrategiesModule()
+strategies = st
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Applied above @given: stores max_examples on the given-wrapper."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()) & 0xFFFFFFFF)
+            for _ in range(n):
+                drawn = [s.example(rng) for s in strats]
+                fn(*args, *drawn, **kwargs)
+        # hide the drawn parameters from pytest's fixture resolution
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco

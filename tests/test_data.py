@@ -1,7 +1,10 @@
 """Data pipeline: determinism, host sharding, pruning hooks."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:          # hermetic env: deterministic shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.data.synthetic import SyntheticConfig, SyntheticLM
 from repro.data.loader import IndexLoader

@@ -1,0 +1,216 @@
+"""Frequency-tuned ES: FreqSchedule semantics + scheduled_step parity.
+
+The tentpole contract: ``scheduled_step`` with a k=1 schedule is
+numerically identical to serial ``es_step`` (same params, opt state,
+scores, rng), and with k>1 the scoring forward really is decimated —
+skipped steps leave the score store untouched and reuse stale weights.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.core.es_step import ESConfig, init_train_state, make_steps
+from repro.core.frequency import FreqSchedule, adaptive_period, make_schedule
+from repro.data.synthetic import SyntheticConfig, SyntheticLM
+from repro.models.layers import ShardCtx
+from repro.optim.adamw import OptConfig
+
+
+# ---------------------------------------------------------------------------
+# FreqSchedule
+# ---------------------------------------------------------------------------
+
+def test_fixed_schedule_fires_every_k():
+    f = FreqSchedule(kind="fixed", k=3)
+    fires = [bool(f.should_score(t)) for t in range(9)]
+    assert fires == [True, False, False] * 3
+    assert f.scoring_steps(9) == 3
+    assert not f.always_scores()
+
+
+def test_k1_schedule_always_scores():
+    for kind in ("fixed", "warmup"):
+        f = FreqSchedule(kind=kind, k=1, warmup_steps=4, ramp_steps=4)
+        assert f.always_scores()
+        assert f.scoring_steps(10) == 10
+
+
+def test_warmup_schedule_ramps_from_1_to_k():
+    f = FreqSchedule(kind="warmup", k=8, warmup_steps=10, ramp_steps=10)
+    periods = np.asarray([int(f.period_at(t)) for t in range(40)])
+    assert (periods[:10] == 1).all()           # scores every step in warmup
+    assert periods[-1] == 8                    # reaches the target period
+    assert (np.diff(periods) >= 0).all()       # monotone ramp
+    # warmup really scores every step
+    assert all(bool(f.should_score(t)) for t in range(10))
+
+
+@pytest.mark.parametrize("k,w,r", [(8, 10, 10), (4, 1, 16), (16, 5, 3),
+                                   (8, 0, 0)])
+def test_warmup_schedule_gap_never_exceeds_k(k, w, r):
+    """The ramp must DECIMATE, not starve: consecutive scoring steps are
+    never more than the target period apart (a plain `step % period(step)`
+    rule violates this while the period ramps)."""
+    f = FreqSchedule(kind="warmup", k=k, warmup_steps=w, ramp_steps=r)
+    fires = [t for t in range(20 * k) if bool(f.should_score(t))]
+    assert fires[0] == 0
+    gaps = np.diff(fires)
+    assert gaps.max() <= f.target_period
+    # steady state really settles on the target period
+    assert gaps[-1] == f.target_period
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError):
+        FreqSchedule(kind="nope")
+    with pytest.raises(ValueError):
+        FreqSchedule(k=0)
+
+
+def test_adaptive_period_bounds_and_monotonicity():
+    # period lives in [1, k_cap] and shrinks as we demand more fidelity
+    ps = [adaptive_period(0.2, 0.9, gf, 64)
+          for gf in (0.1, 0.3, 0.5, 0.7, 0.9)]
+    assert all(1 <= p <= 64 for p in ps)
+    assert all(b <= a for a, b in zip(ps, ps[1:]))
+    # a flat response (beta1 == beta2 kills the difference term) still
+    # yields a valid period
+    assert 1 <= adaptive_period(0.9, 0.9, 0.5, 64) <= 64
+
+
+def test_adaptive_schedule_resolves_target_period():
+    f = make_schedule("adaptive", 32, beta1=0.2, beta2=0.9, gain_floor=0.5)
+    assert f.target_period == adaptive_period(0.2, 0.9, 0.5, 32)
+    assert int(f.period_at(0)) == f.target_period
+
+
+def test_adaptive_schedule_not_inert_at_default_k():
+    """Choosing `adaptive` with --score-every left at 1 must still let the
+    passband heuristic pick a period (the cap opens to the default)."""
+    from repro.core.frequency import ADAPTIVE_DEFAULT_CAP
+    f = make_schedule("adaptive", 1, beta1=0.2, beta2=0.9, gain_floor=0.5)
+    assert f.k == ADAPTIVE_DEFAULT_CAP
+    assert f.target_period == adaptive_period(0.2, 0.9, 0.5,
+                                              ADAPTIVE_DEFAULT_CAP)
+    assert f.target_period > 1
+
+
+def test_should_score_is_jittable():
+    f = FreqSchedule(kind="warmup", k=4, warmup_steps=2, ramp_steps=4)
+    got = jax.jit(f.should_score)(jnp.arange(12))
+    want = jnp.asarray([bool(f.should_score(t)) for t in range(12)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# scheduled_step
+# ---------------------------------------------------------------------------
+
+def _setup(freq=None, n=128, meta_batch=16, minibatch=4, fused=True):
+    model_cfg = get_smoke_config("qwen1.5-0.5b")
+    ds = SyntheticLM(SyntheticConfig(n_samples=n, seq_len=32,
+                                     vocab_size=64, seed=0))
+    es_cfg = ESConfig(method="es", minibatch=minibatch, n_train=n,
+                      seq_chunk=0, fused_scores=fused)
+    opt_cfg = OptConfig(kind="adamw", lr=1e-3)
+    steps = make_steps(model_cfg, es_cfg, opt_cfg,
+                       lambda s: jnp.asarray(1.0, jnp.float32),
+                       ShardCtx(), freq=freq)
+    state = init_train_state(model_cfg, es_cfg, opt_cfg,
+                             jax.random.PRNGKey(0), meta_batch)
+    batches = [{k: jnp.asarray(v) for k, v in
+                ds.batch(np.arange(i * meta_batch,
+                                   (i + 1) * meta_batch)).items()}
+               for i in range(n // meta_batch)]
+    return steps, state, batches
+
+
+def _assert_states_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_scheduled_step_k1_bit_identical_to_es_step():
+    steps, s0, batches = _setup()          # default schedule: k=1
+    es = jax.jit(steps["es_step"])
+    sched = jax.jit(steps["scheduled_step"])
+    s_es, s_sc = s0, s0
+    for b in batches[:4]:
+        s_es, m_es = es(s_es, b)
+        s_sc, m_sc = sched(s_sc, b)
+        for key in ("loss", "sel_loss", "w_mean", "w_max", "bp_samples"):
+            np.testing.assert_array_equal(np.asarray(m_es[key]),
+                                          np.asarray(m_sc[key]))
+    _assert_states_equal(s_es, s_sc)
+
+
+def test_scheduled_step_skips_score_updates_between_firings():
+    k = 3
+    steps, state, batches = _setup(freq=FreqSchedule(kind="fixed", k=k))
+    sched = jax.jit(steps["scheduled_step"])
+    seen_before = np.asarray(state.scores.seen).sum()
+    scored = []
+    for i in range(6):
+        prev_scores = state.scores
+        state, m = sched(state, batches[i % len(batches)])
+        scored.append(float(m["scored"]))
+        if m["scored"] == 0.0:
+            # skipped step: the whole score store is untouched
+            np.testing.assert_array_equal(np.asarray(prev_scores.s),
+                                          np.asarray(state.scores.s))
+            np.testing.assert_array_equal(np.asarray(prev_scores.w),
+                                          np.asarray(state.scores.w))
+    assert scored == [1.0, 0.0, 0.0] * 2
+    # only the 2 scoring meta-batches touched the seen counters
+    assert np.asarray(state.scores.seen).sum() \
+        == seen_before + 2 * batches[0]["tokens"].shape[0]
+
+
+def test_scheduled_scoring_step_matches_es_step_state():
+    """At a scoring step from the same state, the cond branch produces the
+    same updated state as inline es_step (step 0 always scores)."""
+    steps, s0, batches = _setup(freq=FreqSchedule(kind="fixed", k=4))
+    s_es, _ = jax.jit(steps["es_step"])(s0, batches[0])
+    s_sc, m = jax.jit(steps["scheduled_step"])(s0, batches[0])
+    assert float(m["scored"]) == 1.0
+    np.testing.assert_allclose(np.asarray(s_es.scores.s),
+                               np.asarray(s_sc.scores.s), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_es.scores.w),
+                               np.asarray(s_sc.scores.w), rtol=1e-6)
+    for la, lb in zip(jax.tree.leaves(s_es.params),
+                      jax.tree.leaves(s_sc.params)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=1e-6)
+
+
+def test_fused_and_scatter_score_paths_agree():
+    """fused_scores=True (backend-dispatched kernel wrapper) vs False
+    (direct XLA scatter) give the same training trajectory on the es path.
+    (On CPU the wrapper itself falls back to the scatter; the kernel-vs-
+    oracle equivalence is pinned in test_kernels.py with interpret=True.)"""
+    steps_f, s_f, batches = _setup(fused=True)
+    steps_x, s_x, _ = _setup(fused=False)
+    es_f = jax.jit(steps_f["es_step"])
+    es_x = jax.jit(steps_x["es_step"])
+    for b in batches[:3]:
+        s_f, _ = es_f(s_f, b)
+        s_x, _ = es_x(s_x, b)
+    np.testing.assert_allclose(np.asarray(s_f.scores.s),
+                               np.asarray(s_x.scores.s), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_f.scores.w),
+                               np.asarray(s_x.scores.w), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(s_f.scores.seen),
+                                  np.asarray(s_x.scores.seen))
+
+
+def test_trainer_score_every_reduces_scoring_steps_and_trains():
+    from repro.launch.train import Trainer, TrainerConfig
+    tc = TrainerConfig(arch="qwen1.5-0.5b", method="es", epochs=3,
+                       meta_batch=16, minibatch=4, n_samples=256, seq_len=32,
+                       lr=3e-3, anneal_ratio=0.0, score_every=4)
+    out = Trainer(tc).train()
+    assert out["scoring_steps_total"] <= out["steps"] / 4 + 1
+    losses = [m["loss"] for m in out["metrics"]]
+    assert losses[-1] < losses[0] * 0.9

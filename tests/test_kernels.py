@@ -133,6 +133,43 @@ def test_score_update_ops_wrapper_matches_core():
     np.testing.assert_allclose(np.asarray(got.seen), np.asarray(want.seen))
 
 
+@pytest.mark.parametrize("n,B,b1,b2", [(1024, 128, 0.2, 0.9),
+                                       (4096, 256, 0.0, 0.0),
+                                       (2048, 64, 0.5, 0.8)])
+def test_score_update_kernel_sweep_vs_ref(n, B, b1, b2):
+    """Wider shape/beta sweep of the fused kernel against ref.py, at the
+    store sizes the train path actually uses."""
+    key = jax.random.PRNGKey(42)
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = jnp.abs(jax.random.normal(k1, (n,)))
+    w = jnp.abs(jax.random.normal(k2, (n,)))
+    seen = jax.random.randint(k3, (n,), 0, 5)
+    ids = jnp.asarray(np.random.default_rng(1).choice(n, B, replace=False),
+                      jnp.int32)
+    losses = jnp.abs(jax.random.normal(k1, (B,)))
+    got = fused_score_update(s, w, seen, ids, losses, beta1=b1, beta2=b2,
+                             interpret=True)
+    want = score_update_ref(s, w, seen, ids, losses, beta1=b1, beta2=b2)
+    for g, x in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(x), atol=1e-6)
+
+
+def test_score_update_untouched_rows_unchanged():
+    """Rows outside ``ids`` pass through the kernel bit-identically."""
+    n, B = 512, 32
+    scores = init_scores(n)
+    ids = jnp.arange(0, 2 * B, 2, dtype=jnp.int32)       # even rows only
+    losses = jnp.linspace(0.1, 2.0, B)
+    out = update_scores_fused(scores, ids, losses, 0.2, 0.9, interpret=True)
+    mask = np.ones(n, bool)
+    mask[np.asarray(ids)] = False
+    np.testing.assert_array_equal(np.asarray(out.s)[mask],
+                                  np.asarray(scores.s)[mask])
+    np.testing.assert_array_equal(np.asarray(out.w)[mask],
+                                  np.asarray(scores.w)[mask])
+    assert np.asarray(out.seen)[mask].sum() == 0
+
+
 def test_score_update_duplicate_id_semantics_pinned():
     """Kernel: sequential recursion for duplicates (the correct Eq. 3.1
     semantics); oracle scatter: last-write-wins from original s.  Pinned so

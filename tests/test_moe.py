@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:          # hermetic env: deterministic shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.models.moe import (init_moe, moe_fwd, capacity, _auto_groups,
                               moe_aux_loss)

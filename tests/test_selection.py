@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:          # hermetic env: deterministic shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.selection import (gumbel_topk_select, topk_select,
                                   uniform_select, select_minibatch,

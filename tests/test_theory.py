@@ -1,6 +1,9 @@
 """Numerical verification of the paper's theory appendix (B.2–B.4)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:          # hermetic env: deterministic shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.theory import (transfer_gain, dro_reference_loss,
                                dro_weight_update, es_weight_sequence)
