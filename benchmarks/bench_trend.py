@@ -1,0 +1,103 @@
+"""Benchmark trend gate: compare a BENCH_*.json against the previous run.
+
+CI downloads the last successful run's artifact and fails the build when
+any (method, k) row regressed beyond the noise tolerance:
+
+    python benchmarks/bench_trend.py PREV.json NEW.json --tolerance 0.35
+
+By default each row is normalized by its own run's ``baseline`` row
+(``--relative-to baseline``), so the gate compares *shape* (how expensive
+each flavour is relative to plain training in the same process on the
+same host) rather than absolute wall-clock — heterogeneous CI runner
+hardware then cancels out.  Pass ``--relative-to none`` for absolute ms.
+
+Rows present in only one file (new sweep points, retired flavours) are
+reported but never fail the gate; a regression in any shared row exits 1.
+The gate exists to catch step-level regressions (a lost fusion, an
+accidental extra forward), not single-digit-percent jitter.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Tuple
+
+Key = Tuple[str, object]
+
+
+def _rows(path: str) -> Dict[Key, float]:
+    with open(path) as f:
+        data = json.load(f)
+    return {(r["method"], r.get("k")): float(r["mean_step_ms"])
+            for r in data.get("rows", [])}
+
+
+def _normalize(rows: Dict[Key, float], relative_to: str
+               ) -> Dict[Key, float]:
+    anchor = next((v for (m, _), v in rows.items() if m == relative_to),
+                  None)
+    assert anchor, relative_to
+    return {k: v / anchor for k, v in rows.items()}
+
+
+def compare(prev_path: str, new_path: str, tolerance: float,
+            relative_to: str = "baseline") -> int:
+    prev, new = _rows(prev_path), _rows(new_path)
+    unit = "ms"
+    if relative_to != "none":
+        # normalize only when BOTH runs carry the anchor row — mixing a
+        # normalized file with an absolute one would scramble every ratio
+        has_anchor = [any(m == relative_to and v > 0
+                          for (m, _), v in rows.items())
+                      for rows in (prev, new)]
+        if all(has_anchor):
+            prev = _normalize(prev, relative_to)
+            new = _normalize(new, relative_to)
+            unit = f"x {relative_to}"
+        else:
+            print(f"note: {relative_to!r} row missing from "
+                  f"{'both files' if not any(has_anchor) else 'one file'};"
+                  " comparing absolute ms")
+    shared = sorted(set(prev) & set(new), key=str)
+    regressions = []
+    print(f"{'method':<12} {'k':<6} {'prev':>9} {'new':>9} {'ratio':>7}"
+          f"   ({unit})")
+    for key in shared:
+        method, k = key
+        ratio = new[key] / prev[key] if prev[key] > 0 else float("inf")
+        flag = " <-- REGRESSION" if ratio > 1.0 + tolerance else ""
+        print(f"{method:<12} {k!s:<6} {prev[key]:9.3f} {new[key]:9.3f} "
+              f"{ratio:7.2f}{flag}")
+        if flag:
+            regressions.append((key, ratio))
+    for key in sorted(set(new) - set(prev), key=str):
+        print(f"{key[0]:<12} {key[1]!s:<6} {'-':>9} {new[key]:9.3f}   (new)")
+    for key in sorted(set(prev) - set(new), key=str):
+        print(f"{key[0]:<12} {key[1]!s:<6} {prev[key]:9.3f} {'-':>9}   "
+              "(removed)")
+    if regressions:
+        worst = max(r for _, r in regressions)
+        print(f"FAIL: {len(regressions)} row(s) regressed beyond "
+              f"{tolerance:.0%} (worst {worst:.2f}x)")
+        return 1
+    print(f"OK: {len(shared)} shared row(s) within {tolerance:.0%}")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("prev", help="previous run's BENCH json")
+    ap.add_argument("new", help="current run's BENCH json")
+    ap.add_argument("--tolerance", type=float, default=0.35,
+                    help="allowed growth before failing")
+    ap.add_argument("--relative-to", default="baseline",
+                    help="method row to normalize by within each run "
+                         "(cancels host speed); 'none' for absolute ms")
+    args = ap.parse_args()
+    sys.exit(compare(args.prev, args.new, args.tolerance,
+                     args.relative_to))
+
+
+if __name__ == "__main__":
+    main()

@@ -27,7 +27,7 @@ def run() -> List[Row]:
     # backprop — the Fig. 10 ordering)
     budget = min(curve[-1][0] for curve in curves.values())
     for method, curve in curves.items():
-        at_budget = [l for bp, l in curve if bp <= budget]
+        at_budget = [loss for bp, loss in curve if bp <= budget]
         final_bp, final_loss = curve[-1]
         rows.append((f"fig10/{method}", 0.0,
                      f"loss_at_bp_{int(budget)}={at_budget[-1]:.4f};"

@@ -1,16 +1,21 @@
-"""Scoring-frequency sweep: step time vs k for baseline / es / scheduled.
+"""Scoring-frequency sweep: step time vs k through the composable engine.
 
-Times the three step flavours at the raw jitted-step level (no Trainer
-overhead) and emits ``BENCH_freq_sweep.json``: per-step wall time as the
-scoring period k grows.  The paper's §3.3 claim is that decimating the
-scoring forward ("frequency tuning") recovers most of serial ES's extra
-cost; here that shows up as mean step time monotonically non-increasing
-in k (the scoring fraction is 1/k).
+Times the engine-built step flavours at the raw jitted-step level (no
+Trainer overhead) and emits ``BENCH_freq_sweep.json``: per-step wall time
+as the scoring period k grows, for BOTH decimated scoring policies —
+``scheduled`` (inline lax.cond decimation) and ``pipelined`` (overlap
+scoring leg, decimated the same way).  The paper's §3.3 claim is that
+decimating the scoring forward ("frequency tuning") recovers most of
+serial ES's extra cost; here that shows up as mean step time monotonically
+non-increasing in k (the scoring fraction is 1/k).
 
     PYTHONPATH=src:. python benchmarks/freq_sweep.py [--smoke] \
         [--ks 1,2,4,8] [--steps 48] [--out BENCH_freq_sweep.json]
 
 ``--smoke`` shrinks the model and sweep for the CI benchmark-smoke job.
+CI compares the emitted artifact against the previous run's via
+``benchmarks/bench_trend.py`` and fails on step-time regressions beyond
+the noise tolerance.
 """
 from __future__ import annotations
 
@@ -25,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.es_step import ESConfig, init_train_state, make_steps
+from repro.core.engine import ESConfig, ESEngine, init_train_state
 from repro.core.frequency import FreqSchedule
 from repro.data.synthetic import SyntheticConfig, SyntheticLM
 from repro.models.layers import ShardCtx
@@ -55,21 +60,29 @@ def _make_batches(n_batches: int, meta_batch: int, seq_len: int,
             for i in range(n_batches)]
 
 
-def _time_step(step_fn: Callable, state, batches: List[Dict[str, jax.Array]],
-               steps: int, reps: int, warmup: int) -> float:
-    """Mean ms/step, min over ``reps`` timed passes (state threads through)."""
-    nb = len(batches)
+def _time_step(step_fn: Callable, state, inputs: List, steps: int,
+               reps: int, warmup: int) -> float:
+    """Mean ms/step, min over ``reps`` timed passes (state threads through).
+
+    ``inputs`` are whatever the step takes as its second argument — single
+    batches for inline flavours, (current, next) pairs for pipelined.
+    """
+    nb = len(inputs)
     for i in range(warmup):
-        state, m = step_fn(state, batches[i % nb])
+        state, m = step_fn(state, inputs[i % nb])
     jax.block_until_ready(m)
     means = []
     for _ in range(reps):
         t0 = time.perf_counter()
         for i in range(steps):
-            state, m = step_fn(state, batches[i % nb])
+            state, m = step_fn(state, inputs[i % nb])
         jax.block_until_ready(m)
         means.append((time.perf_counter() - t0) / steps * 1e3)
     return min(means)
+
+
+def _monotone(ms: List[float], tolerance: float) -> bool:
+    return all(b <= a * (1.0 + tolerance) for a, b in zip(ms, ms[1:]))
 
 
 def run_sweep(args) -> Dict:
@@ -84,33 +97,37 @@ def run_sweep(args) -> Dict:
     ctx = ShardCtx()
     batches = _make_batches(args.n_batches, meta_batch, args.seq_len,
                             model_cfg.vocab_size)
+    pairs = [(batches[i], batches[(i + 1) % len(batches)])
+             for i in range(len(batches))]
     key = jax.random.PRNGKey(0)
+
+    def engine(k=None):
+        freq = FreqSchedule(kind="fixed", k=k) if k is not None else None
+        return ESEngine(model_cfg, es_cfg, opt_cfg, schedule, ctx, freq=freq)
 
     def fresh_state():
         return init_train_state(model_cfg, es_cfg, opt_cfg, key, meta_batch)
 
     rows = []
 
-    def bench(name: str, k, step_fn):
+    def bench(name: str, k, step_fn, inputs):
         ms = _time_step(jax.jit(step_fn, donate_argnums=0), fresh_state(),
-                        batches, args.steps, args.reps, warmup=max(ks) + 2)
+                        inputs, args.steps, args.reps, warmup=max(ks) + 2)
         rows.append({"method": name, "k": k, "mean_step_ms": round(ms, 4),
                      "scoring_fraction": (1.0 / k) if k else 1.0})
         print(f"{name:<10} k={k!s:<5} {ms:8.3f} ms/step", flush=True)
         return ms
 
-    base_steps = make_steps(model_cfg, es_cfg, opt_cfg, schedule, ctx)
-    bench("baseline", None, base_steps["baseline_step"])
-    bench("es", 1, base_steps["es_step"])
+    base = engine()
+    bench("baseline", None, base.baseline_step, batches)
+    bench("es", 1, base.es_step, batches)
 
-    sched_ms = []
+    sched_ms, pipe_ms = [], []
     for k in ks:
-        steps_k = make_steps(model_cfg, es_cfg, opt_cfg, schedule, ctx,
-                             freq=FreqSchedule(kind="fixed", k=k))
-        sched_ms.append(bench("scheduled", k, steps_k["scheduled_step"]))
+        eng = engine(k)
+        sched_ms.append(bench("scheduled", k, eng.scheduled_step, batches))
+        pipe_ms.append(bench("pipelined", k, eng.pipelined_step, pairs))
 
-    monotone = all(b <= a * (1.0 + args.tolerance)
-                   for a, b in zip(sched_ms, sched_ms[1:]))
     return {
         "bench": "freq_sweep",
         "config": {
@@ -120,7 +137,10 @@ def run_sweep(args) -> Dict:
             "ks": ks, "backend": jax.default_backend(),
         },
         "rows": rows,
-        "scheduled_monotone_non_increasing": monotone,
+        "scheduled_monotone_non_increasing":
+            _monotone(sched_ms, args.tolerance),
+        "pipelined_monotone_non_increasing":
+            _monotone(pipe_ms, args.tolerance),
     }
 
 
@@ -153,7 +173,8 @@ def main() -> None:
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
     print(f"wrote {args.out} "
-          f"(monotone={out['scheduled_monotone_non_increasing']})")
+          f"(scheduled_monotone={out['scheduled_monotone_non_increasing']} "
+          f"pipelined_monotone={out['pipelined_monotone_non_increasing']})")
 
 
 if __name__ == "__main__":

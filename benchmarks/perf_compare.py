@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import argparse
 import json
-from pathlib import Path
 from typing import List
 
 from .roofline import DRYRUN_DIR, model_flops_per_chip

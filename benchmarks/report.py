@@ -6,7 +6,6 @@ from __future__ import annotations
 
 import argparse
 import json
-from pathlib import Path
 
 from .roofline import DRYRUN_DIR, model_flops_per_chip
 
@@ -28,15 +27,12 @@ def dryrun_table(mesh: str, variant: str = "es") -> str:
         arch, shape = d["arch"], d["shape"]
         if "skipped" in d:
             rows.append(f"| {arch} | {shape} | SKIP ({d['skipped'][:40]}…) "
-                        f"| — | — | — | — |")
+                        "| — | — | — | — |")
             continue
         if "error" in d:
             rows.append(f"| {arch} | {shape} | **FAIL** | — | — | — | — |")
             continue
         ma = d.get("memory_analysis", {})
-        mem = (ma.get("argument_size_in_bytes", 0)
-               + ma.get("temp_size_in_bytes", 0)) / d["mesh_info"]["n_devices"] \
-            if False else None
         # memory_analysis is per-device already on the SPMD module
         args_t = (ma.get("argument_size_in_bytes", 0),
                   ma.get("temp_size_in_bytes", 0))

@@ -6,7 +6,6 @@ BP samples used.  derived = "loss=<L>;time_saved=<pct>%;bp=<n>".
 """
 from __future__ import annotations
 
-import sys
 import time
 from typing import List
 

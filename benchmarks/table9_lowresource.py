@@ -43,7 +43,6 @@ def run() -> List[Row]:
     @jax.jit
     def accum_step(state, batch):
         def loss_fn(params, mb):
-            _, ps = None, None
             per_sample, _ = lm_per_sample_loss(cfg, params, mb, ctx,
                                                seq_chunk=0)
             return jnp.mean(per_sample)

@@ -1,41 +1,55 @@
 """Method shoot-out: Baseline vs Loss vs Order vs ES vs ESWP on the same
 planted-difficulty dataset — the paper's Tab. 2 experiment in miniature.
+Every method runs through the one ESEngine entry point; the `es+drift`
+row decimates its scoring forwards with the observed-signal cadence.
 
     PYTHONPATH=src python examples/eswp_comparison.py
 """
 import sys
 from pathlib import Path
 
-import numpy as np
-
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.launch.train import Trainer, TrainerConfig
 
+VARIANTS = [
+    ("baseline", {}),
+    ("loss", {}),
+    ("order", {}),
+    ("es", {}),
+    ("es+drift", {"freq_schedule": "drift", "score_every": 8,
+                  "drift_target": 1.5}),
+    ("eswp", {}),
+]
+
 
 def main():
     results = {}
-    for method in ["baseline", "loss", "order", "es", "eswp"]:
+    for name, extra in VARIANTS:
+        method = name.split("+")[0]
         tc = TrainerConfig(arch="qwen1.5-0.5b", method=method, epochs=4,
                            meta_batch=16, minibatch=4, n_samples=192,
-                           seq_len=32, lr=3e-3, seed=0, anneal_ratio=0.05)
+                           seq_len=32, lr=3e-3, seed=0, anneal_ratio=0.05,
+                           **extra)
         tr = Trainer(tc)
         out = tr.train()
-        results[method] = {
+        results[name] = {
             "eval_loss": tr.eval_mean_loss(n=128),
             "wall_s": out["wall_time"],
             "bp_samples": int(out["bp_samples_total"]),
+            "scorings": int(out["scoring_steps_total"]),
         }
 
     base = results["baseline"]
     print(f"{'method':10s} {'eval_loss':>9s} {'wall_s':>8s} "
-          f"{'saved':>7s} {'bp_samples':>10s}")
+          f"{'saved':>7s} {'bp_samples':>10s} {'scorings':>9s}")
     for m, r in results.items():
         saved = (1 - r["wall_s"] / base["wall_s"]) * 100
         print(f"{m:10s} {r['eval_loss']:9.4f} {r['wall_s']:8.1f} "
-              f"{saved:6.1f}% {r['bp_samples']:10d}")
+              f"{saved:6.1f}% {r['bp_samples']:10d} {r['scorings']:9d}")
     print("\nES(WP) should match baseline loss with a fraction of the "
-          "backprop samples (paper Tab. 2 shape).")
+          "backprop samples (paper Tab. 2 shape); es+drift additionally "
+          "decimates the scoring forwards.")
 
 
 if __name__ == "__main__":

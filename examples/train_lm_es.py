@@ -44,9 +44,18 @@ def main():
     ap.add_argument("--minibatch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--score-every", type=int, default=1,
-                    help="k: scoring forward every k-th step (paper §3.3)")
+                    help="k: scoring forward every k-th step (paper §3.3); "
+                         "the period cap for adaptive/drift")
     ap.add_argument("--freq-schedule", default="fixed",
-                    choices=["fixed", "warmup", "adaptive"])
+                    choices=["fixed", "warmup", "adaptive", "drift"],
+                    help="drift: servo the period from the observed "
+                         "score-store deltas (core/engine.py)")
+    ap.add_argument("--pipelined", action="store_true",
+                    help="overlap the scoring forward with the grad step "
+                         "(engine primes/flushes at epoch boundaries)")
+    ap.add_argument("--prune-cadence", default="epoch",
+                    choices=["epoch", "drift"],
+                    help="ESWP set-level re-prune gate")
     ap.add_argument("--ckpt", default="/tmp/repro_es_ckpt")
     args = ap.parse_args()
 
@@ -61,6 +70,7 @@ def main():
         n_samples=4096, seq_len=args.seq_len,
         lr=6e-4, schedule="cosine",
         score_every=args.score_every, freq_schedule=args.freq_schedule,
+        pipelined=args.pipelined, prune_cadence=args.prune_cadence,
         ckpt_dir=args.ckpt, ckpt_every_steps=50,
         anneal_ratio=0.0,
     )

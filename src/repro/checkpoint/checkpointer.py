@@ -143,15 +143,32 @@ class Checkpointer:
     # ------------------------------------------------------------------
     def restore(self, template: PyTree, step: Optional[int] = None
                 ) -> PyTree:
-        """Load into the template's structure/shardings (elastic restore)."""
+        """Load into the template's structure/shardings (elastic restore).
+
+        Leaves present in the template but absent from the checkpoint keep
+        their template values (zero-init for abstract templates) — a
+        checkpoint written before a state field existed (e.g. the engine's
+        ``CadenceState``) restores cleanly, the new field simply starting
+        from its init, placed with the template's sharding like any other
+        leaf.
+        """
         if step is None:
             step = self.latest_step()
         assert step is not None, f"no checkpoints in {self.dir}"
         data = np.load(self.step_dir(step) / "arrays.npz")
         flat_template = _flatten(template)
         out = {}
+        missing = []
         for key, leaf in flat_template.items():
-            arr = data[key]
+            if key not in data.files:
+                missing.append(key)
+                # abstract templates (ShapeDtypeStruct) carry no values;
+                # zero-init the absent leaf with the template's shape/dtype
+                arr = (np.zeros(leaf.shape, leaf.dtype)
+                       if isinstance(leaf, jax.ShapeDtypeStruct)
+                       else np.asarray(leaf))
+            else:
+                arr = data[key]
             if hasattr(leaf, "sharding") and leaf.sharding is not None \
                     and hasattr(leaf.sharding, "mesh"):
                 out[key] = jax.device_put(arr.astype(leaf.dtype),
@@ -159,8 +176,13 @@ class Checkpointer:
             else:
                 out[key] = jax.device_put(
                     arr.astype(getattr(leaf, "dtype", arr.dtype)))
-        leaves, treedef = jax.tree_util.tree_flatten(template)
-        keys = list(_flatten(template).keys())
+        if missing:
+            print(f"[restore] step_{step}: {len(missing)} leaves absent "
+                  "from checkpoint, keeping template init: "
+                  f"{', '.join(missing[:8])}"
+                  f"{' ...' if len(missing) > 8 else ''}")
+        treedef = jax.tree_util.tree_structure(template)
+        keys = list(flat_template.keys())
         return jax.tree_util.tree_unflatten(treedef,
                                             [out[k] for k in keys])
 

@@ -8,7 +8,7 @@ with the exact published hyper-parameters and register under their public id.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

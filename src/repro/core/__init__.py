@@ -4,4 +4,5 @@ from .selection import select_minibatch, gumbel_topk_select, topk_select
 from .pruning import prune_epoch, PruneResult
 from .annealing import AnnealSchedule
 from .frequency import FreqSchedule, adaptive_period, make_schedule
-from .es_step import ESConfig, TrainState, init_train_state, make_steps
+from .engine import (CadenceConfig, CadenceState, ESConfig, ESEngine,
+                     TrainState, init_cadence, init_train_state, make_steps)

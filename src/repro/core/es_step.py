@@ -1,306 +1,39 @@
-"""The ES(WP) train step — the paper's technique as a first-class jitted op.
+"""Legacy surface of the ES(WP) step layer — now built by ``core.engine``.
 
-Four step flavours (all pjit-able, static shapes, no host sync):
+The four step flavours (``baseline_step`` / ``es_step`` / ``scheduled_step``
+/ ``pipelined_step``), ``ESConfig``, ``TrainState``, and ``make_steps``
+used to live here as four near-duplicate closures.  They are now thin
+wrappers assembled by the composable ``ESEngine`` (one step builder, three
+orthogonal policies: scoring x selection x cadence) and re-exported from
+this module so existing imports keep working:
 
-  baseline_step   : standard batched training on the full meta-batch
-                    (paper baseline; also the annealing branch).
-  es_step         : paper-faithful serial ES —
-                      (1) scoring forward on the meta-batch B -> per-sample
-                          losses, (2) Eq. (3.1) score/weight update,
-                      (3) Gumbel top-k mini-batch selection (b of B),
-                      (4) fwd+bwd on the mini-batch only.
-                    When b == B (set-level-only ESWP) the scoring forward is
-                    FUSED into the training forward — no extra FP, matching
-                    the paper's "can be omitted" remark (§3.3).
-  scheduled_step  : frequency-tuned ES (§3.3) — runs the scoring forward
-                    only when ``FreqSchedule.should_score(opt.step)`` fires;
-                    in between, selection reuses the (stale) store weights
-                    via a runtime lax.cond, so skipped steps pay only the
-                    mini-batch fwd+bwd.  With a k=1 schedule the decimation
-                    is a no-op and the call delegates to ``es_step`` —
-                    bit-identical by construction.
-  pipelined_step  : beyond-paper — scores meta-batch t+1 concurrently with
-                    the grad step on the mini-batch selected (last step) from
-                    meta-batch t.  The two subgraphs share no data edges, so
-                    XLA overlaps them; selection weights are one step stale
-                    (ablated in benchmarks).
+    from repro.core.es_step import ESConfig, TrainState, make_steps
 
-Score-store updates go through the fused Pallas ``score_update`` kernel
-(one kernel for the three Eq. 3.1 scatters) on TPU; off-TPU the ops
-wrapper falls back to the XLA scatter path (faster there than interpret
-mode).  ``ESConfig.fused_scores=False`` forces the scatter path everywhere.
-
-Batch dict: tokens (B,S) i32, labels (B,S) i32 (-1 = masked),
-sample_ids (B,) i32, optional grad_scale (B,) f32 (InfoBatch rescale),
-optional frames / image_embeds (modality stubs).
+``make_steps(...)`` returns the same dict with the same step semantics —
+the engine's parity suite (``tests/test_engine.py``) pins the k=1
+scheduled step bit-identical to serial ``es_step``.  New code should
+import from ``repro.core.engine`` directly, which additionally exposes the
+pipelined ``prime``/``flush`` steps, the drift-adaptive ``CadenceConfig``,
+and the per-epoch ``session`` driver.
 """
-from __future__ import annotations
+from .engine import (  # noqa: F401  (re-exported legacy surface)
+    CadenceConfig,
+    CadenceState,
+    ESConfig,
+    ESEngine,
+    TrainState,
+    init_cadence,
+    init_train_state,
+    make_steps,
+)
 
-import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-
-from ..configs.base import ModelConfig
-from ..models.layers import ShardCtx
-from ..models.transformer import lm_per_sample_loss
-from ..optim.adamw import OptConfig, OptState, init_opt_state, apply_updates
-from .frequency import FreqSchedule
-from .scores import ESScores, init_scores, update_scores, batch_weights
-from .selection import select_minibatch
-
-PyTree = Any
-
-
-@dataclasses.dataclass(frozen=True)
-class ESConfig:
-    method: str = "es"            # es | eswp | loss | order | baseline
-    beta1: float = 0.2
-    beta2: float = 0.9
-    minibatch: int = 64           # b  (selected for BP)
-    n_train: int = 1 << 20        # score-store size
-    pipelined: bool = False       # beyond-paper overlap variant
-    seq_chunk: int = 1024         # xent seq chunking
-    fused_scores: bool = True     # Pallas score_update kernel vs XLA scatter
-
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class TrainState:
-    params: PyTree
-    opt: OptState
-    scores: ESScores
-    rng: jax.Array
-    pending_w: jax.Array   # (B,) pipelined-ES carried selection weights
-    grad_err: PyTree = None  # error-feedback residuals (grad compression)
-
-
-def init_train_state(model_cfg: ModelConfig, es_cfg: ESConfig,
-                     opt_cfg: OptConfig, key: jax.Array,
-                     meta_batch: int) -> TrainState:
-    from ..models.transformer import init_lm
-    pkey, rkey = jax.random.split(key)
-    params, _ = init_lm(model_cfg, pkey)
-    if model_cfg.param_dtype != "float32":
-        dt = jnp.dtype(model_cfg.param_dtype)
-        params = jax.tree.map(lambda p: p.astype(dt), params)
-    grad_err = None
-    if getattr(opt_cfg, "compress_grads", False):
-        from ..distributed.compression import ErrorFeedbackState
-        grad_err = ErrorFeedbackState.init(params)
-    return TrainState(
-        params=params,
-        opt=init_opt_state(opt_cfg, params),
-        scores=init_scores(es_cfg.n_train),
-        rng=rkey,
-        pending_w=jnp.full((meta_batch,), 1.0, jnp.float32),
-        grad_err=grad_err,
-    )
-
-
-def _gather_batch(batch: Dict[str, jax.Array], idx: jax.Array,
-                  keys=("tokens", "labels", "sample_ids", "grad_scale",
-                        "frames", "image_embeds")) -> Dict[str, jax.Array]:
-    return {k: v[idx] for k, v in batch.items() if k in keys}
-
-
-def _loss_fn(model_cfg: ModelConfig, es_cfg: ESConfig, ctx: ShardCtx):
-    def fn(params, batch):
-        per_sample, _ = lm_per_sample_loss(model_cfg, params, batch, ctx,
-                                           seq_chunk=es_cfg.seq_chunk)
-        scale = batch.get("grad_scale")
-        if scale is not None:
-            mean = jnp.mean(per_sample * scale.astype(jnp.float32))
-        else:
-            mean = jnp.mean(per_sample)
-        return mean, per_sample
-    return fn
-
-
-def make_steps(model_cfg: ModelConfig, es_cfg: ESConfig, opt_cfg: OptConfig,
-               schedule: Callable, ctx: ShardCtx,
-               freq: Optional[FreqSchedule] = None
-               ) -> Dict[str, Callable]:
-    """Build {baseline_step, es_step, scheduled_step, pipelined_step}."""
-    loss_fn = _loss_fn(model_cfg, es_cfg, ctx)
-    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
-    freq = freq or FreqSchedule()          # default: score every step
-
-    def _update_scores(scores: ESScores, ids: jax.Array,
-                       losses: jax.Array) -> ESScores:
-        if es_cfg.fused_scores:
-            from ..kernels.score_update.ops import update_scores_fused
-            return update_scores_fused(scores, ids, losses,
-                                       es_cfg.beta1, es_cfg.beta2)
-        return update_scores(scores, ids, losses, es_cfg.beta1, es_cfg.beta2)
-
-    def _score_meta_batch(params: PyTree, scores: ESScores,
-                          batch: Dict[str, jax.Array]
-                          ) -> Tuple[jax.Array, ESScores, jax.Array]:
-        """Scoring forward + Eq. (3.1): -> (weights, new scores, meta loss).
-
-        Shared by es_step and scheduled_step's scoring branch so the two
-        stay bit-identical at scoring steps.
-        """
-        meta_losses, _ = lm_per_sample_loss(
-            model_cfg, jax.lax.stop_gradient(params), batch, ctx,
-            seq_chunk=es_cfg.seq_chunk)
-        meta_losses = jax.lax.stop_gradient(meta_losses)
-        w = batch_weights(scores, batch["sample_ids"], meta_losses,
-                          es_cfg.beta1, es_cfg.beta2)
-        new_scores = _update_scores(scores, batch["sample_ids"], meta_losses)
-        return w, new_scores, jnp.mean(meta_losses)
-
-    def _optim(state: TrainState, grads: PyTree,
-               metrics: Dict[str, jax.Array]):
-        new_err = state.grad_err
-        if getattr(opt_cfg, "compress_grads", False):
-            # int8 quantize->dequantize with error feedback: models the
-            # lossy leg of the compressed DP all-reduce (wire-level path:
-            # distributed/compression.compressed_psum_mean under shard_map)
-            from ..distributed.compression import compress_decompress
-            pairs = jax.tree.map(compress_decompress, grads, state.grad_err)
-            grads = jax.tree.map(lambda t: t[0], pairs,
-                                 is_leaf=lambda t: isinstance(t, tuple))
-            new_err = jax.tree.map(lambda t: t[1], pairs,
-                                   is_leaf=lambda t: isinstance(t, tuple))
-        lr_scale = schedule(state.opt.step)
-        new_params, new_opt, opt_metrics = apply_updates(
-            opt_cfg, state.params, grads, state.opt, lr_scale)
-        metrics.update(opt_metrics)
-        metrics["lr_scale"] = lr_scale
-        return new_params, new_opt, new_err
-
-    # ------------------------------------------------------------------
-    def baseline_step(state: TrainState, batch: Dict[str, jax.Array]
-                      ) -> Tuple[TrainState, Dict[str, jax.Array]]:
-        """Standard batched training; still updates the score store from the
-        (free) per-sample losses of the training forward."""
-        (mean, per_sample), grads = grad_fn(state.params, batch)
-        metrics = {"loss": mean, "bp_samples": jnp.asarray(
-            batch["tokens"].shape[0], jnp.float32)}
-        new_params, new_opt, new_err = _optim(state, grads, metrics)
-        scores = _update_scores(state.scores, batch["sample_ids"],
-                                jax.lax.stop_gradient(per_sample))
-        return dataclasses.replace(state, params=new_params, opt=new_opt,
-                                   scores=scores, grad_err=new_err), metrics
-
-    # ------------------------------------------------------------------
-    def es_step(state: TrainState, batch: Dict[str, jax.Array]
-                ) -> Tuple[TrainState, Dict[str, jax.Array]]:
-        B = batch["tokens"].shape[0]
-        b = min(es_cfg.minibatch, B)
-        if b >= B:
-            # set-level-only ESWP: fuse scoring into the training forward
-            return baseline_step(state, batch)
-
-        # (1)+(2) scoring forward + Eq. (3.1) weight/score update
-        w, scores, meta_loss = _score_meta_batch(state.params, state.scores,
-                                                 batch)
-
-        # (3) mini-batch selection (replicated PRNG: same on all hosts)
-        rng, sel_key = jax.random.split(state.rng)
-        idx = select_minibatch(es_cfg.method, sel_key, w, b)
-        sel = _gather_batch(batch, idx)
-
-        # (4) grad step on the mini-batch
-        (mean, _), grads = grad_fn(state.params, sel)
-        metrics = {
-            "loss": meta_loss,
-            "sel_loss": mean,
-            "bp_samples": jnp.asarray(b, jnp.float32),
-            "w_mean": jnp.mean(w),
-            "w_max": jnp.max(w),
-        }
-        new_params, new_opt, new_err = _optim(state, grads, metrics)
-        return dataclasses.replace(state, params=new_params, opt=new_opt,
-                                   scores=scores, rng=rng,
-                                   grad_err=new_err), metrics
-
-    # ------------------------------------------------------------------
-    def scheduled_step(state: TrainState, batch: Dict[str, jax.Array]
-                       ) -> Tuple[TrainState, Dict[str, jax.Array]]:
-        """Frequency-tuned ES: decimate the scoring forward to the steps the
-        ``FreqSchedule`` fires on; in between, select with the stale store
-        weights.  The branch is a runtime lax.cond on the optimizer step, so
-        one compiled graph serves both phases and skipped steps never pay
-        the meta-batch forward."""
-        B = batch["tokens"].shape[0]
-        b = min(es_cfg.minibatch, B)
-        if b >= B:
-            # set-level-only ESWP: scoring rides the training forward for
-            # free, so there is nothing to decimate
-            return baseline_step(state, batch)
-        if freq.always_scores():
-            return es_step(state, batch)   # k=1: decimation is a no-op
-
-        ids = batch["sample_ids"]
-
-        def _score(_):
-            return _score_meta_batch(state.params, state.scores, batch)
-
-        def _stale(_):
-            # reuse the last Eq. (3.1) weights for this batch's samples
-            return (state.scores.w[ids], state.scores,
-                    jnp.mean(state.scores.s[ids]))
-
-        do_score = freq.should_score(state.opt.step)
-        w, scores, meta_loss = jax.lax.cond(do_score, _score, _stale, None)
-
-        rng, sel_key = jax.random.split(state.rng)
-        idx = select_minibatch(es_cfg.method, sel_key, w, b)
-        sel = _gather_batch(batch, idx)
-
-        (mean, _), grads = grad_fn(state.params, sel)
-        metrics = {
-            # skipped steps have no meta loss; log the measured sel loss
-            "loss": jnp.where(do_score, meta_loss, mean),
-            "sel_loss": mean,
-            "bp_samples": jnp.asarray(b, jnp.float32),
-            "w_mean": jnp.mean(w),
-            "w_max": jnp.max(w),
-            "scored": do_score.astype(jnp.float32),
-        }
-        new_params, new_opt, new_err = _optim(state, grads, metrics)
-        return dataclasses.replace(state, params=new_params, opt=new_opt,
-                                   scores=scores, rng=rng,
-                                   grad_err=new_err), metrics
-
-    # ------------------------------------------------------------------
-    def pipelined_step(state: TrainState,
-                       batches: Tuple[Dict[str, jax.Array],
-                                      Dict[str, jax.Array]]
-                       ) -> Tuple[TrainState, Dict[str, jax.Array]]:
-        """batches = (current, next).  Train on `current` using weights
-        scored LAST step (state.pending_w); score `next` with pre-update
-        params.  The two subgraphs are independent -> XLA overlaps them."""
-        cur, nxt = batches
-        B = cur["tokens"].shape[0]
-        b = min(es_cfg.minibatch, B)
-
-        # train on current meta-batch with carried weights
-        rng, sel_key = jax.random.split(state.rng)
-        idx = select_minibatch(es_cfg.method, sel_key, state.pending_w, b)
-        sel = _gather_batch(cur, idx)
-        (mean, _), grads = grad_fn(state.params, sel)
-
-        # score next meta-batch with pre-update params (1-step staleness)
-        nxt_losses, _ = lm_per_sample_loss(
-            model_cfg, jax.lax.stop_gradient(state.params), nxt, ctx,
-            seq_chunk=es_cfg.seq_chunk)
-        nxt_losses = jax.lax.stop_gradient(nxt_losses)
-        w_next = batch_weights(state.scores, nxt["sample_ids"], nxt_losses,
-                               es_cfg.beta1, es_cfg.beta2)
-        scores = _update_scores(state.scores, nxt["sample_ids"], nxt_losses)
-
-        metrics = {"loss": jnp.mean(nxt_losses), "sel_loss": mean,
-                   "bp_samples": jnp.asarray(b, jnp.float32)}
-        new_params, new_opt, new_err = _optim(state, grads, metrics)
-        return dataclasses.replace(state, params=new_params, opt=new_opt,
-                                   scores=scores, rng=rng, pending_w=w_next,
-                                   grad_err=new_err), metrics
-
-    return {"baseline_step": baseline_step, "es_step": es_step,
-            "scheduled_step": scheduled_step,
-            "pipelined_step": pipelined_step}
+__all__ = [
+    "CadenceConfig",
+    "CadenceState",
+    "ESConfig",
+    "ESEngine",
+    "TrainState",
+    "init_cadence",
+    "init_train_state",
+    "make_steps",
+]

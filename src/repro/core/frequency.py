@@ -20,10 +20,16 @@ can be decimated to every k-th step with stale weights reused in between.
              (slow filter) => long period; beta1 ~ beta2 (differences
              suppressed) => the response is flat and short periods buy
              nothing.
+  drift    : observed-signal adaptive — the period is resolved at RUNTIME
+             by the engine's drift servo (``core.engine.CadenceState``, an
+             EMA of the score-store scatter deltas), not by this schedule;
+             ``k`` is the period cap.  The static members below fall back
+             conservatively (period_at == cap, should_score == True) for
+             host-side bookkeeping that cannot see the runtime state.
 
 ``period_at``/``should_score`` are pure jnp on the step counter, so they
-trace into the jitted train step (``core.es_step.scheduled_step``) with no
-host sync; the adaptive search itself runs once, host-side, at construction.
+trace into the jitted train step (``core.engine.ESEngine``) with no host
+sync; the adaptive search itself runs once, host-side, at construction.
 """
 from __future__ import annotations
 
@@ -39,7 +45,7 @@ from .theory import transfer_gain
 
 Step = Union[int, jax.Array]
 
-KINDS = ("fixed", "warmup", "adaptive")
+KINDS = ("fixed", "warmup", "adaptive", "drift")
 
 
 @functools.lru_cache(maxsize=None)
@@ -78,7 +84,7 @@ def adaptive_period(beta1: float, beta2: float, gain_floor: float,
 @dataclasses.dataclass(frozen=True)
 class FreqSchedule:
     """Scoring period as a function of the (0-indexed) optimizer step."""
-    kind: str = "fixed"        # fixed | warmup | adaptive
+    kind: str = "fixed"        # fixed | warmup | adaptive | drift
     k: int = 1                 # target / maximum scoring period
     warmup_steps: int = 0      # warmup: score every step this long
     ramp_steps: int = 0        # warmup: linear 1 -> k ramp length
@@ -112,7 +118,8 @@ class FreqSchedule:
     def period_at(self, step: Step) -> jax.Array:
         """Scoring period at ``step`` — works on ints and traced arrays."""
         k = self.target_period
-        if self.kind == "fixed" or self.kind == "adaptive":
+        if self.kind in ("fixed", "adaptive", "drift"):
+            # drift: k is the cap; the runtime period lives in CadenceState
             return jnp.full_like(jnp.asarray(step, jnp.int32), k)
         # warmup: 1 during warmup, then linear ramp to k, then k
         step = jnp.asarray(step, jnp.int32)
@@ -152,8 +159,15 @@ class FreqSchedule:
         return fires, int(anchor), horizon
 
     def should_score(self, step: Step) -> jax.Array:
-        """Bool: does ``step`` run the scoring forward?  step 0 always does."""
+        """Bool: does ``step`` run the scoring forward?  step 0 always does.
+
+        For ``drift`` the true answer lives in the engine's runtime
+        ``CadenceState``; this static fallback is conservative (every step
+        scores) so host-side bookkeeping over-counts rather than starves.
+        """
         step = jnp.asarray(step, jnp.int32)
+        if self.kind == "drift":
+            return jnp.ones_like(step, bool)
         if self.kind != "warmup" or self.target_period == 1:
             return (step % self.target_period) == 0
         table, anchor, horizon = self._warmup_plan
@@ -182,10 +196,11 @@ def make_schedule(kind: str, k: int, *, steps_per_epoch: int = 0,
                             warmup_steps=max(steps_per_epoch // 2, 1),
                             ramp_steps=max(steps_per_epoch, 1),
                             beta1=beta1, beta2=beta2)
-    if kind == "adaptive" and k <= 1:
-        # choosing `adaptive` while leaving --score-every at its default of
-        # 1 would cap the period search at 1 and silently disable the
-        # schedule; open the cap and let the passband heuristic decide
+    if kind in ("adaptive", "drift") and k <= 1:
+        # choosing `adaptive`/`drift` while leaving --score-every at its
+        # default of 1 would cap the period (search) at 1 and silently
+        # disable the schedule; open the cap and let the passband heuristic
+        # (adaptive) or the runtime drift servo (drift) decide
         k = ADAPTIVE_DEFAULT_CAP
     return FreqSchedule(kind=kind, k=k, beta1=beta1, beta2=beta2,
                         gain_floor=gain_floor)

@@ -11,7 +11,8 @@ Implemented policies (paper Tab. 1 & §4.1 comparisons):
               below-mean gradients by 1/(1-r)  (Qin et al. 2024)
   ucb       : keep top (1-r)·n by EMA-loss + exploration bonus (Raju et al.)
   ka        : KAKURENBO-style — hide the r·n lowest-loss samples, move back
-              samples whose loss increased since last epoch
+              samples whose loss did not decay below ka_tau x last epoch's
+              (ka_tau = 1: plain "loss increased" rule)
   random    : uniform (1-r)·n keep (ablation baseline)
   none      : keep everything
 """
@@ -41,11 +42,13 @@ def prune_epoch(method: str, rng: np.random.Generator, *,
                 prev_losses: Optional[np.ndarray] = None,
                 seen: Optional[np.ndarray] = None,
                 ratio: float = 0.2, ucb_c: float = 1.0,
-                ka_tau: float = 0.7) -> PruneResult:
+                ka_tau: float = 1.0) -> PruneResult:
     """Pick kept indices for the next epoch from per-sample statistics.
 
     weights: ES w_i snapshot; losses: latest per-sample losses (s_i works as
-    a robust proxy); prev_losses/seen feed KA / UCB variants.
+    a robust proxy); prev_losses/seen feed KA / UCB variants.  ka_tau is the
+    KA move-back decay tolerance: a hidden sample stays hidden only if its
+    loss decayed below ka_tau x last epoch's (1.0 = plain comparison).
     """
     n = weights.shape[0]
     n_keep = max(1, int(round((1.0 - ratio) * n)))
@@ -83,9 +86,13 @@ def prune_epoch(method: str, rng: np.random.Generator, *,
         n_hide = n - n_keep
         hidden = order[:n_hide]
         if prev_losses is not None and n_hide > 0:
-            # move-back: hidden samples whose loss went UP re-enter
-            worse = losses[hidden] > prev_losses[hidden] * ka_tau + (1 - ka_tau) * losses[hidden]
-            moved_back = hidden[losses[hidden] > prev_losses[hidden]]
+            # move-back: a hidden sample re-enters unless its loss decayed
+            # below the ka_tau fraction of last epoch's — ka_tau = 1 is the
+            # plain "loss went up" rule, ka_tau < 1 demands a real
+            # improvement before a sample may stay hidden (hysteresis
+            # against hiding samples the model is still learning)
+            worse = losses[hidden] > prev_losses[hidden] * ka_tau
+            moved_back = hidden[worse]
             hidden = np.setdiff1d(hidden, moved_back, assume_unique=False)
         mask = np.ones(n, bool)
         mask[hidden] = False

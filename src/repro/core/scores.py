@@ -14,7 +14,6 @@ expansion and is used by property tests to verify the equivalence.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -95,13 +94,13 @@ def expansion_weights(loss_history: jax.Array, beta1: float, beta2: float,
     The bracketed tail is the O(beta2^t) term of the proposition, kept exact
     here so tests can assert equality rather than asymptotics.
     """
-    l = loss_history
-    T = l.shape[0]
+    lh = loss_history
+    T = lh.shape[0]
     t = T  # steps are 1-indexed in the paper
-    ema = (1 - beta2) * sum(beta2 ** (t - k) * l[k - 1] for k in range(1, t + 1))
-    dif = (beta2 - beta1) * sum(beta2 ** (t - 1 - k) * (l[k] - l[k - 1])
+    ema = (1 - beta2) * sum(beta2 ** (t - k) * lh[k - 1] for k in range(1, t + 1))
+    dif = (beta2 - beta1) * sum(beta2 ** (t - 1 - k) * (lh[k] - lh[k - 1])
                                 for k in range(1, t))
-    tail = beta1 * beta2 ** (t - 1) * s0 + (beta2 - beta1) * beta2 ** (t - 1) * l[0]
+    tail = beta1 * beta2 ** (t - 1) * s0 + (beta2 - beta1) * beta2 ** (t - 1) * lh[0]
     return ema + dif + tail
 
 

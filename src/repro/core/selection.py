@@ -13,8 +13,6 @@ named method for the baseline table.
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 

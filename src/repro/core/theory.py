@@ -25,13 +25,13 @@ def dro_reference_loss(loss_history: np.ndarray, beta1: float, beta2: float,
           + b1(1-b2)^2/(1-b1) * sum_{k=1..t-1} b2^{t-1-k} l(k)
           + b1(1-b2) b2^{t-1} / (1-b1) * s0
     """
-    l = np.asarray(loss_history, np.float64)
-    t = l.shape[0]
+    lh = np.asarray(loss_history, np.float64)
+    t = lh.shape[0]
     c1 = (1 - 2 * beta1 + beta1 * beta2) / (1 - beta1)
-    hist = sum(beta2 ** (t - 1 - k) * l[k - 1] for k in range(1, t))
+    hist = sum(beta2 ** (t - 1 - k) * lh[k - 1] for k in range(1, t))
     c2 = beta1 * (1 - beta2) ** 2 / (1 - beta1)
     c3 = beta1 * (1 - beta2) * beta2 ** (t - 1) / (1 - beta1)
-    return float(c1 * l[t - 1] + c2 * hist + c3 * s0)
+    return float(c1 * lh[t - 1] + c2 * hist + c3 * s0)
 
 
 def dro_weight_update(w_prev: float, loss_new: float, l_ref: float,
@@ -43,13 +43,13 @@ def dro_weight_update(w_prev: float, loss_new: float, l_ref: float,
 def es_weight_sequence(loss_history: np.ndarray, beta1: float, beta2: float,
                        s0: float) -> Tuple[np.ndarray, np.ndarray]:
     """Run Eq. (3.1) over a loss history; returns (w_seq, s_seq)."""
-    l = np.asarray(loss_history, np.float64)
-    T = l.shape[0]
+    lh = np.asarray(loss_history, np.float64)
+    T = lh.shape[0]
     w = np.empty(T)
     s_seq = np.empty(T)
     s = s0
     for t in range(T):
-        w[t] = beta1 * s + (1 - beta1) * l[t]
-        s = beta2 * s + (1 - beta2) * l[t]
+        w[t] = beta1 * s + (1 - beta1) * lh[t]
+        s = beta2 * s + (1 - beta2) * lh[t]
         s_seq[t] = s
     return w, s_seq

@@ -10,7 +10,6 @@ The loader owns *which indices* flow each epoch:
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Iterator, Optional
 
 import numpy as np

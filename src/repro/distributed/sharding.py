@@ -50,7 +50,7 @@ def make_rules(cfg: ModelConfig, mesh: Mesh,
         warnings.warn(
             f"{cfg.name}: moe_sharding='ep' but {cfg.num_experts} experts "
             f"< {model_size}-way model axis — falling back to TP-sharded "
-            f"experts (d_ff over 'model'). See EXPERIMENTS.md §Perf cell 2.",
+            "experts (d_ff over 'model'). See EXPERIMENTS.md §Perf cell 2.",
             stacklevel=2)
 
     shard_kv = cfg.shard_kv_heads and cfg.num_kv_heads % max(model_size, 1) == 0

@@ -7,7 +7,6 @@ only); the TPU build uses the compiled kernel.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

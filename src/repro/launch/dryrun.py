@@ -221,7 +221,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
             params_sh = axes_to_sharding(axes, ctx)
             batch_struct, batch_sh, cache_struct, cache_sh = prefill_specs(
                 cfg, shape, ctx)
-            fn = lambda p, b, c: prefill(cfg, p, b, c, ctx)
+            def fn(p, b, c):
+                return prefill(cfg, p, b, c, ctx)
             jf = jax.jit(fn, in_shardings=(params_sh, batch_sh, cache_sh),
                          donate_argnums=(2,))
             lowered = jf.lower(params_struct, batch_struct, cache_struct)
@@ -235,7 +236,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
             params_sh = axes_to_sharding(axes, ctx)
             (tok_struct, tok_sh, cache_struct, cache_sh,
              pos_struct, pos_sh) = decode_specs(cfg, shape, ctx)
-            fn = lambda p, t, c, pos: decode_step(cfg, p, t, c, pos, ctx)
+            def fn(p, t, c, pos):
+                return decode_step(cfg, p, t, c, pos, ctx)
             jf = jax.jit(fn, in_shardings=(params_sh, tok_sh, cache_sh,
                                            pos_sh),
                          donate_argnums=(2,))

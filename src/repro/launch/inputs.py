@@ -15,7 +15,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import ModelConfig, ShapeConfig
-from ..core.es_step import ESConfig, TrainState, init_train_state
+from ..core.es_step import (CadenceState, ESConfig, TrainState,
+                            init_train_state)
 from ..core.scores import ESScores
 from ..models.layers import ShardCtx
 from ..models.model import init_cache, cache_axes, encoder_len, image_tokens
@@ -95,7 +96,9 @@ def abstract_train_state(cfg: ModelConfig, es_cfg: ESConfig,
     state_sh = TrainState(
         params=param_sh, opt=opt_sh,
         scores=ESScores(s=repl, w=repl, seen=repl),
-        rng=repl, pending_w=repl)
+        rng=repl, pending_w=repl,
+        cadence=CadenceState(drift_s=repl, drift_w=repl, period=repl,
+                             last_scored=repl, since_prune=repl))
     return state_struct, state_sh
 
 

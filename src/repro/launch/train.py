@@ -1,6 +1,12 @@
 """End-to-end ES(WP) trainer: annealing, epoch pruning, checkpoint/resume,
 preemption handling, straggler monitoring, metrics logging.
 
+The step layer is the composable ``ESEngine`` (``core/engine.py``): the
+trainer builds ONE engine and drives every epoch through its
+``EpochSession`` — baseline / serial / decimated / pipelined dispatch,
+the pipelined prime/carry/flush protocol, and the set-level pruning
+cadence all live behind that single entry point.
+
 CPU-runnable with the smoke configs; the same code path drives the pod
 meshes (mesh selection is by device count).  Usage:
 
@@ -23,7 +29,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..configs.registry import get_config, get_smoke_config, list_archs
 from ..core.annealing import AnnealSchedule
-from ..core.es_step import ESConfig, TrainState, init_train_state, make_steps
+from ..core.engine import CadenceConfig, ESConfig, ESEngine, init_train_state
 from ..core.frequency import make_schedule
 from ..core.pruning import prune_epoch
 from ..checkpoint.checkpointer import Checkpointer
@@ -56,8 +62,11 @@ class TrainerConfig:
     seed: int = 0
     pipelined: bool = False
     score_every: int = 1          # k: scoring forward every k-th step (§3.3)
-    freq_schedule: str = "fixed"  # fixed | warmup | adaptive
+    freq_schedule: str = "fixed"  # fixed | warmup | adaptive | drift
     gain_floor: float = 0.5       # adaptive: retained Thm. 3.2 passband
+    drift_target: float = 0.05    # drift: relative |Δs| the servo tracks
+    prune_cadence: str = "epoch"  # epoch | drift (set-level re-prune gate)
+    prune_max_interval: int = 4   # drift prune cadence: epochs backstop
     fused_scores: bool = True     # Pallas score_update kernel in the step
     grad_compression: bool = False   # int8 EF gradient compression
     ckpt_dir: Optional[str] = None
@@ -109,8 +118,17 @@ class Trainer:
                                   beta1=beta1, beta2=beta2,
                                   gain_floor=tc.gain_floor)
         self.ctx = ShardCtx()
-        self.steps = make_steps(self.model_cfg, self.es_cfg, self.opt_cfg,
-                                self.schedule, self.ctx, freq=self.freq)
+        cadence = CadenceConfig(
+            kind="drift" if tc.freq_schedule == "drift" else "static",
+            target=tc.drift_target,
+            k_cap=self.freq.target_period,
+            prune_kind=tc.prune_cadence,
+            prune_max_interval=tc.prune_max_interval)
+        # the single step-layer entry point: every flavour (baseline /
+        # serial / decimated / pipelined + prime/flush) is engine-built
+        self.engine = ESEngine(self.model_cfg, self.es_cfg, self.opt_cfg,
+                               self.schedule, self.ctx, freq=self.freq,
+                               cadence=cadence)
         self.anneal = AnnealSchedule.from_ratio(tc.epochs, tc.anneal_ratio)
         self.ckpt = Checkpointer(tc.ckpt_dir) if tc.ckpt_dir else None
         self.preempt = PreemptionHandler().install()
@@ -119,6 +137,8 @@ class Trainer:
         self.bp_samples_total = 0.0
         self.scoring_steps_total = 0.0
         self.prev_epoch_losses: Optional[np.ndarray] = None
+        self.epochs_since_prune = 0
+        self._pruned_in_process = False
 
         key = jax.random.PRNGKey(tc.seed)
         self.state = init_train_state(self.model_cfg, self.es_cfg,
@@ -127,14 +147,6 @@ class Trainer:
         self.start_epoch = 0
         if self.ckpt and self.ckpt.latest_step() is not None:
             self._resume()
-
-        # scheduled_step delegates to es_step when the schedule fires every
-        # step, so it is THE batch-level entry point; es_step stays exposed
-        # for parity tests and external callers
-        self._jit_es = jax.jit(self.steps["scheduled_step"], donate_argnums=0)
-        self._jit_base = jax.jit(self.steps["baseline_step"], donate_argnums=0)
-        self._jit_pipe = jax.jit(self.steps["pipelined_step"],
-                                 donate_argnums=0)
 
     # ------------------------------------------------------------------
     def _resume(self) -> None:
@@ -145,15 +157,25 @@ class Trainer:
         self.start_epoch = md.get("epoch", 0)
         self.bp_samples_total = md.get("bp_samples_total", 0.0)
         self.scoring_steps_total = md.get("scoring_steps_total", 0.0)
+        self.epochs_since_prune = md.get("epochs_since_prune", 0)
         print(f"[resume] step={self.global_step} epoch={self.start_epoch}")
 
     def _checkpoint(self, epoch: int, final: bool = False) -> None:
         if not self.ckpt:
             return
+        cad = self.state.cadence
         md = {"global_step": self.global_step, "epoch": epoch,
               "bp_samples_total": self.bp_samples_total,
               "scoring_steps_total": self.scoring_steps_total,
-              "method": self.tc.method}
+              "epochs_since_prune": self.epochs_since_prune,
+              "method": self.tc.method,
+              # CadenceState snapshot: human-readable in the manifest (the
+              # authoritative values ride in arrays.npz with the state)
+              "cadence": {"kind": self.engine.cadence.kind,
+                          "period": int(cad.period),
+                          "drift_s": float(cad.drift_s),
+                          "drift_w": float(cad.drift_w),
+                          "since_prune": float(cad.since_prune)}}
         if final:
             self.ckpt.save(self.state, self.global_step, md)
         else:
@@ -161,11 +183,22 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def _prune_for_epoch(self, epoch: int) -> None:
-        """Set-level selection (ESWP / InfoBatch / UCB / KA / Random)."""
+        """Set-level selection (ESWP / InfoBatch / UCB / KA / Random),
+        gated by the engine's pruning cadence (every epoch, or drift)."""
         if self.tc.method not in SET_LEVEL \
                 or not self.anneal.selection_active(epoch):
             self.loader.apply_pruning(None)
             return
+        # count this epoch (inclusive) so prune_max_interval=N really
+        # bounds the gap between prunes at N epochs
+        self.epochs_since_prune += 1
+        # skipping a re-prune is only sound while the loader still holds
+        # the previous kept-set; after a resume the fresh loader has none,
+        # so the first eligible epoch must always prune
+        if self._pruned_in_process \
+                and not self.engine.should_prune(self.state.cadence,
+                                                 self.epochs_since_prune):
+            return                         # keep the previous kept-set
         scores = self.state.scores
         w = np.asarray(scores.w)
         s = np.asarray(scores.s)
@@ -176,8 +209,34 @@ class Trainer:
                           ratio=self.tc.pruning_ratio)
         self.loader.apply_pruning(res.kept, res.grad_scale)
         self.prev_epoch_losses = s.copy()
+        self.epochs_since_prune = 0
+        self._pruned_in_process = True
+        self.state = self.engine.reset_prune_drift(self.state)
 
     # ------------------------------------------------------------------
+    def _record(self, epoch: int, m: Dict[str, Any], dur: float) -> bool:
+        """Book one trained step; returns True when training should stop."""
+        self.straggler.record(self.global_step, dur)
+        self.global_step += 1
+        self.bp_samples_total += float(m["bp_samples"])
+        scored = float(m.get("scored", 1.0))
+        self.scoring_steps_total += scored
+        rec = {"step": self.global_step, "epoch": epoch,
+               "loss": float(m["loss"]),
+               "scored": scored,
+               "bp_samples_total": self.bp_samples_total,
+               "step_time": dur}
+        self.metrics_log.append(rec)
+        if self.ckpt and self.global_step % self.tc.ckpt_every_steps == 0:
+            self._checkpoint(epoch)
+        if self.preempt.preemption_requested:
+            print("[preempt] checkpoint-and-exit")
+            self._checkpoint(epoch, final=True)
+            return True
+        if self.tc.max_steps and self.global_step >= self.tc.max_steps:
+            return True
+        return False
+
     def train(self) -> Dict[str, Any]:
         tc = self.tc
         t_start = time.time()
@@ -187,44 +246,25 @@ class Trainer:
             self._prune_for_epoch(epoch)
             selection_on = (self.anneal.selection_active(epoch)
                             and self.sel_method != "baseline")
-            prev_batch = None
+            sess = self.engine.session(selection_on, tc.pipelined)
             for batch in self.loader.epoch(epoch):
                 jb = {k: jnp.asarray(v) for k, v in batch.items()}
                 t0 = time.time()
-                if not selection_on:
-                    self.state, m = self._jit_base(self.state, jb)
-                elif tc.pipelined:
-                    if prev_batch is None:
-                        prev_batch = jb
-                        continue
-                    self.state, m = self._jit_pipe(self.state,
-                                                   (prev_batch, jb))
-                    prev_batch = jb
-                else:
-                    self.state, m = self._jit_es(self.state, jb)
-                dur = time.time() - t0
-                self.straggler.record(self.global_step, dur)
-                self.global_step += 1
-                self.bp_samples_total += float(m["bp_samples"])
-                scored = float(m.get("scored", 1.0))
-                self.scoring_steps_total += scored
-                rec = {"step": self.global_step, "epoch": epoch,
-                       "loss": float(m["loss"]),
-                       "scored": scored,
-                       "bp_samples_total": self.bp_samples_total,
-                       "step_time": dur}
-                self.metrics_log.append(rec)
-                if self.ckpt and self.global_step % tc.ckpt_every_steps == 0:
-                    self._checkpoint(epoch)
-                if self.preempt.preemption_requested:
-                    print("[preempt] checkpoint-and-exit")
-                    self._checkpoint(epoch, final=True)
-                    stop = True
+                self.state, m = sess.step(self.state, jb)
+                if m is None:       # pipelined prime: batch held, no train
+                    continue
+                stop = self._record(epoch, m, time.time() - t0)
+                if stop:
                     break
-                if tc.max_steps and self.global_step >= tc.max_steps:
-                    stop = True
-                    break
+            # prime steps run real scoring forwards but emit no metrics
+            self.scoring_steps_total += sess.scoring_primes
             if stop:
+                break
+            # drain the pipelined carry so the epoch's last meta-batch
+            # trains instead of being dropped at the boundary
+            t0 = time.time()
+            self.state, m = sess.finish(self.state)
+            if m is not None and self._record(epoch, m, time.time() - t0):
                 break
         self._checkpoint(epoch, final=True)
         if self.ckpt:
@@ -276,12 +316,19 @@ def main() -> None:
     ap.add_argument("--score-every", type=int, default=1,
                     help="k: run the scoring forward every k-th step (§3.3)")
     ap.add_argument("--freq-schedule", default="fixed",
-                    choices=["fixed", "warmup", "adaptive"],
+                    choices=["fixed", "warmup", "adaptive", "drift"],
                     help="scoring-frequency schedule (core/frequency.py); "
-                         "adaptive treats --score-every as the period cap "
-                         "(64 when left at 1)")
+                         "adaptive/drift treat --score-every as the period "
+                         "cap (64 when left at 1); drift servoes the period "
+                         "from the observed score-store deltas at runtime")
     ap.add_argument("--gain-floor", type=float, default=0.5,
                     help="adaptive schedule: retained Thm. 3.2 passband")
+    ap.add_argument("--drift-target", type=float, default=0.05,
+                    help="drift schedule: relative |Δs| the servo tracks")
+    ap.add_argument("--prune-cadence", default="epoch",
+                    choices=["epoch", "drift"],
+                    help="set-level (ESWP) re-prune gate: every epoch, or "
+                         "when the observed score drift re-arms it")
     ap.add_argument("--no-fused-scores", dest="fused_scores",
                     action="store_false",
                     help="use XLA scatter instead of the Pallas score kernel")
@@ -297,6 +344,8 @@ def main() -> None:
                        score_every=args.score_every,
                        freq_schedule=args.freq_schedule,
                        gain_floor=args.gain_floor,
+                       drift_target=args.drift_target,
+                       prune_cadence=args.prune_cadence,
                        fused_scores=args.fused_scores,
                        log_path=args.log_path, max_steps=args.max_steps)
     out = Trainer(tc).train()

@@ -23,7 +23,7 @@ Logical axes: "expert_group", "expert", "expert_cap", "moe_mlp".
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -236,7 +236,6 @@ def mamba2_decode(params: Params, x: jax.Array, cache: Dict[str, jax.Array], *,
 
     # depthwise causal conv with stored tail
     cx, cbc = params["conv_x"].astype(jnp.float32), params["conv_bc"].astype(jnp.float32)
-    W = cx.shape[0]
     win_x = jnp.concatenate([cache["conv_x"], xi.astype(jnp.float32)[:, None, :]], axis=1)
     win_bc = jnp.concatenate([cache["conv_bc"], bc.astype(jnp.float32)[:, None, :]], axis=1)
     xi_c = jax.nn.silu(jnp.einsum("bwc,wc->bc", win_x, cx))

@@ -15,7 +15,6 @@ O(1) in depth; remat policy wraps the scan body.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -276,11 +275,13 @@ def lm_hidden(cfg: ModelConfig, params: Params, tokens: jax.Array,
         memory = memory.astype(dt)
 
     if cfg.family in ("dense", "moe"):
-        body = lambda h, p: _dense_block_fwd(cfg, p, h, ctx)
+        def body(h, p):
+            return _dense_block_fwd(cfg, p, h, ctx)
         x = _scan_stack(body, x, params["layers"], cfg.remat_policy,
                         cfg.scan_unroll)
     elif cfg.family == "ssm":
-        body = lambda h, p: _mamba_block_fwd(cfg, p, h, ctx)
+        def body(h, p):
+            return _mamba_block_fwd(cfg, p, h, ctx)
         x = _scan_stack(body, x, params["layers"], cfg.remat_policy,
                         cfg.scan_unroll)
     elif cfg.family == "hybrid":
@@ -288,7 +289,8 @@ def lm_hidden(cfg: ModelConfig, params: Params, tokens: jax.Array,
         scfg = dataclasses_replace_dense(cfg)
 
         def site_body(h, site_p):
-            inner = lambda hh, p: _mamba_block_fwd(cfg, p, hh, ctx)
+            def inner(hh, p):
+                return _mamba_block_fwd(cfg, p, hh, ctx)
             h = _scan_stack(inner, h, site_p, cfg.remat_policy,
                             cfg.scan_unroll)
             return _dense_block_fwd(scfg, shared, h, ctx)
@@ -300,7 +302,8 @@ def lm_hidden(cfg: ModelConfig, params: Params, tokens: jax.Array,
 
         def site_body(h, site_p):
             sp, cp = site_p
-            inner = lambda hh, p: _dense_block_fwd(cfg, p, hh, ctx)
+            def inner(hh, p):
+                return _dense_block_fwd(cfg, p, hh, ctx)
             h = _scan_stack(inner, h, sp, cfg.remat_policy, cfg.scan_unroll)
             return _cross_block_fwd(cfg, cp, h, memory, ctx)
 

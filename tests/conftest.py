@@ -5,3 +5,48 @@ import sys
 # placeholder devices, in its own process)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks pkg
+
+
+def smoke_engine_setup(freq=None, cadence=None, n=128, meta_batch=16,
+                       minibatch=4, fused=True, lr=1e-3):
+    """Shared smoke-scale ESEngine fixture for the step parity suites
+    (tests/test_frequency.py and tests/test_engine.py build the same
+    model/data/engine; keep it in one place so the suites cannot drift).
+
+    Returns (engine, init TrainState, list of meta-batches).
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs.registry import get_smoke_config
+    from repro.core.engine import ESConfig, ESEngine, init_train_state
+    from repro.data.synthetic import SyntheticConfig, SyntheticLM
+    from repro.models.layers import ShardCtx
+    from repro.optim.adamw import OptConfig
+
+    model_cfg = get_smoke_config("qwen1.5-0.5b")
+    ds = SyntheticLM(SyntheticConfig(n_samples=n, seq_len=32,
+                                     vocab_size=64, seed=0))
+    es_cfg = ESConfig(method="es", minibatch=minibatch, n_train=n,
+                      seq_chunk=0, fused_scores=fused)
+    opt_cfg = OptConfig(kind="adamw", lr=lr)
+    eng = ESEngine(model_cfg, es_cfg, opt_cfg,
+                   lambda s: jnp.asarray(1.0, jnp.float32), ShardCtx(),
+                   freq=freq, cadence=cadence)
+    state = init_train_state(model_cfg, es_cfg, opt_cfg,
+                             jax.random.PRNGKey(0), meta_batch)
+    batches = [{k: jnp.asarray(v) for k, v in
+                ds.batch(np.arange(i * meta_batch,
+                                   (i + 1) * meta_batch)).items()}
+               for i in range(n // meta_batch)]
+    return eng, state, batches
+
+
+def assert_trees_equal(a, b):
+    """Leaf-wise exact array equality over two pytrees."""
+    import jax
+    import numpy as np
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

@@ -1,6 +1,5 @@
 """Benchmark/report tooling sanity (roofline readers, model-FLOPs calc)."""
 import json
-from pathlib import Path
 
 import pytest
 

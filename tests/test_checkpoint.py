@@ -1,16 +1,12 @@
 """Checkpointer: roundtrip, async, atomicity, keep-K, restore semantics."""
-import dataclasses
-import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.core.scores import ESScores, init_scores
+from repro.core.scores import init_scores
 
 
 def _state(seed=0):

@@ -6,7 +6,6 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.distributed.compression import (quantize_int8, dequantize_int8,
                                            compress_decompress,

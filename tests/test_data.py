@@ -1,6 +1,5 @@
 """Data pipeline: determinism, host sharding, pruning hooks."""
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ModuleNotFoundError:          # hermetic env: deterministic shim

@@ -1,0 +1,299 @@
+"""Composable ES engine: parity, pipelined decimation, drift cadence,
+epoch flush, pruning cadence.
+
+Tentpole contracts (ISSUE 2):
+  * engine-built k=1 steps are bit-identical to the legacy ``es_step``
+    flavour — exact array equality over >= 10 steps;
+  * the pipelined scoring leg honors the FreqSchedule: skipped steps leave
+    the score store untouched (``scored`` metric = 0) and reuse stale
+    store weights;
+  * the drift cadence lengthens the scoring period on a converged
+    (flat-loss) stream;
+  * the trainer's pipelined session primes at epoch start and flushes the
+    held meta-batch at epoch end (no batch dropped at the boundary).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import assert_trees_equal as _assert_trees_equal
+from conftest import smoke_engine_setup
+
+from repro.core.engine import CadenceConfig, init_cadence, make_steps
+from repro.core.frequency import FreqSchedule
+
+_setup = functools.partial(smoke_engine_setup, n=192)
+
+
+# ---------------------------------------------------------------------------
+# parity: engine-built k=1 == legacy es_step, bit-identical over >= 10 steps
+# ---------------------------------------------------------------------------
+
+def test_engine_k1_bit_identical_to_legacy_es_step_over_10_steps():
+    eng, s0, batches = _setup()
+    legacy = make_steps(eng.model_cfg, eng.es_cfg, eng.opt_cfg,
+                        eng.schedule, eng.ctx)
+    es = jax.jit(legacy["es_step"])
+    sched = jax.jit(eng.scheduled_step)       # default freq: k=1
+    s_es, s_sc = s0, s0
+    for i in range(12):                       # >= 10 steps, exact equality
+        b = batches[i % len(batches)]
+        s_es, m_es = es(s_es, b)
+        s_sc, m_sc = sched(s_sc, b)
+        for key in ("loss", "sel_loss", "w_mean", "w_max", "bp_samples"):
+            np.testing.assert_array_equal(np.asarray(m_es[key]),
+                                          np.asarray(m_sc[key]))
+    _assert_trees_equal(s_es, s_sc)
+
+
+def test_engine_scheduled_k1_delegates_to_serial_es():
+    """At k=1 the scheduled flavour IS serial ES — no lax.cond in the
+    graph.  The decimated path is detectable by its extra cadence metric;
+    the delegated path must not carry it."""
+    eng, state, batches = _setup()
+    steps = eng.make_steps()
+    assert set(steps) == {"baseline_step", "es_step", "scheduled_step",
+                          "pipelined_step"}
+    assert eng.freq.always_scores()
+    _, m1 = jax.jit(eng.scheduled_step)(state, batches[0])
+    assert "cad_period" not in m1          # delegated: serial es metrics
+    eng2, state2, _ = _setup(freq=FreqSchedule(kind="fixed", k=2))
+    _, m2 = jax.jit(eng2.scheduled_step)(state2, batches[0])
+    assert "cad_period" in m2              # decimated: cond path metrics
+
+
+def test_pipelined_set_level_only_degrades_to_baseline():
+    """b >= B (set-level-only ESWP): the pipelined flavour must fuse
+    scoring into the training forward — one forward per batch, no overlap
+    leg, prime a no-op, flush a plain fused step."""
+    eng, state, batches = _setup(minibatch=16)      # b == meta_batch
+    state0_seen = np.asarray(state.scores.seen).sum()
+    state = jax.jit(eng.prime_step)(state, batches[0])
+    # prime is a no-op: nothing scored
+    assert np.asarray(state.scores.seen).sum() == state0_seen
+    state, m = jax.jit(eng.pipelined_step)(state, (batches[0], batches[1]))
+    # trained the full meta-batch, scored only `cur` (fused), not `nxt`
+    assert float(m["bp_samples"]) == 16.0
+    assert float(m["scored"]) == 0.0       # no dedicated scoring forward
+    seen = np.asarray(state.scores.seen)
+    assert seen[np.asarray(batches[0]["sample_ids"])].min() == 1
+    assert seen[np.asarray(batches[1]["sample_ids"])].max() == 0
+    state, m = jax.jit(eng.flush_step)(state, batches[1])
+    assert float(m["bp_samples"]) == 16.0
+    assert np.asarray(state.scores.seen)[
+        np.asarray(batches[1]["sample_ids"])].min() == 1
+
+
+def test_build_step_rejects_unknown_kind():
+    eng, _, _ = _setup()
+    with pytest.raises(ValueError):
+        eng.build_step("nope")
+
+
+# ---------------------------------------------------------------------------
+# pipelined scoring leg honors the FreqSchedule (ROADMAP open item)
+# ---------------------------------------------------------------------------
+
+def test_pipelined_decimation_skips_scoring_leg():
+    k = 3
+    eng, state, batches = _setup(freq=FreqSchedule(kind="fixed", k=k))
+    pipe = jax.jit(eng.pipelined_step)
+    pairs = [(batches[i % len(batches)], batches[(i + 1) % len(batches)])
+             for i in range(6)]
+    scored = []
+    for pair in pairs:
+        prev_scores = state.scores
+        state, m = pipe(state, pair)
+        scored.append(float(m["scored"]))
+        if m["scored"] == 0.0:
+            # skipped step: the whole score store is untouched and the
+            # carried weights come from the stale store
+            np.testing.assert_array_equal(np.asarray(prev_scores.s),
+                                          np.asarray(state.scores.s))
+            np.testing.assert_array_equal(np.asarray(prev_scores.w),
+                                          np.asarray(state.scores.w))
+            np.testing.assert_array_equal(np.asarray(prev_scores.seen),
+                                          np.asarray(state.scores.seen))
+    assert scored == [1.0, 0.0, 0.0] * 2
+
+
+def test_prime_does_not_suppress_first_pipelined_scoring():
+    """The prime fires at the same opt step as the first pipelined step;
+    its firing is backdated so a period-1 drift cadence still scores the
+    first overlap leg (regression: it used to be suppressed)."""
+    eng, state, batches = _setup(cadence=CadenceConfig(kind="drift",
+                                                       k_cap=1))
+    state = jax.jit(eng.prime_step)(state, batches[0])
+    state, m = jax.jit(eng.pipelined_step)(state, (batches[0], batches[1]))
+    assert float(m["scored"]) == 1.0
+
+
+def test_pipelined_skipped_step_logs_measured_loss():
+    """On decimated pipelined steps the logged loss is the measured
+    mini-batch loss, not the stale store EMA (~1/n for unseen ids)."""
+    eng, state, batches = _setup(freq=FreqSchedule(kind="fixed", k=2))
+    pipe = jax.jit(eng.pipelined_step)
+    state, m0 = pipe(state, (batches[0], batches[1]))   # scores
+    state, m1 = pipe(state, (batches[1], batches[2]))   # skipped
+    assert float(m1["scored"]) == 0.0
+    np.testing.assert_array_equal(np.asarray(m1["loss"]),
+                                  np.asarray(m1["sel_loss"]))
+    assert float(m1["loss"]) > 0.1        # a real LM loss, not ~1/n
+
+
+def test_pipelined_always_scores_at_k1():
+    eng, state, batches = _setup()
+    pipe = jax.jit(eng.pipelined_step)
+    state, m = pipe(state, (batches[0], batches[1]))
+    assert float(m["scored"]) == 1.0
+    # next batch's ids were scored into the store
+    ids = np.asarray(batches[1]["sample_ids"])
+    assert np.asarray(state.scores.seen)[ids].min() == 1
+
+
+# ---------------------------------------------------------------------------
+# drift-adaptive cadence (observed-signal scheduling)
+# ---------------------------------------------------------------------------
+
+def test_drift_cadence_lengthens_period_on_flat_stream():
+    """With frozen params (lr_scale == 0 via a zero schedule) the loss
+    stream is constant, the Eq. (3.1) store converges, the observed drift
+    decays, and the servo must open the scoring period up to the cap."""
+    cadence = CadenceConfig(kind="drift", rho=0.5, target=0.1, band=2.0,
+                            k_cap=8)
+    eng, state, batches = _setup(cadence=cadence)
+    eng.schedule = lambda s: jnp.asarray(0.0, jnp.float32)  # freeze params
+    sched = jax.jit(eng.scheduled_step)
+    batch = batches[0]                       # one batch: flat loss stream
+    scored, periods = [], []
+    for _ in range(48):
+        state, m = sched(state, batch)
+        scored.append(float(m["scored"]))
+        periods.append(float(m["cad_period"]))
+    # cold store: the first steps all score
+    assert scored[:4] == [1.0] * 4
+    # converged store: the period opened to the cap and scoring decimated
+    assert int(state.cadence.period) == cadence.k_cap
+    assert sum(scored) < 0.7 * len(scored)
+    # the period never shrank on a flat stream
+    assert all(b >= a for a, b in zip(periods, periods[1:]))
+
+
+def test_drift_cadence_cap1_matches_es_step_trajectory():
+    """k_cap=1 pins the servo to period 1 — the drift engine must follow
+    the serial-ES trajectory (cond path vs inline path)."""
+    eng_d, s0, batches = _setup(cadence=CadenceConfig(kind="drift", k_cap=1))
+    eng_e, _, _ = _setup()
+    drift = jax.jit(eng_d.scheduled_step)
+    es = jax.jit(eng_e.es_step)
+    s_d, s_e = s0, s0
+    for i in range(6):
+        b = batches[i % len(batches)]
+        s_d, m_d = drift(s_d, b)
+        s_e, m_e = es(s_e, b)
+        assert float(m_d["scored"]) == 1.0
+    np.testing.assert_allclose(np.asarray(s_d.scores.s),
+                               np.asarray(s_e.scores.s), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_d.scores.w),
+                               np.asarray(s_e.scores.w), rtol=1e-6)
+    for x, y in zip(jax.tree.leaves(s_d.params),
+                    jax.tree.leaves(s_e.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# set-level pruning cadence (host-side gate)
+# ---------------------------------------------------------------------------
+
+def test_should_prune_gates_on_drift_and_interval():
+    eng, state, _ = _setup(
+        cadence=CadenceConfig(kind="drift", prune_kind="drift",
+                              prune_drift_floor=0.25,
+                              prune_max_interval=4))
+    import dataclasses
+    quiet = init_cadence()
+    noisy = dataclasses.replace(init_cadence(),
+                                since_prune=jnp.asarray(0.5, jnp.float32))
+    assert not eng.should_prune(quiet, epochs_since_prune=0)
+    assert eng.should_prune(noisy, epochs_since_prune=0)     # drift re-arms
+    assert eng.should_prune(quiet, epochs_since_prune=4)     # backstop
+    # epoch cadence: always, regardless of drift
+    eng_epoch, _, _ = _setup()
+    assert eng_epoch.should_prune(quiet, epochs_since_prune=0)
+    # reset zeroes the accumulator
+    state2 = eng.reset_prune_drift(
+        dataclasses.replace(state, cadence=noisy))
+    assert float(state2.cadence.since_prune) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# pipelined epoch protocol: prime at start, flush at end (no dropped batch)
+# ---------------------------------------------------------------------------
+
+def test_session_primes_and_flushes_pipelined_epoch():
+    eng, state, batches = _setup()
+    sess = eng.session(selection_on=True, pipelined=True)
+    trained = 0
+    for b in batches[:4]:
+        state, m = sess.step(state, b)
+        if m is not None:
+            trained += 1
+    state, m = sess.finish(state)
+    assert m is not None and float(m["scored"]) == 0.0
+    trained += 1
+    assert trained == 4                 # every batch trained, none dropped
+    state, m = sess.finish(state)       # idempotent: nothing left to drain
+    assert m is None
+
+
+def test_trainer_pipelined_counts_epoch_tail_in_bp_samples():
+    from repro.launch.train import Trainer, TrainerConfig
+    tc = TrainerConfig(arch="qwen1.5-0.5b", method="es", epochs=2,
+                       meta_batch=16, minibatch=4, n_samples=64, seq_len=32,
+                       lr=3e-3, pipelined=True, anneal_ratio=0.0)
+    out = Trainer(tc).train()
+    steps_per_epoch = 64 // 16
+    # pre-engine, the last meta-batch of each epoch was stashed and never
+    # trained: 3 steps/epoch; the flush restores the full 4
+    assert out["steps"] == tc.epochs * steps_per_epoch
+    assert out["bp_samples_total"] == tc.epochs * steps_per_epoch * 4
+    # per epoch: 1 prime + (steps_per_epoch - 1) scored pipelined steps
+    # + 1 unscored flush — every scoring forward is accounted for
+    assert out["scoring_steps_total"] == tc.epochs * steps_per_epoch
+
+
+def test_prune_gate_always_reprunes_in_fresh_process():
+    """Regression: with --prune-cadence drift, a quiet store must not let
+    a freshly constructed trainer (e.g. after a resume) skip pruning — the
+    loader holds no kept-set yet, so skipping would train on the full
+    unpruned dataset (and drop InfoBatch grad_scale)."""
+    from repro.launch.train import Trainer, TrainerConfig
+    tc = TrainerConfig(arch="qwen1.5-0.5b", method="eswp", epochs=4,
+                       meta_batch=16, minibatch=16, n_samples=64,
+                       seq_len=32, anneal_ratio=0.0, prune_cadence="drift")
+    tr = Trainer(tc)
+    tr._prune_for_epoch(1)
+    assert tr.loader._kept is not None     # forced despite quiet cadence
+    # once this process has pruned, a quiet store may keep the kept-set
+    tr.loader.apply_pruning(None)
+    tr._prune_for_epoch(2)
+    assert tr.loader._kept is None         # gate skipped the re-prune
+
+
+def test_trainer_drift_schedule_trains_and_decimates():
+    from repro.launch.train import Trainer, TrainerConfig
+    # each sample is revisited once per epoch, so its loss moves a lot
+    # between scorings early in training — the servo target is set above
+    # the late-training drift so the period opens once the store settles
+    tc = TrainerConfig(arch="qwen1.5-0.5b", method="es", epochs=3,
+                       meta_batch=16, minibatch=4, n_samples=256, seq_len=32,
+                       lr=3e-3, anneal_ratio=0.0,
+                       freq_schedule="drift", score_every=8,
+                       drift_target=1.5)
+    out = Trainer(tc).train()
+    losses = [m["loss"] for m in out["metrics"]]
+    assert losses[-1] < losses[0] * 0.9
+    # the servo must have skipped at least some scoring forwards
+    assert out["scoring_steps_total"] < out["steps"]

@@ -7,8 +7,6 @@ Verifies the paper's *claims* at smoke scale:
   * the trainer resumes exactly from a checkpoint (fault tolerance);
   * pipelined-ES (beyond paper) also trains.
 """
-import json
-
 import jax
 import numpy as np
 import pytest
@@ -94,8 +92,6 @@ def test_scores_concentrate_bp_away_from_noise():
     tr, _ = _run("es", epochs=6, n=256)
     ds = tr.ds
     w = np.asarray(tr.state.scores.w)
-    seen = np.asarray(tr.state.scores.seen)
-    noise = ds.sample_class == 3
     easy = ds.sample_class == 0
     # easy samples end with clearly lower weights than hard/noise
     assert w[easy].mean() < w[~easy].mean()

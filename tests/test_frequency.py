@@ -9,13 +9,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import assert_trees_equal, smoke_engine_setup
 
-from repro.configs.registry import get_smoke_config
-from repro.core.es_step import ESConfig, init_train_state, make_steps
 from repro.core.frequency import FreqSchedule, adaptive_period, make_schedule
-from repro.data.synthetic import SyntheticConfig, SyntheticLM
-from repro.models.layers import ShardCtx
-from repro.optim.adamw import OptConfig
 
 
 # ---------------------------------------------------------------------------
@@ -109,27 +105,14 @@ def test_should_score_is_jittable():
 # ---------------------------------------------------------------------------
 
 def _setup(freq=None, n=128, meta_batch=16, minibatch=4, fused=True):
-    model_cfg = get_smoke_config("qwen1.5-0.5b")
-    ds = SyntheticLM(SyntheticConfig(n_samples=n, seq_len=32,
-                                     vocab_size=64, seed=0))
-    es_cfg = ESConfig(method="es", minibatch=minibatch, n_train=n,
-                      seq_chunk=0, fused_scores=fused)
-    opt_cfg = OptConfig(kind="adamw", lr=1e-3)
-    steps = make_steps(model_cfg, es_cfg, opt_cfg,
-                       lambda s: jnp.asarray(1.0, jnp.float32),
-                       ShardCtx(), freq=freq)
-    state = init_train_state(model_cfg, es_cfg, opt_cfg,
-                             jax.random.PRNGKey(0), meta_batch)
-    batches = [{k: jnp.asarray(v) for k, v in
-                ds.batch(np.arange(i * meta_batch,
-                                   (i + 1) * meta_batch)).items()}
-               for i in range(n // meta_batch)]
-    return steps, state, batches
+    eng, state, batches = smoke_engine_setup(freq=freq, n=n,
+                                             meta_batch=meta_batch,
+                                             minibatch=minibatch,
+                                             fused=fused)
+    return eng.make_steps(), state, batches
 
 
-def _assert_states_equal(a, b):
-    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
-        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+_assert_states_equal = assert_trees_equal
 
 
 def test_scheduled_step_k1_bit_identical_to_es_step():

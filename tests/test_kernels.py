@@ -12,7 +12,7 @@ from repro.kernels.flash_attn.ref import attention_ref
 from repro.kernels.score_update.score_update import fused_score_update
 from repro.kernels.score_update.ops import update_scores_fused
 from repro.kernels.score_update.ref import score_update_ref
-from repro.core.scores import ESScores, init_scores, update_scores
+from repro.core.scores import init_scores, update_scores
 
 
 # ---------------------------------------------------------------------------

@@ -3,7 +3,6 @@ at the model level."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models.losses import per_sample_xent, last_token_logits
 from repro.models.layers import ShardCtx

@@ -1,7 +1,5 @@
 """Per-arch reduced smoke tests: forward + one ES train step, shapes + no
 NaNs (assignment deliverable f)."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -66,7 +64,7 @@ def test_smoke_es_train_step(arch):
     # scores were scattered for the meta-batch rows
     assert int(jnp.sum(state.scores.seen)) == B
     leaves = jax.tree.leaves(state.params)
-    assert all(np.isfinite(np.asarray(l)).all() for l in leaves)
+    assert all(np.isfinite(np.asarray(leaf)).all() for leaf in leaves)
 
 
 def test_full_configs_match_published_sizes():

@@ -42,7 +42,9 @@ def test_adamw_converges_on_quadratic():
     cfg = OptConfig(lr=0.1, weight_decay=0.0)
     params = {"x": jnp.asarray([5.0, -3.0])}
     state = init_opt_state(cfg, params)
-    loss = lambda p: jnp.sum(jnp.square(p["x"]))
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["x"]))
     for _ in range(200):
         g = jax.grad(loss)(params)
         params, state, _ = apply_updates(cfg, params, g, state,
@@ -54,7 +56,9 @@ def test_sgdm_converges_on_quadratic():
     cfg = OptConfig(kind="sgdm", lr=0.05, momentum=0.9, weight_decay=0.0)
     params = {"x": jnp.asarray([4.0])}
     state = init_opt_state(cfg, params)
-    loss = lambda p: jnp.sum(jnp.square(p["x"]))
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["x"]))
     for _ in range(100):
         g = jax.grad(loss)(params)
         params, state, _ = apply_updates(cfg, params, g, state,

@@ -71,6 +71,33 @@ def test_ka_move_back_readmits_worsening_samples():
         assert i in res.kept
 
 
+def test_ka_tau_decay_tolerance_is_live():
+    """Regression: the ka_tau-weighted move-back mask used to be computed
+    and then discarded in favour of a plain ``losses > prev`` comparison.
+    The criterion is ``losses > ka_tau * prev``: tau = 1 is the plain rule,
+    tau < 1 re-admits hidden samples whose loss did not decay enough."""
+    n = 100
+    losses = np.linspace(0.1, 2.0, n).astype(np.float32)
+    prev = losses / 0.9                     # every sample improved ~10%
+    # plain rule (default tau = 1): nothing got worse -> nobody moves back
+    res_plain = prune_epoch("ka", np.random.default_rng(0), weights=losses,
+                            losses=losses, prev_losses=prev, ratio=0.3)
+    assert len(res_plain.kept) == 70
+    # tau = 0.7 demands a >= 30% decay to stay hidden; 10% is not enough
+    res_tau = prune_epoch("ka", np.random.default_rng(0), weights=losses,
+                          losses=losses, prev_losses=prev, ratio=0.3,
+                          ka_tau=0.7)
+    assert len(res_tau.kept) == n           # everything moved back
+    # a sample that really decayed (50%) stays hidden under tau = 0.7
+    prev2 = prev.copy()
+    prev2[:5] = losses[:5] / 0.5
+    res_mixed = prune_epoch("ka", np.random.default_rng(0), weights=losses,
+                            losses=losses, prev_losses=prev2, ratio=0.3,
+                            ka_tau=0.7)
+    for i in range(5):
+        assert i not in res_mixed.kept
+
+
 def test_none_method_keeps_everything():
     w, losses, _ = _stats(64)
     res = prune_epoch("none", np.random.default_rng(0), weights=w,

@@ -1,8 +1,6 @@
 """Property tests for the ES score recursion (paper Prop. 3.1 / Thm. 3.2)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ModuleNotFoundError:          # hermetic env: deterministic shim
@@ -21,10 +19,10 @@ loss_seqs = st.lists(st.floats(1e-3, 10.0), min_size=1, max_size=30)
 def test_prop31_recursion_equals_expansion(losses, beta1, beta2):
     """Eq. (3.1) recursion == Eq. (3.2) EMA + difference expansion, exactly
     (the O(beta2^t) tail kept exact in expansion_weights)."""
-    l = np.asarray(losses, np.float64)   # numpy: exact f64 regardless of x64
+    lh = np.asarray(losses, np.float64)  # numpy: exact f64 regardless of x64
     s0 = 0.25
-    w_rec = explicit_weights(l, beta1, beta2, s0)
-    w_exp = expansion_weights(l, beta1, beta2, s0)
+    w_rec = explicit_weights(lh, beta1, beta2, s0)
+    w_exp = expansion_weights(lh, beta1, beta2, s0)
     np.testing.assert_allclose(float(w_rec), float(w_exp), rtol=1e-6,
                                atol=1e-8)
 
@@ -37,12 +35,12 @@ def test_update_scores_matches_scalar_recursion(losses, beta1, beta2):
     scores = init_scores(n)
     sid = jnp.asarray([2], jnp.int32)
     s_ref, w_ref = 1.0 / n, 1.0 / n
-    for l in losses:
-        larr = jnp.asarray([l], jnp.float32)
+    for loss in losses:
+        larr = jnp.asarray([loss], jnp.float32)
         w_now = batch_weights(scores, sid, larr, beta1, beta2)
         scores = update_scores(scores, sid, larr, beta1, beta2)
-        w_ref = beta1 * s_ref + (1 - beta1) * l
-        s_ref = beta2 * s_ref + (1 - beta2) * l
+        w_ref = beta1 * s_ref + (1 - beta1) * loss
+        s_ref = beta2 * s_ref + (1 - beta2) * loss
         np.testing.assert_allclose(float(w_now[0]), w_ref, rtol=1e-4)
     np.testing.assert_allclose(float(scores.s[2]), s_ref, rtol=1e-4)
     np.testing.assert_allclose(float(scores.w[2]), w_ref, rtol=1e-4)
@@ -84,9 +82,9 @@ def test_difference_term_damps_oscillating_losses():
     w_es = []
     s = 1.0
     b1, b2 = 0.2, 0.9
-    for l in osc:
-        w_es.append(b1 * s + (1 - b1) * l)
-        s = b2 * s + (1 - b2) * l
+    for loss in osc:
+        w_es.append(b1 * s + (1 - b1) * loss)
+        s = b2 * s + (1 - b2) * loss
     w_es = np.asarray(w_es)
     # variance of the ES weight signal < variance of raw losses
     assert np.var(w_es[50:]) < np.var(osc[50:])

@@ -1,8 +1,5 @@
 """End-to-end behaviour tests for the whole system (serving + ES frameworks
 wired together)."""
-import dataclasses
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -16,15 +16,15 @@ betas = st.floats(0.05, 0.95)
 def test_dro_update_consistent_with_es(losses, beta1, beta2):
     """Prop. B.2: the gradient-ascent DRO weight update with the paper's
     reference loss reproduces the ES weight sequence Eq. (3.1)."""
-    l = np.asarray(losses, np.float64)
+    lh = np.asarray(losses, np.float64)
     s0 = 1.0 / 7
-    w_es, _ = es_weight_sequence(l, beta1, beta2, s0)
+    w_es, _ = es_weight_sequence(lh, beta1, beta2, s0)
     # replay Eq. (B.35): w(t+1) = w(t) + (1-beta1)(l(t+1) - l_ref(1:t))
-    w = beta1 * s0 + (1 - beta1) * l[0]      # w(1)
+    w = beta1 * s0 + (1 - beta1) * lh[0]     # w(1)
     np.testing.assert_allclose(w, w_es[0], rtol=1e-9)
-    for t in range(1, len(l)):
-        lref = dro_reference_loss(l[:t], beta1, beta2, s0)
-        w = dro_weight_update(w, l[t], lref, beta1)
+    for t in range(1, len(lh)):
+        lref = dro_reference_loss(lh[:t], beta1, beta2, s0)
+        w = dro_weight_update(w, lh[t], lref, beta1)
         np.testing.assert_allclose(w, w_es[t], rtol=1e-7, atol=1e-9)
 
 
