@@ -16,6 +16,11 @@ non-increasing in k (the scoring fraction is 1/k).
 CI compares the emitted artifact against the previous run's via
 ``benchmarks/bench_trend.py`` and fails on step-time regressions beyond
 the noise tolerance.
+
+The artifact also carries a ``staleness`` section — the pipelined-vs-serial
+ablation at equal steps (quality proxy: relative L2 divergence of the score
+store), quantifying what the 1-step-stale scoring params of the overlap
+variant cost in score fidelity.
 """
 from __future__ import annotations
 
@@ -85,6 +90,38 @@ def _monotone(ms: List[float], tolerance: float) -> bool:
     return all(b <= a * (1.0 + tolerance) for a, b in zip(ms, ms[1:]))
 
 
+def _staleness_ablation(engine: ESEngine, fresh_state: Callable,
+                        batches: List) -> Dict:
+    """Pipelined-vs-serial quality proxy at equal steps (ROADMAP item).
+
+    Both runs train and score the SAME batch set — serial scores batch t
+    with post-update params, pipelined scores it one optimizer step early
+    (the session's prime/carry/flush protocol keeps the trained/scored
+    sets identical) — so the L2 divergence of the score stores isolates
+    the 1-step parameter staleness of the overlap leg.
+    """
+    def run(pipelined: bool):
+        state = fresh_state()
+        sess = engine.session(selection_on=True, pipelined=pipelined)
+        for b in batches:
+            state, _ = sess.step(state, b)
+        state, _ = sess.finish(state)
+        return (np.asarray(state.scores.s, np.float64),
+                np.asarray(state.scores.w, np.float64))
+
+    s_ser, w_ser = run(False)
+    s_pipe, w_pipe = run(True)
+
+    def rel_l2(a, b):
+        return float(np.linalg.norm(a - b) / (np.linalg.norm(a) + 1e-12))
+
+    return {
+        "steps": len(batches),
+        "s_l2_divergence": rel_l2(s_ser, s_pipe),
+        "w_l2_divergence": rel_l2(w_ser, w_pipe),
+    }
+
+
 def run_sweep(args) -> Dict:
     model_cfg = SMOKE_MODEL if args.smoke else BENCH_MODEL
     meta_batch = args.meta_batch
@@ -128,6 +165,11 @@ def run_sweep(args) -> Dict:
         sched_ms.append(bench("scheduled", k, eng.scheduled_step, batches))
         pipe_ms.append(bench("pipelined", k, eng.pipelined_step, pairs))
 
+    staleness = _staleness_ablation(base, fresh_state, batches)
+    print(f"staleness  steps={staleness['steps']} "
+          f"s_l2={staleness['s_l2_divergence']:.3e} "
+          f"w_l2={staleness['w_l2_divergence']:.3e}", flush=True)
+
     return {
         "bench": "freq_sweep",
         "config": {
@@ -137,6 +179,9 @@ def run_sweep(args) -> Dict:
             "ks": ks, "backend": jax.default_backend(),
         },
         "rows": rows,
+        # pipelined-vs-serial quality proxy: score-store L2 divergence at
+        # equal steps (own key: bench_trend only gates the timing rows)
+        "staleness": staleness,
         "scheduled_monotone_non_increasing":
             _monotone(sched_ms, args.tolerance),
         "pipelined_monotone_non_increasing":

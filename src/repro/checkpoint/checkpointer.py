@@ -12,6 +12,12 @@ Design (no orbax in this environment):
     different device count (elastic scaling) is just building the new
     template and calling restore — resharding is implicit.
 
+Sharded leaves (e.g. the row-sharded ES score store) round-trip the same
+way: ``save`` assembles the host copy from the device shards and records
+each leaf's mesh/spec in the manifest (provenance — restore is driven by
+the TEMPLATE's sharding, so a checkpoint written on one mesh shape loads
+onto any other, sharded->replicated and replicated->sharded included).
+
 The ES score store is part of the state: losing it would silently degrade
 selection quality after restart (scores are EMAs, not derivable from params).
 """
@@ -31,6 +37,28 @@ import numpy as np
 PyTree = Any
 
 _SEP = "/"
+
+
+def _sharding_desc(leaf: Any) -> Optional[Dict[str, Any]]:
+    """JSON-able description of a leaf's NamedSharding (None if unsharded).
+
+    Provenance only: restore reshards to the *template*, so a manifest
+    written on an 8-way mesh restores cleanly onto 4-way, 1-way, or a
+    replicated template.
+    """
+    sh = getattr(leaf, "sharding", None)
+    mesh = getattr(sh, "mesh", None)
+    if mesh is None:
+        return None
+    try:
+        spec = list(getattr(sh, "spec", ()))
+    except TypeError:
+        return None
+    if not any(s is not None for s in spec):
+        return None                       # replicated: nothing to record
+    return {"spec": [list(s) if isinstance(s, (tuple, list)) else s
+                     for s in spec],
+            "mesh": {str(a): int(mesh.shape[a]) for a in mesh.axis_names}}
 
 
 def _flatten(tree: PyTree) -> Dict[str, Any]:
@@ -81,19 +109,23 @@ class Checkpointer:
     def save(self, state: PyTree, step: int,
              metadata: Optional[Dict] = None) -> Path:
         self.wait()  # serialize with any in-flight async save
-        host_flat = {k: np.asarray(v) for k, v in _flatten(state).items()}
-        return self._write(host_flat, step, metadata or {})
+        flat = _flatten(state)
+        shardings = {k: _sharding_desc(v) for k, v in flat.items()}
+        host_flat = {k: np.asarray(v) for k, v in flat.items()}
+        return self._write(host_flat, step, metadata or {}, shardings)
 
     def save_async(self, state: PyTree, step: int,
                    metadata: Optional[Dict] = None) -> None:
         self.wait()
         # snapshot to host NOW (device buffers may be donated next step)
-        host_flat = {k: np.asarray(v) for k, v in _flatten(state).items()}
+        flat = _flatten(state)
+        shardings = {k: _sharding_desc(v) for k, v in flat.items()}
+        host_flat = {k: np.asarray(v) for k, v in flat.items()}
         md = dict(metadata or {})
 
         def work():
             try:
-                self._write(host_flat, step, md)
+                self._write(host_flat, step, md, shardings)
             except BaseException as e:  # surfaced on next wait()
                 self._last_error = e
 
@@ -110,18 +142,24 @@ class Checkpointer:
 
     # ------------------------------------------------------------------
     def _write(self, host_flat: Dict[str, np.ndarray], step: int,
-               metadata: Dict) -> Path:
+               metadata: Dict,
+               shardings: Optional[Dict[str, Any]] = None) -> Path:
         final = self.step_dir(step)
         tmp = Path(str(final) + ".tmp")
         if tmp.exists():
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
         np.savez(tmp / "arrays.npz", **host_flat)
+        shardings = shardings or {}
+        leaves = {}
+        for k, v in host_flat.items():
+            leaves[k] = {"shape": list(v.shape), "dtype": str(v.dtype)}
+            if shardings.get(k) is not None:
+                leaves[k]["sharding"] = shardings[k]
         manifest = {
             "step": step,
             "time": time.time(),
-            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
-                       for k, v in host_flat.items()},
+            "leaves": leaves,
             "metadata": metadata,
         }
         (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))

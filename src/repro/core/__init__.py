@@ -1,7 +1,10 @@
 """Evolved Sampling (ES/ESWP) — the paper's contribution as a JAX library."""
-from .scores import ESScores, init_scores, update_scores, batch_weights
-from .selection import select_minibatch, gumbel_topk_select, topk_select
-from .pruning import prune_epoch, PruneResult
+from .scores import (ESScores, ScoreSharding, init_scores, update_scores,
+                     update_scores_sharded, gather_scores_sharded,
+                     batch_weights)
+from .selection import (select_minibatch, gumbel_topk_select, topk_select,
+                        sharded_gumbel_topk)
+from .pruning import prune_epoch, prune_epoch_from_shards, PruneResult
 from .annealing import AnnealSchedule
 from .frequency import FreqSchedule, adaptive_period, make_schedule
 from .engine import (CadenceConfig, CadenceState, ESConfig, ESEngine,

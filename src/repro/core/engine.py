@@ -45,6 +45,11 @@ kind.
 Score-store updates go through the fused Pallas ``score_update`` kernel on
 TPU; off-TPU the ops wrapper falls back to the XLA scatter path
 (``ESConfig.fused_scores=False`` forces the scatter path everywhere).
+With a ``ScoreSharding`` the store is row-sharded over the DP mesh axes:
+every gather/scatter leg routes sample ids to the owning device
+(``core.scores`` shard_map ops / the per-shard masked kernel dispatch) and
+Gumbel selection merges per-shard candidates, so no device materializes a
+full ``(n,)`` score array.  Replicated remains the default off-mesh.
 
 Batch dict: tokens (B,S) i32, labels (B,S) i32 (-1 = masked),
 sample_ids (B,) i32, optional grad_scale (B,) f32 (InfoBatch rescale),
@@ -63,7 +68,9 @@ from ..models.layers import ShardCtx
 from ..models.transformer import lm_per_sample_loss
 from ..optim.adamw import OptConfig, OptState, init_opt_state, apply_updates
 from .frequency import FreqSchedule
-from .scores import ESScores, init_scores, update_scores, batch_weights
+from .scores import (ESScores, ScoreSharding, gather_scores_sharded,
+                     init_scores, update_scores, update_scores_sharded,
+                     weights_from_prev)
 from .selection import select_minibatch
 
 PyTree = Any
@@ -157,7 +164,9 @@ class TrainState:
 
 def init_train_state(model_cfg: ModelConfig, es_cfg: ESConfig,
                      opt_cfg: OptConfig, key: jax.Array,
-                     meta_batch: int) -> TrainState:
+                     meta_batch: int,
+                     score_sharding: Optional[ScoreSharding] = None
+                     ) -> TrainState:
     from ..models.transformer import init_lm
     pkey, rkey = jax.random.split(key)
     params, _ = init_lm(model_cfg, pkey)
@@ -171,7 +180,7 @@ def init_train_state(model_cfg: ModelConfig, es_cfg: ESConfig,
     return TrainState(
         params=params,
         opt=init_opt_state(opt_cfg, params),
-        scores=init_scores(es_cfg.n_train),
+        scores=init_scores(es_cfg.n_train, score_sharding),
         rng=rkey,
         pending_w=jnp.full((meta_batch,), 1.0, jnp.float32),
         grad_err=grad_err,
@@ -200,12 +209,16 @@ class ESEngine:
     def __init__(self, model_cfg: ModelConfig, es_cfg: ESConfig,
                  opt_cfg: OptConfig, schedule: Callable, ctx: ShardCtx,
                  freq: Optional[FreqSchedule] = None,
-                 cadence: Optional[CadenceConfig] = None):
+                 cadence: Optional[CadenceConfig] = None,
+                 score_sharding: Optional[ScoreSharding] = None):
         self.model_cfg = model_cfg
         self.es_cfg = es_cfg
         self.opt_cfg = opt_cfg
         self.schedule = schedule
         self.ctx = ctx
+        self.score_sharding = score_sharding
+        if score_sharding is not None:
+            score_sharding.shard_size(es_cfg.n_train)  # validate divisibility
         self.freq = freq or FreqSchedule()     # default: score every step
         if cadence is None:
             # a drift FreqSchedule implies the drift cadence; its k is the
@@ -248,27 +261,40 @@ class ESEngine:
         if self.es_cfg.fused_scores:
             from ..kernels.score_update.ops import update_scores_fused
             return update_scores_fused(scores, ids, losses,
-                                       self.es_cfg.beta1, self.es_cfg.beta2)
+                                       self.es_cfg.beta1, self.es_cfg.beta2,
+                                       sharding=self.score_sharding)
+        if self.score_sharding is not None:
+            return update_scores_sharded(scores, ids, losses,
+                                         self.es_cfg.beta1,
+                                         self.es_cfg.beta2,
+                                         self.score_sharding)
         return update_scores(scores, ids, losses,
                              self.es_cfg.beta1, self.es_cfg.beta2)
 
-    def _observe(self, cad: CadenceState, scores: ESScores, ids: jax.Array,
-                 losses: jax.Array, w_new: jax.Array, step: jax.Array
-                 ) -> CadenceState:
+    def _prev_sw(self, scores: ESScores, ids: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+        """(s[ids], w[ids]) — direct gather, or the routed psum-gather when
+        the store is row-sharded over the mesh."""
+        if self.score_sharding is not None:
+            return gather_scores_sharded(scores, ids, self.score_sharding)
+        return scores.s[ids], scores.w[ids]
+
+    def _observe(self, cad: CadenceState, s_prev: jax.Array,
+                 w_prev: jax.Array, losses: jax.Array, w_new: jax.Array,
+                 step: jax.Array) -> CadenceState:
         """Fold one scoring firing into the drift EMAs; servo the period.
 
-        ``w_new`` is the Eq. (3.1) weight the caller already computed via
-        ``batch_weights`` (one source of truth for the weight rule).  The
-        s-delta follows from Eq. (3.1) without a second gather:
-        Δs = (1-β2)(l - s_prev).  ``rel`` normalizes by the store scale so
-        the servo is loss-scale free.  In drift mode the period is
-        AIMD-adapted inside the band; in static mode it just mirrors the
-        FreqSchedule for observability.
+        ``w_new`` is the Eq. (3.1) weight the caller already computed from
+        ``s_prev`` (one source of truth for the weight rule);
+        ``s_prev``/``w_prev`` are the caller's pre-update gathers, so the
+        sharded store pays its routed gather once.  The s-delta follows
+        from Eq. (3.1) without a second gather: Δs = (1-β2)(l - s_prev).
+        ``rel`` normalizes by the store scale so the servo is loss-scale
+        free.  In drift mode the period is AIMD-adapted inside the band;
+        in static mode it just mirrors the FreqSchedule for observability.
         """
         c = self.cadence
         b2 = self.es_cfg.beta2
-        s_prev = scores.s[ids]
-        w_prev = scores.w[ids]
         d_s = jnp.mean(jnp.abs((1.0 - b2) * (losses - s_prev)))
         d_w = jnp.mean(jnp.abs(w_new - w_prev))
         rel_s = d_s / (jnp.mean(jnp.abs(s_prev)) + _EPS)
@@ -310,9 +336,9 @@ class ESEngine:
             self.ctx, seq_chunk=self.es_cfg.seq_chunk)
         meta_losses = jax.lax.stop_gradient(meta_losses)
         ids = batch["sample_ids"]
-        w = batch_weights(state.scores, ids, meta_losses,
-                          self.es_cfg.beta1, self.es_cfg.beta2)
-        cad = self._observe(state.cadence, state.scores, ids, meta_losses,
+        s_prev, w_prev = self._prev_sw(state.scores, ids)
+        w = weights_from_prev(s_prev, meta_losses, self.es_cfg.beta1)
+        cad = self._observe(state.cadence, s_prev, w_prev, meta_losses,
                             w, state.opt.step)
         new_scores = self._update_scores(state.scores, ids, meta_losses)
         return w, new_scores, cad, jnp.mean(meta_losses)
@@ -322,8 +348,8 @@ class ESEngine:
         """Skipped scoring: reuse the last Eq. (3.1) weights for this
         batch's samples; store and cadence are untouched."""
         ids = batch["sample_ids"]
-        return (state.scores.w[ids], state.scores, state.cadence,
-                jnp.mean(state.scores.s[ids]))
+        s_prev, w_prev = self._prev_sw(state.scores, ids)
+        return w_prev, state.scores, state.cadence, jnp.mean(s_prev)
 
     def _optim(self, state: TrainState, grads: PyTree,
                metrics: Dict[str, jax.Array]):
@@ -361,9 +387,9 @@ class ESEngine:
         new_params, new_opt, new_err = self._optim(state, grads, metrics)
         losses = jax.lax.stop_gradient(per_sample)
         ids = batch["sample_ids"]
-        w_new = batch_weights(state.scores, ids, losses,
-                              self.es_cfg.beta1, self.es_cfg.beta2)
-        cad = self._observe(state.cadence, state.scores, ids, losses,
+        s_prev, w_prev = self._prev_sw(state.scores, ids)
+        w_new = weights_from_prev(s_prev, losses, self.es_cfg.beta1)
+        cad = self._observe(state.cadence, s_prev, w_prev, losses,
                             w_new, state.opt.step)
         scores = self._update_scores(state.scores, ids, losses)
         return dataclasses.replace(state, params=new_params, opt=new_opt,
@@ -388,7 +414,8 @@ class ESEngine:
 
         # (3) mini-batch selection (replicated PRNG: same on all hosts)
         rng, sel_key = jax.random.split(state.rng)
-        idx = select_minibatch(self.es_cfg.method, sel_key, w, b)
+        idx = select_minibatch(self.es_cfg.method, sel_key, w, b,
+                               score_sharding=self.score_sharding)
         sel = _gather_batch(batch, idx)
 
         # (4) grad step on the mini-batch
@@ -431,7 +458,8 @@ class ESEngine:
             None)
 
         rng, sel_key = jax.random.split(state.rng)
-        idx = select_minibatch(self.es_cfg.method, sel_key, w, b)
+        idx = select_minibatch(self.es_cfg.method, sel_key, w, b,
+                               score_sharding=self.score_sharding)
         sel = _gather_batch(batch, idx)
 
         (mean, _), grads = self._grad_fn(state.params, sel)
@@ -471,7 +499,7 @@ class ESEngine:
         # train on current meta-batch with carried weights
         rng, sel_key = jax.random.split(state.rng)
         idx = select_minibatch(self.es_cfg.method, sel_key, state.pending_w,
-                               b)
+                               b, score_sharding=self.score_sharding)
         sel = _gather_batch(cur, idx)
         (mean, _), grads = self._grad_fn(state.params, sel)
 
@@ -534,7 +562,7 @@ class ESEngine:
             return self.baseline_step(state, batch)
         rng, sel_key = jax.random.split(state.rng)
         idx = select_minibatch(self.es_cfg.method, sel_key, state.pending_w,
-                               b)
+                               b, score_sharding=self.score_sharding)
         sel = _gather_batch(batch, idx)
         (mean, _), grads = self._grad_fn(state.params, sel)
         metrics = {"loss": mean, "sel_loss": mean,
@@ -573,9 +601,12 @@ class ESEngine:
         return EpochSession(self, selection_on, pipelined)
 
     # -- set-level (epoch) pruning cadence ------------------------------
-    def should_prune(self, cad: Optional[CadenceState],
-                     epochs_since_prune: int) -> bool:
+    def prune_decision(self, cad: Optional[CadenceState],
+                       epochs_since_prune: int) -> Tuple[bool, str]:
         """Host-side: does set-level pruning re-run before this epoch?
+
+        Returns (fired, reason) — the reason string is surfaced in the
+        trainer's metrics log for ESWP stale-``grad_scale`` auditing.
 
         ``epoch`` cadence: always (the pre-engine behaviour).  ``drift``
         cadence: only once the accumulated relative score drift since the
@@ -586,12 +617,18 @@ class ESEngine:
         at least every N epochs.
         """
         if self.cadence.prune_kind == "epoch":
-            return True
+            return True, "epoch-cadence"
         if epochs_since_prune >= self.cadence.prune_max_interval:
-            return True
+            return True, "max-interval"
         if cad is None:
-            return True
-        return float(cad.since_prune) >= self.cadence.prune_drift_floor
+            return True, "no-cadence-state"
+        if float(cad.since_prune) >= self.cadence.prune_drift_floor:
+            return True, "drift"
+        return False, "drift-below-floor"
+
+    def should_prune(self, cad: Optional[CadenceState],
+                     epochs_since_prune: int) -> bool:
+        return self.prune_decision(cad, epochs_since_prune)[0]
 
     def reset_prune_drift(self, state: TrainState) -> TrainState:
         """Zero the accumulated drift after a prune (host-side)."""

@@ -15,11 +15,20 @@ Implemented policies (paper Tab. 1 & §4.1 comparisons):
               (ka_tau = 1: plain "loss increased" rule)
   random    : uniform (1-r)·n keep (ablation baseline)
   none      : keep everything
+
+When the score store is sharded over the mesh (``core.scores.ScoreSharding``)
+the trainer snapshots only the device-local row blocks and calls
+``prune_epoch_from_shards``: quantile/kept-set computation then works from
+per-shard statistics — exact global sums/extrema for the InfoBatch mean and
+UCB horizon (so the kept-set statistics stay unbiased, per the InfoBatch
+rescaling argument), and per-shard candidate top-k merges for the
+threshold methods, with random draws made by GLOBAL sample position so the
+kept-set matches the replicated ``prune_epoch`` for the same rng.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -65,7 +74,10 @@ def prune_epoch(method: str, rng: np.random.Generator, *,
         return PruneResult(np.sort(kept), None)
 
     if method == "infobatch":
-        mean = float(np.mean(losses))
+        # f64 accumulation: the same threshold the sharded path derives
+        # from per-shard f64 sums (an f32 mean would diverge at ~1e-7 rel
+        # and flip below-mean flags near the threshold)
+        mean = float(np.mean(losses, dtype=np.float64))
         below = losses < mean
         drop = below & (rng.random(n) < ratio)
         kept = np.nonzero(~drop)[0]
@@ -82,18 +94,147 @@ def prune_epoch(method: str, rng: np.random.Generator, *,
         return PruneResult(np.sort(kept), None)
 
     if method == "ka":
-        order = np.argsort(losses)            # ascending: easiest first
+        kept = _ka_keep(losses, prev_losses, n_keep, ka_tau)
+        return PruneResult(kept, None)
+
+    raise ValueError(f"unknown pruning method {method!r}")
+
+
+def _ka_keep(losses: np.ndarray, prev_losses: Optional[np.ndarray],
+             n_keep: int, ka_tau: float) -> np.ndarray:
+    n = losses.shape[0]
+    order = np.argsort(losses)            # ascending: easiest first
+    n_hide = n - n_keep
+    hidden = order[:n_hide]
+    if prev_losses is not None and n_hide > 0:
+        # move-back: a hidden sample re-enters unless its loss decayed
+        # below the ka_tau fraction of last epoch's — ka_tau = 1 is the
+        # plain "loss went up" rule, ka_tau < 1 demands a real
+        # improvement before a sample may stay hidden (hysteresis
+        # against hiding samples the model is still learning)
+        worse = losses[hidden] > prev_losses[hidden] * ka_tau
+        moved_back = hidden[worse]
+        hidden = np.setdiff1d(hidden, moved_back, assume_unique=False)
+    mask = np.ones(n, bool)
+    mask[hidden] = False
+    return np.nonzero(mask)[0]
+
+
+# ---------------------------------------------------------------------------
+# Sharded-store variant: kept-set from device-local row blocks
+# ---------------------------------------------------------------------------
+
+def _shard_offsets(shards: Sequence[np.ndarray]) -> np.ndarray:
+    return np.concatenate([[0], np.cumsum([len(x) for x in shards])])
+
+
+def _merge_topk(per_shard_keys: List[np.ndarray],
+                per_shard_ids: List[np.ndarray], k: int) -> np.ndarray:
+    """Global top-k by key from per-shard candidate (key, global id) lists.
+
+    Exact: the global top-k holds at most k entries per shard, so each
+    shard pre-filtering to its local top-min(k, |shard|) loses nothing.
+    """
+    keys = np.concatenate(per_shard_keys)
+    ids = np.concatenate(per_shard_ids)
+    k = min(k, len(ids))
+    if k <= 0:
+        return ids[:0]
+    return ids[np.argpartition(-keys, k - 1)[:k]]
+
+
+def _local_topk(keys: np.ndarray, k: int) -> np.ndarray:
+    k = min(k, len(keys))
+    return np.argpartition(-keys, k - 1)[:k] if k else np.empty(0, np.int64)
+
+
+def prune_epoch_from_shards(method: str, rng: np.random.Generator, *,
+                            shard_weights: Sequence[np.ndarray],
+                            shard_losses: Sequence[np.ndarray],
+                            prev_losses: Optional[np.ndarray] = None,
+                            shard_seen: Optional[Sequence[np.ndarray]] = None,
+                            ratio: float = 0.2, ucb_c: float = 1.0,
+                            ka_tau: float = 1.0) -> PruneResult:
+    """``prune_epoch`` from device-local score-store row blocks.
+
+    ``shard_*`` are the per-device contiguous row blocks in shard order
+    (shard k owns global ids ``[offs[k], offs[k+1])``).  Global statistics
+    come from per-shard reductions (exact sums/extrema — unbiased kept-set
+    stats for the InfoBatch rescale); threshold methods merge per-shard
+    candidate top-k lists.  Random draws are made by global sample
+    position, so the kept-set matches the replicated path for the same rng
+    (up to float-tie breaking).  ``prev_losses`` stays a host-side full
+    array (the trainer's previous-epoch snapshot, not device state).
+    """
+    offs = _shard_offsets(shard_weights)
+    n = int(offs[-1])
+    n_keep = max(1, int(round((1.0 - ratio) * n)))
+
+    if method in ("none", "baseline", "es", "loss", "order", "uniform"):
+        return PruneResult(np.arange(n), None)
+
+    if method == "eswp":
+        g = rng.gumbel(size=n)             # global-position draw: parity
+        keys, ids = [], []
+        for k, w in enumerate(shard_weights):
+            key = np.log(np.maximum(w.astype(np.float64), 1e-20)) \
+                + g[offs[k]:offs[k + 1]]
+            loc = _local_topk(key, n_keep)
+            keys.append(key[loc])
+            ids.append(loc + offs[k])
+        return PruneResult(np.sort(_merge_topk(keys, ids, n_keep)), None)
+
+    if method == "random":
+        kept = rng.choice(n, size=n_keep, replace=False)
+        return PruneResult(np.sort(kept), None)
+
+    if method == "infobatch":
+        # global mean from per-shard f64 sums — the kept-set statistics
+        # the 1/(1-r) rescale relies on stay unbiased, and the threshold
+        # matches prune_epoch's f64 mean (grouping differences are ~1e-15
+        # rel, far below any realistic loss-to-mean gap)
+        mean = sum(float(x.sum(dtype=np.float64))
+                   for x in shard_losses) / n
+        u = rng.random(n)
+        kept_parts, scale_parts = [], []
+        for k, losses in enumerate(shard_losses):
+            below = losses < mean
+            drop = below & (u[offs[k]:offs[k + 1]] < ratio)
+            kept_parts.append(np.nonzero(~drop)[0] + offs[k])
+            scale = np.ones(len(losses), np.float32)
+            scale[below & ~drop] = 1.0 / (1.0 - ratio)
+            scale_parts.append(scale)
+        return PruneResult(np.concatenate(kept_parts),
+                           np.concatenate(scale_parts))
+
+    if method == "ucb":
+        seen = shard_seen or [np.ones(len(x)) for x in shard_losses]
+        t = max(1, max(int(x.max()) for x in seen))
+        keys, ids = [], []
+        for k, losses in enumerate(shard_losses):
+            cnt = np.maximum(seen[k], 1)
+            score = losses + ucb_c * np.sqrt(np.log(t + 1.0) / cnt)
+            loc = _local_topk(score, n_keep)
+            keys.append(score[loc])
+            ids.append(loc + offs[k])
+        return PruneResult(np.sort(_merge_topk(keys, ids, n_keep)), None)
+
+    if method == "ka":
         n_hide = n - n_keep
-        hidden = order[:n_hide]
+        # global bottom-n_hide from per-shard bottom candidates (negated
+        # keys -> top-k machinery); move-back then consults prev_losses by
+        # global id, exactly like the replicated rule
+        keys, ids = [], []
+        for k, losses in enumerate(shard_losses):
+            loc = _local_topk(-losses.astype(np.float64), n_hide)
+            keys.append(-losses.astype(np.float64)[loc])
+            ids.append(loc + offs[k])
+        hidden = _merge_topk(keys, ids, n_hide)
         if prev_losses is not None and n_hide > 0:
-            # move-back: a hidden sample re-enters unless its loss decayed
-            # below the ka_tau fraction of last epoch's — ka_tau = 1 is the
-            # plain "loss went up" rule, ka_tau < 1 demands a real
-            # improvement before a sample may stay hidden (hysteresis
-            # against hiding samples the model is still learning)
-            worse = losses[hidden] > prev_losses[hidden] * ka_tau
-            moved_back = hidden[worse]
-            hidden = np.setdiff1d(hidden, moved_back, assume_unique=False)
+            all_losses = np.concatenate(shard_losses)
+            worse = all_losses[hidden] > prev_losses[hidden] * ka_tau
+            hidden = np.setdiff1d(hidden, hidden[worse],
+                                  assume_unique=False)
         mask = np.ones(n, bool)
         mask[hidden] = False
         return PruneResult(np.nonzero(mask)[0], None)

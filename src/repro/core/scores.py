@@ -10,19 +10,32 @@ implicitly augments the loss EMA with (beta2-beta1)-weighted loss
 here are pure-JAX scatter ops so they live *inside* the jitted train step
 (no host round-trip).  ``explicit_weights`` implements the unrolled Eq. (3.2)
 expansion and is used by property tests to verify the equivalence.
+
+The store may be REPLICATED (default; ``update_scores``/direct indexing) or
+SHARDED over the data-parallel mesh axes (``ScoreSharding`` + the
+``*_sharded`` ops): each device then holds only its contiguous n/D row
+block of the three ``(n,)`` arrays.  The sharded ops route every sample id
+to its owning device inside ``shard_map`` — the (tiny, ``(B,)``) ids/losses
+are broadcast, each shard applies a masked scatter to the rows it owns, and
+gathers come back via a masked-contribution ``psum`` (each global row has
+exactly one owner, so the sum IS the owner's value).  No device ever
+materializes a full ``(n,)`` array.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class ESScores:
-    """Per-sample score state, replicated across the mesh.
+    """Per-sample score state (replicated, or row-sharded over DP axes).
 
     s: EMA of losses (Eq. 3.1 second line).
     w: sampling weights (Eq. 3.1 first line).
@@ -33,10 +46,61 @@ class ESScores:
     seen: jax.Array   # (n,) i32
 
 
-def init_scores(n: int) -> ESScores:
-    return ESScores(s=jnp.full((n,), 1.0 / n, jnp.float32),
-                    w=jnp.full((n,), 1.0 / n, jnp.float32),
-                    seen=jnp.zeros((n,), jnp.int32))
+@dataclasses.dataclass(frozen=True)
+class ScoreSharding:
+    """Row-sharding of the score store over data-parallel mesh axes.
+
+    ``axes`` are the mesh axes the ``(n,)`` arrays are split over (axis
+    order = shard order, row-major over the axes, matching
+    ``PartitionSpec((axes,))``).  Shards are contiguous row blocks: device
+    d owns rows ``[d*n/D, (d+1)*n/D)``.
+    """
+    mesh: Mesh
+    axes: Tuple[str, ...] = ("data",)
+
+    @property
+    def n_shards(self) -> int:
+        out = 1
+        for a in self.axes:
+            out *= self.mesh.shape[a]
+        return out
+
+    def spec(self) -> P:
+        return P(self.axes)
+
+    def named_sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec())
+
+    def shard_size(self, n: int) -> int:
+        if n % self.n_shards != 0:
+            raise ValueError(
+                f"score store size {n} not divisible by the {self.n_shards}"
+                f"-way shard over mesh axes {self.axes}")
+        return n // self.n_shards
+
+    def shard_index(self) -> jax.Array:
+        """Traced linear shard index — only valid inside ``shard_map``."""
+        idx = jnp.zeros((), jnp.int32)
+        for a in self.axes:
+            idx = idx * self.mesh.shape[a] + jax.lax.axis_index(a)
+        return idx
+
+
+def init_scores(n: int, sharding: Optional[ScoreSharding] = None) -> ESScores:
+    scores = ESScores(s=jnp.full((n,), 1.0 / n, jnp.float32),
+                      w=jnp.full((n,), 1.0 / n, jnp.float32),
+                      seen=jnp.zeros((n,), jnp.int32))
+    if sharding is not None:
+        sharding.shard_size(n)          # validate divisibility
+        ns = sharding.named_sharding()
+        scores = jax.tree.map(lambda x: jax.device_put(x, ns), scores)
+    return scores
+
+
+def weights_from_prev(s_prev: jax.Array, losses: jax.Array,
+                      beta1: float) -> jax.Array:
+    """Eq. (3.1) first line from the pre-update s — the one weight rule."""
+    return beta1 * s_prev + (1.0 - beta1) * losses.astype(jnp.float32)
 
 
 def update_scores(scores: ESScores, sample_ids: jax.Array,
@@ -48,7 +112,7 @@ def update_scores(scores: ESScores, sample_ids: jax.Array,
     """
     losses = losses.astype(jnp.float32)
     s_prev = scores.s[sample_ids]
-    w_new = beta1 * s_prev + (1.0 - beta1) * losses
+    w_new = weights_from_prev(s_prev, losses, beta1)
     s_new = beta2 * s_prev + (1.0 - beta2) * losses
     return ESScores(
         s=scores.s.at[sample_ids].set(s_new),
@@ -60,8 +124,78 @@ def update_scores(scores: ESScores, sample_ids: jax.Array,
 def batch_weights(scores: ESScores, sample_ids: jax.Array,
                   losses: jax.Array, beta1: float, beta2: float) -> jax.Array:
     """The w(t) of Eq. (3.1) for a meta-batch, without mutating state."""
+    return weights_from_prev(scores.s[sample_ids], losses, beta1)
+
+
+# ---------------------------------------------------------------------------
+# Sharded store ops (shard_map: ids routed to the owning device)
+# ---------------------------------------------------------------------------
+
+def _local_mask(ids: jax.Array, ss: ScoreSharding, shard: int
+                ) -> Tuple[jax.Array, jax.Array]:
+    """(local positions, ownership mask) for replicated ids on this shard."""
+    local = ids - ss.shard_index() * shard
+    mask = (local >= 0) & (local < shard)
+    return local, mask
+
+
+def gather_scores_sharded(scores: ESScores, sample_ids: jax.Array,
+                          ss: ScoreSharding
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """(s[ids], w[ids]) from a row-sharded store, replicated ``(B,)`` out.
+
+    Each shard contributes its owned rows (zeros elsewhere); the cross-shard
+    ``psum`` assembles the full gather — the only collective is over the
+    tiny ``(B,)`` batch vectors, never the ``(n,)`` store.
+    """
+    shard = ss.shard_size(scores.s.shape[0])
+
+    def body(s, w, ids):
+        local, mask = _local_mask(ids, ss, shard)
+        pos = jnp.where(mask, local, 0)
+        s_v = jnp.where(mask, s[pos], 0.0)
+        w_v = jnp.where(mask, w[pos], 0.0)
+        return (jax.lax.psum(s_v, ss.axes), jax.lax.psum(w_v, ss.axes))
+
+    sp = ss.spec()
+    return shard_map(body, mesh=ss.mesh, in_specs=(sp, sp, P()),
+                     out_specs=(P(), P()), check_rep=False)(
+                         scores.s, scores.w, sample_ids)
+
+
+def update_scores_sharded(scores: ESScores, sample_ids: jax.Array,
+                          losses: jax.Array, beta1: float, beta2: float,
+                          ss: ScoreSharding) -> ESScores:
+    """Eq. (3.1) scatter into a row-sharded store.
+
+    ids/losses arrive replicated (an all-gather of two ``(B,)`` vectors at
+    most); each shard applies the update to the rows it owns via a masked
+    ``mode='drop'`` scatter and never touches foreign rows.  Bit-identical
+    per row to ``update_scores`` on a replicated store.
+    """
     losses = losses.astype(jnp.float32)
-    return beta1 * scores.s[sample_ids] + (1.0 - beta1) * losses
+    shard = ss.shard_size(scores.s.shape[0])
+    b1, b2 = beta1, beta2
+
+    def body(s, w, seen, ids, ls):
+        local, mask = _local_mask(ids, ss, shard)
+        pos = jnp.where(mask, local, 0)
+        s_prev = s[pos]
+        w_new = weights_from_prev(s_prev, ls, b1)
+        s_new = b2 * s_prev + (1.0 - b2) * ls
+        # out-of-shard ids are pointed past the block and dropped
+        oob = jnp.where(mask, local, shard)
+        return (s.at[oob].set(s_new, mode="drop"),
+                w.at[oob].set(w_new, mode="drop"),
+                seen.at[oob].add(mask.astype(seen.dtype), mode="drop"))
+
+    sp = ss.spec()
+    s, w, seen = shard_map(body, mesh=ss.mesh,
+                           in_specs=(sp, sp, sp, P(), P()),
+                           out_specs=(sp, sp, sp), check_rep=False)(
+                               scores.s, scores.w, scores.seen,
+                               sample_ids, losses)
+    return ESScores(s=s, w=w, seen=seen)
 
 
 # ---------------------------------------------------------------------------

@@ -20,6 +20,9 @@ Logical axes
   cache_seq   KV-cache sequence dim           -> shape-dependent (decode TP
               shards the cache sequence when KV heads are replicated;
               long-context shards it over the DP axes since batch=1)
+  scores      ES score-store sample dim (the
+              three (n,) ESScores arrays)     -> DP axes (row shards; the
+              model axis holds the same rows — see core/scores.py)
   layers      scan dim                        -> never sharded
 """
 from __future__ import annotations
@@ -78,6 +81,7 @@ def make_rules(cfg: ModelConfig, mesh: Mesh,
         ("expert_cap", None if (ep or cfg.moe_groups != 1) else dp),
         ("expert_group", dp if cfg.moe_groups != 1 else None),
         ("cache_seq", cache_seq),
+        ("scores", dp),
         ("layers", None),
     )
     return rules
@@ -108,6 +112,20 @@ def axes_to_sharding(axes_tree: PyTree, ctx: ShardCtx) -> PyTree:
 
 def replicated(ctx: ShardCtx) -> NamedSharding:
     return NamedSharding(ctx.mesh, P())
+
+
+def score_store_sharding(mesh: Mesh) -> Optional["ScoreSharding"]:
+    """Row-sharding of the ES score store over the mesh's DP axes.
+
+    Returns None when the mesh has no data-parallel extent (scores stay
+    replicated — the single-device / TP-only default).
+    """
+    from ..core.scores import ScoreSharding
+    axes = dp_axes(mesh)
+    if not axes:
+        return None
+    ss = ScoreSharding(mesh, axes)
+    return ss if ss.n_shards > 1 else None
 
 
 def batch_sharding(ctx: ShardCtx, ndim: int, batch_dim: int = 0

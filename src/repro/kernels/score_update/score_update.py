@@ -24,7 +24,7 @@ from jax.experimental import pallas as pl
 
 def _score_kernel(s_ref, w_ref, seen_ref, ids_ref, losses_ref,
                   s_out, w_out, seen_out, *, beta1: float, beta2: float,
-                  n_updates: int):
+                  n_updates: int, masked: bool):
     # in-place semantics via input/output aliasing; copy-through first
     s_out[...] = s_ref[...]
     w_out[...] = w_ref[...]
@@ -33,28 +33,42 @@ def _score_kernel(s_ref, w_ref, seen_ref, ids_ref, losses_ref,
     def body(i, _):
         idx = ids_ref[i]
         loss = losses_ref[i]
-        s_prev = s_out[pl.dslice(idx, 1)]
-        w_new = beta1 * s_prev + (1.0 - beta1) * loss
-        s_new = beta2 * s_prev + (1.0 - beta2) * loss
-        w_out[pl.dslice(idx, 1)] = w_new
-        s_out[pl.dslice(idx, 1)] = s_new
-        seen_out[pl.dslice(idx, 1)] = seen_out[pl.dslice(idx, 1)] + 1
+
+        def apply():
+            s_prev = s_out[pl.dslice(idx, 1)]
+            w_new = beta1 * s_prev + (1.0 - beta1) * loss
+            s_new = beta2 * s_prev + (1.0 - beta2) * loss
+            w_out[pl.dslice(idx, 1)] = w_new
+            s_out[pl.dslice(idx, 1)] = s_new
+            seen_out[pl.dslice(idx, 1)] = seen_out[pl.dslice(idx, 1)] + 1
+
+        if masked:
+            # per-shard dispatch: ids the shard does not own arrive as -1
+            pl.when(idx >= 0)(apply)
+        else:
+            apply()
         return 0
 
     jax.lax.fori_loop(0, n_updates, body, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("beta1", "beta2", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("beta1", "beta2", "interpret", "masked"))
 def fused_score_update(s: jax.Array, w: jax.Array, seen: jax.Array,
                        ids: jax.Array, losses: jax.Array, *,
                        beta1: float, beta2: float,
-                       interpret: bool = False
+                       interpret: bool = False, masked: bool = False
                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """s/w: (n,) f32; seen: (n,) i32; ids: (B,) i32; losses: (B,) f32."""
+    """s/w: (n,) f32; seen: (n,) i32; ids: (B,) i32; losses: (B,) f32.
+
+    ``masked=True`` skips entries whose id is negative — the per-shard
+    dispatch (``ops.update_scores_fused`` with a ``ScoreSharding``) marks
+    ids owned by other shards that way.
+    """
     n = s.shape[0]
     B = ids.shape[0]
     kernel = functools.partial(_score_kernel, beta1=beta1, beta2=beta2,
-                               n_updates=B)
+                               n_updates=B, masked=masked)
     return pl.pallas_call(
         kernel,
         in_specs=[pl.BlockSpec(s.shape, lambda: (0,)),

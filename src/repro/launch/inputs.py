@@ -81,8 +81,13 @@ def abstract_params_and_axes(cfg: ModelConfig) -> Tuple[PyTree, PyTree]:
 
 def abstract_train_state(cfg: ModelConfig, es_cfg: ESConfig,
                          opt_cfg: OptConfig, meta_batch: int,
-                         ctx: ShardCtx) -> Tuple[PyTree, PyTree]:
-    """Returns (state_struct, state_shardings) matching TrainState."""
+                         ctx: ShardCtx,
+                         shard_scores: bool = False) -> Tuple[PyTree, PyTree]:
+    """Returns (state_struct, state_shardings) matching TrainState.
+
+    ``shard_scores`` rows the three ESScores (n,) arrays over the mesh's
+    DP axes via the ``scores`` logical axis (replicated by default).
+    """
     params_struct, axes = abstract_params_and_axes(cfg)
     state_struct = jax.eval_shape(
         lambda key: init_train_state(cfg, es_cfg, opt_cfg, key, meta_batch),
@@ -90,12 +95,15 @@ def abstract_train_state(cfg: ModelConfig, es_cfg: ESConfig,
 
     param_sh = axes_to_sharding(axes, ctx)
     repl = replicated(ctx)
+    score_sh = repl
+    if shard_scores and ctx.axis("scores"):
+        score_sh = NamedSharding(ctx.mesh, P(ctx.axis("scores")))
     opt_sh = OptState(
         step=repl, m=param_sh,
         v=param_sh if opt_cfg.kind == "adamw" else None)
     state_sh = TrainState(
         params=param_sh, opt=opt_sh,
-        scores=ESScores(s=repl, w=repl, seen=repl),
+        scores=ESScores(s=score_sh, w=score_sh, seen=score_sh),
         rng=repl, pending_w=repl,
         cadence=CadenceState(drift_s=repl, drift_w=repl, period=repl,
                              last_scored=repl, since_prune=repl))

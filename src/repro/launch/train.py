@@ -31,7 +31,8 @@ from ..configs.registry import get_config, get_smoke_config, list_archs
 from ..core.annealing import AnnealSchedule
 from ..core.engine import CadenceConfig, ESConfig, ESEngine, init_train_state
 from ..core.frequency import make_schedule
-from ..core.pruning import prune_epoch
+from ..core.pruning import prune_epoch, prune_epoch_from_shards
+from ..core.scores import ScoreSharding
 from ..checkpoint.checkpointer import Checkpointer
 from ..data.loader import IndexLoader
 from ..data.synthetic import SyntheticConfig, SyntheticLM
@@ -68,6 +69,7 @@ class TrainerConfig:
     prune_cadence: str = "epoch"  # epoch | drift (set-level re-prune gate)
     prune_max_interval: int = 4   # drift prune cadence: epochs backstop
     fused_scores: bool = True     # Pallas score_update kernel in the step
+    shard_scores: bool = False    # row-shard ESScores over the DP devices
     grad_compression: bool = False   # int8 EF gradient compression
     ckpt_dir: Optional[str] = None
     ckpt_every_steps: int = 50
@@ -118,6 +120,8 @@ class Trainer:
                                   beta1=beta1, beta2=beta2,
                                   gain_floor=tc.gain_floor)
         self.ctx = ShardCtx()
+        self.score_sharding = self._make_score_sharding() \
+            if tc.shard_scores else None
         cadence = CadenceConfig(
             kind="drift" if tc.freq_schedule == "drift" else "static",
             target=tc.drift_target,
@@ -128,12 +132,14 @@ class Trainer:
         # serial / decimated / pipelined + prime/flush) is engine-built
         self.engine = ESEngine(self.model_cfg, self.es_cfg, self.opt_cfg,
                                self.schedule, self.ctx, freq=self.freq,
-                               cadence=cadence)
+                               cadence=cadence,
+                               score_sharding=self.score_sharding)
         self.anneal = AnnealSchedule.from_ratio(tc.epochs, tc.anneal_ratio)
         self.ckpt = Checkpointer(tc.ckpt_dir) if tc.ckpt_dir else None
         self.preempt = PreemptionHandler().install()
         self.straggler = StragglerMonitor()
         self.metrics_log: list = []
+        self.prune_events: list = []
         self.bp_samples_total = 0.0
         self.scoring_steps_total = 0.0
         self.prev_epoch_losses: Optional[np.ndarray] = None
@@ -142,13 +148,63 @@ class Trainer:
 
         key = jax.random.PRNGKey(tc.seed)
         self.state = init_train_state(self.model_cfg, self.es_cfg,
-                                      self.opt_cfg, key, tc.meta_batch)
+                                      self.opt_cfg, key, tc.meta_batch,
+                                      score_sharding=self.score_sharding)
         self.global_step = 0
         self.start_epoch = 0
         if self.ckpt and self.ckpt.latest_step() is not None:
             self._resume()
 
     # ------------------------------------------------------------------
+    def _make_score_sharding(self) -> Optional[ScoreSharding]:
+        """Row-shard the ES score store over every local device.
+
+        Flag-gated (``--shard-scores``); replicated remains the default.
+        Falls back to replicated (with a warning) when there is nothing to
+        shard over or the store does not divide evenly.
+        """
+        import warnings
+        n_dev = len(jax.devices())
+        if n_dev < 2:
+            warnings.warn("--shard-scores: single device, store stays "
+                          "replicated", stacklevel=2)
+            return None
+        n = len(self.ds)
+        if n % n_dev != 0:
+            warnings.warn(f"--shard-scores: n_train={n} not divisible by "
+                          f"{n_dev} devices, store stays replicated",
+                          stacklevel=2)
+            return None
+        from ..distributed.sharding import score_store_sharding
+        return score_store_sharding(jax.make_mesh((n_dev,), ("data",)))
+
+    def _score_snapshot(self) -> Dict[str, Any]:
+        """Host snapshot of the score store for set-level pruning.
+
+        Replicated store: full arrays.  Sharded store: the per-device row
+        blocks (in shard order) — pruning then runs on device-local shards
+        (``prune_epoch_from_shards``) and no full (n,) copy is built from
+        device memory.
+        """
+        scores = self.state.scores
+        if self.score_sharding is None:
+            return {"w": np.asarray(scores.w), "s": np.asarray(scores.s),
+                    "seen": np.asarray(scores.seen)}
+
+        def blocks(arr):
+            # dedup by row range: on a multi-axis mesh the store is
+            # replicated over non-DP axes, so several addressable shards
+            # carry the same rows — keep one copy per range
+            by_start = {sh.index[0].start or 0: sh
+                        for sh in arr.addressable_shards}
+            shards = [by_start[s] for s in sorted(by_start)]
+            assert len(shards) == self.score_sharding.n_shards, \
+                (len(shards), self.score_sharding.n_shards)
+            return [np.asarray(sh.data) for sh in shards]
+
+        return {"w": blocks(scores.w), "s": blocks(scores.s),
+                "seen": blocks(scores.seen)}
+
     def _resume(self) -> None:
         step = self.ckpt.latest_step()
         self.state = self.ckpt.restore(self.state, step)
@@ -195,20 +251,37 @@ class Trainer:
         # skipping a re-prune is only sound while the loader still holds
         # the previous kept-set; after a resume the fresh loader has none,
         # so the first eligible epoch must always prune
-        if self._pruned_in_process \
-                and not self.engine.should_prune(self.state.cadence,
-                                                 self.epochs_since_prune):
+        if not self._pruned_in_process:
+            fired, reason = True, "first-prune"
+        else:
+            fired, reason = self.engine.prune_decision(
+                self.state.cadence, self.epochs_since_prune)
+        cad = self.state.cadence
+        self.prune_events.append({
+            "epoch": epoch, "fired": fired, "reason": reason,
+            "epochs_since_prune": self.epochs_since_prune,
+            "since_prune_drift": float(cad.since_prune)
+            if cad is not None else 0.0})
+        if not fired:
             return                         # keep the previous kept-set
-        scores = self.state.scores
-        w = np.asarray(scores.w)
-        s = np.asarray(scores.s)
-        seen = np.asarray(scores.seen)
+        snap = self._score_snapshot()
         rng = np.random.default_rng((self.tc.seed, epoch, 17))
-        res = prune_epoch(self.tc.method, rng, weights=w, losses=s,
-                          prev_losses=self.prev_epoch_losses, seen=seen,
-                          ratio=self.tc.pruning_ratio)
+        if self.score_sharding is not None:
+            res = prune_epoch_from_shards(
+                self.tc.method, rng, shard_weights=snap["w"],
+                shard_losses=snap["s"],
+                prev_losses=self.prev_epoch_losses,
+                shard_seen=snap["seen"], ratio=self.tc.pruning_ratio)
+            s_host = np.concatenate(snap["s"])
+        else:
+            res = prune_epoch(self.tc.method, rng, weights=snap["w"],
+                              losses=snap["s"],
+                              prev_losses=self.prev_epoch_losses,
+                              seen=snap["seen"],
+                              ratio=self.tc.pruning_ratio)
+            s_host = snap["s"]
         self.loader.apply_pruning(res.kept, res.grad_scale)
-        self.prev_epoch_losses = s.copy()
+        self.prev_epoch_losses = s_host.copy()
         self.epochs_since_prune = 0
         self._pruned_in_process = True
         self.state = self.engine.reset_prune_drift(self.state)
@@ -225,6 +298,10 @@ class Trainer:
                "loss": float(m["loss"]),
                "scored": scored,
                "bp_samples_total": self.bp_samples_total,
+               # ESWP stale-grad_scale audit: how old this epoch's kept-set
+               # (and its InfoBatch rescale) is, in epochs (0 = re-pruned
+               # before this epoch; see prune_events for the gate decision)
+               "epochs_since_prune": self.epochs_since_prune,
                "step_time": dur}
         self.metrics_log.append(rec)
         if self.ckpt and self.global_step % self.tc.ckpt_every_steps == 0:
@@ -277,6 +354,8 @@ class Trainer:
             "scoring_steps_total": self.scoring_steps_total,
             "wall_time": time.time() - t_start,
             "straggler_reports": len(self.straggler.reports),
+            "score_store_sharded": self.score_sharding is not None,
+            "prune_events": self.prune_events,
             "metrics": self.metrics_log,
         }
         if tc.log_path:
@@ -332,6 +411,10 @@ def main() -> None:
     ap.add_argument("--no-fused-scores", dest="fused_scores",
                     action="store_false",
                     help="use XLA scatter instead of the Pallas score kernel")
+    ap.add_argument("--shard-scores", action="store_true",
+                    help="row-shard the ES score store over the local "
+                         "devices (each holds n/D score rows; replicated "
+                         "is the default)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log", dest="log_path", default=None)
     ap.add_argument("--max-steps", type=int, default=None)
@@ -347,6 +430,7 @@ def main() -> None:
                        drift_target=args.drift_target,
                        prune_cadence=args.prune_cadence,
                        fused_scores=args.fused_scores,
+                       shard_scores=args.shard_scores,
                        log_path=args.log_path, max_steps=args.max_steps)
     out = Trainer(tc).train()
     print(json.dumps({k: v for k, v in out.items() if k != "metrics"},

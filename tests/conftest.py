@@ -1,10 +1,71 @@
 import os
+import subprocess
 import sys
 
-# tests see the default 1-device CPU backend (the dry-run alone uses 512
-# placeholder devices, in its own process)
+# By default tests see the 1-device CPU backend (the dry-run alone uses 512
+# placeholder devices, in its own process).  The multi-device tier-1 job
+# exports REPRO_CPU_DEVICES=8 so the whole suite — including the sharded
+# score-store parity tests gated on the ``cpu_mesh8`` fixture — runs on an
+# 8-device CPU mesh.  This must happen at conftest import time, before any
+# test module initializes a jax backend; forcing it any later is a no-op,
+# which is why ``run_multidevice`` below exists for the 1-device runs.
+_FORCED_DEVICES = os.environ.get("REPRO_CPU_DEVICES")
+if _FORCED_DEVICES:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + f" --xla_force_host_platform_device_count"
+            f"={_FORCED_DEVICES}").strip()
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks pkg
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def cpu_mesh8():
+    """An 8-device ("data",) CPU mesh — the sharded-score-store harness.
+
+    Skips when the backend has fewer than 8 devices: run the suite with
+    ``REPRO_CPU_DEVICES=8`` (the CI multi-device job does) to exercise
+    these tests in-process; the always-on subprocess parity tests cover
+    the same paths in plain 1-device runs.
+    """
+    import jax
+    if jax.device_count() < 8:
+        pytest.skip("needs 8 devices — run with REPRO_CPU_DEVICES=8")
+    import numpy as np
+    from jax.sharding import Mesh
+    return Mesh(np.array(jax.devices()[:8]), ("data",))
+
+
+def run_multidevice(code: str, n_devices: int = 8, timeout: int = 900
+                    ) -> "subprocess.CompletedProcess":
+    """Run a python snippet on ``n_devices`` forced CPU devices.
+
+    Subprocess-safe: the parent process' jax backend is typically already
+    initialized with one device and XLA_FLAGS can no longer change it, so
+    the snippet gets a fresh interpreter with the flag exported before any
+    jax import.  The snippet must print ``OK`` on success.
+    """
+    import re
+    env = dict(os.environ)
+    # authoritative: strip any inherited device-count flag (the
+    # multi-device job exports one via REPRO_CPU_DEVICES) so the snippet
+    # runs at exactly the requested count
+    flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                   env.get("XLA_FLAGS", ""))
+    env["XLA_FLAGS"] = (
+        flags + f" --xla_force_host_platform_device_count"
+        f"={n_devices}").strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=timeout, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert "OK" in r.stdout, r.stdout + "\n" + r.stderr
+    return r
 
 
 def smoke_engine_setup(freq=None, cadence=None, n=128, meta_batch=16,

@@ -1,5 +1,8 @@
-"""Benchmark/report tooling sanity (roofline readers, model-FLOPs calc)."""
+"""Benchmark/report tooling sanity (roofline readers, model-FLOPs calc,
+freq-sweep smoke incl. the pipelined-staleness ablation row)."""
+import argparse
 import json
+import math
 
 import pytest
 
@@ -41,6 +44,26 @@ def test_dryrun_artifacts_complete_and_well_formed():
         assert rt["bottleneck"] in ("compute", "memory", "collective")
         assert d["hlo_flops"] > 0
     assert ok == 64 and skip == 16, (ok, skip)
+
+
+def test_freq_sweep_smoke_emits_staleness_ablation():
+    """A minimal ``--smoke``-shaped sweep must carry the pipelined-vs-
+    serial staleness row: equal steps, finite non-negative score-store L2
+    divergence, and a real divergence (the overlap leg scores with 1-step-
+    stale params, so the stores cannot be identical under training)."""
+    from benchmarks.freq_sweep import run_sweep
+    args = argparse.Namespace(smoke=True, ks="1", steps=4, reps=1,
+                              meta_batch=4, minibatch=2, seq_len=16,
+                              n_batches=3, tolerance=0.5)
+    out = run_sweep(args)
+    st = out["staleness"]
+    assert st["steps"] == 3
+    for key in ("s_l2_divergence", "w_l2_divergence"):
+        assert math.isfinite(st[key]) and st[key] >= 0.0
+    assert st["s_l2_divergence"] > 0.0
+    # the timing rows the CI trend gate consumes are still intact
+    assert all("mean_step_ms" in r for r in out["rows"])
+    assert json.dumps(out)         # artifact stays JSON-serializable
 
 
 @pytest.mark.skipif(not any(DRYRUN_DIR.glob(

@@ -4,9 +4,10 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.core.scores import init_scores
+from repro.core.scores import ScoreSharding, init_scores
 
 
 def _state(seed=0):
@@ -72,6 +73,61 @@ def test_restore_casts_to_template_dtype(tmp_path):
     template = {"w": jnp.zeros((4,), jnp.bfloat16)}
     restored = ck.restore(template, step=1)
     assert restored["w"].dtype == jnp.bfloat16
+
+
+def _mesh1() -> ScoreSharding:
+    """1-device ('data',) mesh: the sharded-restore API surface without a
+    multi-device backend (8-device coverage: tests/test_sharded_scores)."""
+    return ScoreSharding(Mesh(np.array(jax.devices()[:1]), ("data",)),
+                         ("data",))
+
+
+def test_restore_replicated_ckpt_into_sharded_template(tmp_path):
+    """An older replicated checkpoint loads into a sharded-store config:
+    restore reshards to the template's NamedSharding."""
+    ck = Checkpointer(tmp_path)
+    state = {"scores": init_scores(16), "step": jnp.asarray(3, jnp.int32)}
+    ck.save(state, step=3)
+    ss = _mesh1()
+    restored = ck.restore({"scores": init_scores(16, ss),
+                           "step": jnp.asarray(0, jnp.int32)}, step=3)
+    np.testing.assert_array_equal(np.asarray(restored["scores"].s),
+                                  np.asarray(state["scores"].s))
+    assert restored["scores"].s.sharding.is_equivalent_to(
+        ss.named_sharding(), 1)
+
+
+def test_restore_sharded_ckpt_into_replicated_template(tmp_path):
+    """...and vice versa: a sharded-store checkpoint loads into a
+    replicated config, manifest carrying the original mesh/spec."""
+    ck = Checkpointer(tmp_path)
+    ss = _mesh1()
+    sharded = init_scores(16, ss)
+    ck.save({"scores": sharded}, step=1)
+    md = ck.manifest(1)["leaves"]["scores/s"]
+    assert md["sharding"] == {"spec": [["data"]], "mesh": {"data": 1}}
+    restored = ck.restore({"scores": init_scores(16)}, step=1)
+    np.testing.assert_array_equal(np.asarray(restored["scores"].w),
+                                  np.asarray(sharded.w))
+    assert getattr(restored["scores"].s.sharding, "mesh", None) is None \
+        or restored["scores"].s.sharding.is_fully_replicated
+
+
+def test_restore_missing_score_leaf_keeps_sharded_template_init(tmp_path):
+    """A checkpoint written before a (sharded) leaf existed restores
+    cleanly: the absent leaf keeps the template init AND its sharding."""
+    ck = Checkpointer(tmp_path)
+    ck.save({"scores": {"s": jnp.ones((16,), jnp.float32)}}, step=1)
+    ss = _mesh1()
+    full = init_scores(16, ss)
+    template = {"scores": {"s": full.s, "seen": full.seen}}
+    restored = ck.restore(template, step=1)
+    np.testing.assert_array_equal(np.asarray(restored["scores"]["s"]),
+                                  np.ones(16, np.float32))
+    np.testing.assert_array_equal(np.asarray(restored["scores"]["seen"]),
+                                  np.zeros(16, np.int32))   # template init
+    assert restored["scores"]["seen"].sharding.is_equivalent_to(
+        ss.named_sharding(), 1)
 
 
 def test_overwrite_same_step_is_atomic(tmp_path):

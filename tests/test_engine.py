@@ -264,6 +264,35 @@ def test_trainer_pipelined_counts_epoch_tail_in_bp_samples():
     assert out["scoring_steps_total"] == tc.epochs * steps_per_epoch
 
 
+def test_metrics_log_epochs_since_prune_resets_on_reprune():
+    """ESWP stale-grad_scale audit (ROADMAP): every step record carries
+    ``epochs_since_prune`` (kept-set age), the drift-gate decision lands
+    in ``prune_events``, and the counter resets to 0 on every re-prune."""
+    from repro.launch.train import Trainer, TrainerConfig
+    tc = TrainerConfig(arch="qwen1.5-0.5b", method="eswp", epochs=4,
+                       meta_batch=16, minibatch=16, n_samples=64,
+                       seq_len=32, anneal_ratio=0.0,
+                       prune_cadence="drift", prune_max_interval=2)
+    out = Trainer(tc).train()
+    assert all("epochs_since_prune" in m for m in out["metrics"])
+    events = {e["epoch"]: e for e in out["prune_events"]}
+    assert events[0]["fired"] and events[0]["reason"] == "first-prune"
+    for e in out["prune_events"]:
+        assert e["reason"] in ("first-prune", "epoch-cadence",
+                               "max-interval", "drift",
+                               "drift-below-floor")
+        # the gate decision is auditable against the counter it logs
+        assert e["fired"] or e["epochs_since_prune"] \
+            < tc.prune_max_interval
+    for m in out["metrics"]:
+        ev = events[m["epoch"]]
+        # re-prune epochs train with a fresh kept-set (counter reset to 0);
+        # skipped epochs train with a stale one (counter > 0)
+        assert m["epochs_since_prune"] == (0 if ev["fired"]
+                                           else ev["epochs_since_prune"])
+        assert m["epochs_since_prune"] < tc.prune_max_interval
+
+
 def test_prune_gate_always_reprunes_in_fresh_process():
     """Regression: with --prune-cadence drift, a quiet store must not let
     a freshly constructed trainer (e.g. after a resume) skip pruning — the

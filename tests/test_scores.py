@@ -49,6 +49,60 @@ def test_update_scores_matches_scalar_recursion(losses, beta1, beta2):
     np.testing.assert_allclose(float(scores.s[0]), 1.0 / n)
 
 
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.lists(st.floats(1e-3, 10.0), min_size=6, max_size=6),
+                min_size=1, max_size=6),
+       betas, betas, st.integers(0, 2 ** 31 - 1))
+def test_update_scores_agrees_with_explicit_forms_over_shuffled_ids(
+        loss_rows, beta1, beta2, seed):
+    """The scatter recursion == Eq. (3.1) unrolled == Eq. (3.2) expansion,
+    per sample, when ids arrive repeatedly over steps, in shuffled batch
+    order, and with some samples skipped on some steps."""
+    n = 6
+    rng = np.random.default_rng(seed)
+    scores = init_scores(n)
+    hist = [[] for _ in range(n)]
+    for row in loss_rows:
+        # a shuffled subset of the ids this step (>=1, repeats across steps)
+        k = int(rng.integers(1, n + 1))
+        ids = rng.permutation(n)[:k]
+        losses = np.asarray(row, np.float64)[ids]
+        for i, loss in zip(ids, losses):
+            hist[i].append(loss)
+        scores = update_scores(scores, jnp.asarray(ids, jnp.int32),
+                               jnp.asarray(losses, jnp.float32),
+                               beta1, beta2)
+    s0 = 1.0 / n
+    for i in range(n):
+        lh = np.asarray(hist[i], np.float64)
+        w_rec = explicit_weights(lh, beta1, beta2, s0)
+        np.testing.assert_allclose(float(scores.w[i]), float(w_rec),
+                                   rtol=2e-4, atol=1e-6)
+        if len(lh):                      # Eq. (3.2) needs >= 1 update
+            w_exp = expansion_weights(lh, beta1, beta2, s0)
+            np.testing.assert_allclose(float(w_exp), float(w_rec),
+                                       rtol=1e-6, atol=1e-8)
+        assert int(scores.seen[i]) == len(lh)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.floats(1e-3, 10.0), min_size=1, max_size=20),
+       betas, betas)
+def test_batch_position_is_irrelevant_to_update(losses, beta1, beta2):
+    """Scattering an id from any position of a shuffled batch gives the
+    same recursion — the store is order-free over unique-id batches."""
+    n = 4
+    a, b = init_scores(n), init_scores(n)
+    ids_fwd = jnp.arange(n, dtype=jnp.int32)
+    ids_rev = ids_fwd[::-1]
+    for t, loss in enumerate(losses):
+        row = jnp.asarray([loss * (i + 1) for i in range(n)], jnp.float32)
+        a = update_scores(a, ids_fwd, row, beta1, beta2)
+        b = update_scores(b, ids_rev, row[::-1], beta1, beta2)
+    np.testing.assert_allclose(np.asarray(a.w), np.asarray(b.w), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(a.s), np.asarray(b.s), rtol=1e-6)
+
+
 def test_es_reduces_to_loss_weighting_at_zero_betas():
     """Paper: Eq. (3.1) with beta1=beta2=0 IS Eq. (2.3) loss weighting."""
     scores = init_scores(8)
