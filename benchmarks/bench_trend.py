@@ -11,6 +11,11 @@ each flavour is relative to plain training in the same process on the
 same host) rather than absolute wall-clock — heterogeneous CI runner
 hardware then cancels out.  Pass ``--relative-to none`` for absolute ms.
 
+``--metric`` picks the gated row field: ``mean_step_ms`` (default) for
+the step-time sweeps, ``host_stall_ms`` for the prefetch-overlap
+artifact (with ``--relative-to sync``, so stall regressions gate like
+step-time regressions while host speed cancels).
+
 Rows present in only one file (new sweep points, retired flavours) are
 reported but never fail the gate; a regression in any shared row exits 1.
 The gate exists to catch step-level regressions (a lost fusion, an
@@ -26,11 +31,11 @@ from typing import Dict, Tuple
 Key = Tuple[str, object]
 
 
-def _rows(path: str) -> Dict[Key, float]:
+def _rows(path: str, metric: str = "mean_step_ms") -> Dict[Key, float]:
     with open(path) as f:
         data = json.load(f)
-    return {(r["method"], r.get("k")): float(r["mean_step_ms"])
-            for r in data.get("rows", [])}
+    return {(r["method"], r.get("k")): float(r[metric])
+            for r in data.get("rows", []) if metric in r}
 
 
 def _normalize(rows: Dict[Key, float], relative_to: str
@@ -42,9 +47,14 @@ def _normalize(rows: Dict[Key, float], relative_to: str
 
 
 def compare(prev_path: str, new_path: str, tolerance: float,
-            relative_to: str = "baseline") -> int:
-    prev, new = _rows(prev_path), _rows(new_path)
-    unit = "ms"
+            relative_to: str = "baseline",
+            metric: str = "mean_step_ms") -> int:
+    prev, new = _rows(prev_path, metric), _rows(new_path, metric)
+    if not prev and not new:
+        # a typo'd/renamed --metric would otherwise gate vacuously green
+        print(f"FAIL: no rows carry metric {metric!r} in either file")
+        return 2
+    unit = "ms" if metric.endswith("_ms") else metric
     if relative_to != "none":
         # normalize only when BOTH runs carry the anchor row — mixing a
         # normalized file with an absolute one would scramble every ratio
@@ -60,6 +70,10 @@ def compare(prev_path: str, new_path: str, tolerance: float,
                   f"{'both files' if not any(has_anchor) else 'one file'};"
                   " comparing absolute ms")
     shared = sorted(set(prev) & set(new), key=str)
+    if not shared:
+        print("FAIL: no shared rows between the two files — nothing was "
+              "actually compared")
+        return 2
     regressions = []
     print(f"{'method':<12} {'k':<6} {'prev':>9} {'new':>9} {'ratio':>7}"
           f"   ({unit})")
@@ -94,9 +108,13 @@ def main() -> None:
     ap.add_argument("--relative-to", default="baseline",
                     help="method row to normalize by within each run "
                          "(cancels host speed); 'none' for absolute ms")
+    ap.add_argument("--metric", default="mean_step_ms",
+                    help="row field to gate on — e.g. host_stall_ms for "
+                         "the prefetch_overlap artifact (rows missing the "
+                         "field are ignored)")
     args = ap.parse_args()
     sys.exit(compare(args.prev, args.new, args.tolerance,
-                     args.relative_to))
+                     args.relative_to, args.metric))
 
 
 if __name__ == "__main__":

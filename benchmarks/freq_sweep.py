@@ -103,8 +103,7 @@ def _staleness_ablation(engine: ESEngine, fresh_state: Callable,
     def run(pipelined: bool):
         state = fresh_state()
         sess = engine.session(selection_on=True, pipelined=pipelined)
-        for b in batches:
-            state, _ = sess.step(state, b)
+        state = sess.run(state, batches)            # stream driver
         state, _ = sess.finish(state)
         return (np.asarray(state.scores.s, np.float64),
                 np.asarray(state.scores.w, np.float64))

@@ -1,0 +1,175 @@
+"""Prefetch overlap benchmark: host-stall time per step, sync vs async.
+
+The pre-pipeline trainer materialized every batch synchronously between
+device steps (token gen / memmap gather + ``device_put`` on the train
+thread), so the host data path serialized against the step.  The
+``data/pipeline`` prefetcher builds and places batch t+1 on a background
+thread while the device runs step t.  This benchmark measures what that
+buys: **host-stall ms/step** — the time the train loop spends waiting for
+the next batch to be ready — for the synchronous path and the prefetched
+path over the identical batch sequence, plus end-to-end step time.
+
+    PYTHONPATH=src:. python benchmarks/prefetch_overlap.py \
+        [--smoke] [--steps 64] [--depth 2] [--out BENCH_prefetch_overlap.json]
+
+Emits ``BENCH_prefetch_overlap.json``; the default (non ``--smoke``) run
+must show prefetch host-stall strictly below the synchronous path
+(``prefetch_stall_below_sync``).  CI runs ``--smoke`` in the bench-smoke
+job and gates ``host_stall_ms`` regressions against the previous run via
+``bench_trend.py --metric host_stall_ms --relative-to sync``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Dict, List
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import ESConfig, ESEngine, init_train_state
+from repro.data.pipeline import Prefetcher, SyncStream, SyntheticSource
+from repro.data.pipeline.sampler import ESSampler
+from repro.models.layers import ShardCtx
+from repro.optim.adamw import OptConfig
+
+BENCH_MODEL = ModelConfig(
+    name="bench-prefetch", family="dense",
+    num_layers=4, d_model=128, num_heads=4, num_kv_heads=4, head_dim=32,
+    d_ff=512, vocab_size=512, tie_embeddings=True,
+    norm_kind="rmsnorm", mlp_kind="swiglu",
+    remat_policy="none", fsdp_params=False, attn_chunk_q=0,
+)
+
+SMOKE_MODEL = dataclasses.replace(BENCH_MODEL, name="bench-prefetch-smoke",
+                                  num_layers=2, d_model=64, d_ff=256,
+                                  num_heads=2, num_kv_heads=2,
+                                  vocab_size=256)
+
+
+def _run_epochs(step_fn, state, stream_factory, steps: int):
+    """Drive ``steps`` train steps off a batch stream; returns
+    (mean_step_ms, mean_host_stall_ms).  Host stall is the wall time spent
+    obtaining the next ready device batch — the whole build+place for the
+    sync path, the queue wait for the prefetcher."""
+    stall = 0.0
+    done = 0
+    t_total = time.perf_counter()
+    while done < steps:
+        with stream_factory() as stream:
+            it = iter(stream)
+            while done < steps:
+                t0 = time.perf_counter()
+                try:
+                    batch = next(it)
+                except StopIteration:
+                    break
+                stall += time.perf_counter() - t0
+                state, m = step_fn(state, batch)
+                jax.block_until_ready(m["loss"])
+                done += 1
+    total_ms = (time.perf_counter() - t_total) / steps * 1e3
+    return total_ms, stall / steps * 1e3, state
+
+
+def run_bench(args) -> Dict:
+    model_cfg = SMOKE_MODEL if args.smoke else BENCH_MODEL
+    meta_batch = args.meta_batch
+    n = args.n_samples
+    source = SyntheticSource(n_samples=n, seq_len=args.seq_len,
+                             vocab_size=min(model_cfg.vocab_size, 64),
+                             seed=0)
+    sampler = ESSampler(n, meta_batch, seed=0)
+    es_cfg = ESConfig(method="es", minibatch=args.minibatch, n_train=n,
+                      seq_chunk=0)
+    opt_cfg = OptConfig(kind="adamw", lr=1e-3)
+    engine = ESEngine(model_cfg, es_cfg, opt_cfg,
+                      lambda s: jax.numpy.asarray(1.0), ShardCtx())
+    step_fn = engine.jitted("es")
+    key = jax.random.PRNGKey(0)
+
+    def fresh_state():
+        return init_train_state(model_cfg, es_cfg, opt_cfg, key, meta_batch)
+
+    epoch_counter = {"sync": 0, "prefetch": 0}
+
+    def stream_factory(kind: str):
+        def make():
+            e = epoch_counter[kind]
+            epoch_counter[kind] += 1
+            host = sampler.epoch_batches(source, e)
+            if kind == "prefetch":
+                return Prefetcher(host, depth=args.depth)
+            return SyncStream(host)
+        return make
+
+    # warmup: compile + first-touch of the synthetic cache-free path
+    warm = fresh_state()
+    with SyncStream(sampler.epoch_batches(source, 0)) as s:
+        for i, b in enumerate(s):
+            warm, m = step_fn(warm, b)
+            if i >= 2:
+                break
+    jax.block_until_ready(m["loss"])
+
+    rows: List[Dict] = []
+    results = {}
+    for kind in ("sync", "prefetch"):
+        step_ms, stall_ms, _ = _run_epochs(
+            step_fn, fresh_state(), stream_factory(kind), args.steps)
+        results[kind] = (step_ms, stall_ms)
+        rows.append({"method": kind,
+                     "k": args.depth if kind == "prefetch" else None,
+                     "mean_step_ms": round(step_ms, 4),
+                     "host_stall_ms": round(stall_ms, 4)})
+        print(f"{kind:<9} {step_ms:8.3f} ms/step  "
+              f"host stall {stall_ms:8.3f} ms/step", flush=True)
+
+    below = results["prefetch"][1] < results["sync"][1]
+    print(f"prefetch_stall_below_sync={below} "
+          f"(stall {results['prefetch'][1]:.3f} vs "
+          f"{results['sync'][1]:.3f} ms)", flush=True)
+    return {
+        "bench": "prefetch_overlap",
+        "config": {"model": model_cfg.name, "smoke": args.smoke,
+                   "meta_batch": meta_batch, "minibatch": args.minibatch,
+                   "seq_len": args.seq_len, "steps": args.steps,
+                   "depth": args.depth, "n_samples": n,
+                   "backend": jax.default_backend()},
+        "rows": rows,
+        "prefetch_stall_below_sync": bool(below),
+        "stall_reduction": round(
+            results["sync"][1] - results["prefetch"][1], 4),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized model and run")
+    ap.add_argument("--steps", type=int, default=64)
+    ap.add_argument("--depth", type=int, default=2,
+                    help="prefetch queue depth (2 = double buffering)")
+    ap.add_argument("--meta-batch", type=int, default=32)
+    ap.add_argument("--minibatch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--n-samples", type=int, default=512)
+    ap.add_argument("--out", default="BENCH_prefetch_overlap.json")
+    args = ap.parse_args()
+    if args.smoke:
+        args.steps = min(args.steps, 16)
+        args.seq_len = min(args.seq_len, 64)
+        args.meta_batch = min(args.meta_batch, 16)
+        args.n_samples = min(args.n_samples, 128)
+
+    out = run_bench(args)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out} "
+          f"(prefetch_stall_below_sync={out['prefetch_stall_below_sync']})")
+
+
+if __name__ == "__main__":
+    main()

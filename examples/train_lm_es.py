@@ -9,6 +9,12 @@ Default invocation runs a CPU-sized model; pass --hundred-m for the full
 
 On a pod slice the identical Trainer drives the production mesh — the
 launcher only swaps the device list (see repro/launch/mesh.py).
+
+Data flows through the streaming pipeline (repro/data/pipeline): pick a
+source with --source/--data-path (synthetic LM, memory-mapped token bin,
+sharded bins, packed SFT), batches are prefetched + device-placed one
+step ahead, and a kill at ANY step resumes bit-exact mid-epoch (the
+sampler cursor + kept-set ride the checkpoint).
 """
 import argparse
 import dataclasses
@@ -56,6 +62,15 @@ def main():
     ap.add_argument("--prune-cadence", default="epoch",
                     choices=["epoch", "drift"],
                     help="ESWP set-level re-prune gate")
+    ap.add_argument("--source", default="synthetic",
+                    choices=["synthetic", "tokens", "sharded", "sft"],
+                    help="data source (see repro.data.pipeline.sources); "
+                         "tokens/sharded stream memory-mapped bins")
+    ap.add_argument("--data-path", default=None,
+                    help="tokens: .bin path; sharded: glob; sft: JSONL")
+    ap.add_argument("--no-prefetch", dest="prefetch", action="store_false",
+                    help="synchronous host data path (no background "
+                         "build+device_put of batch t+1)")
     ap.add_argument("--ckpt", default="/tmp/repro_es_ckpt")
     args = ap.parse_args()
 
@@ -71,6 +86,8 @@ def main():
         lr=6e-4, schedule="cosine",
         score_every=args.score_every, freq_schedule=args.freq_schedule,
         pipelined=args.pipelined, prune_cadence=args.prune_cadence,
+        source=args.source, data_path=args.data_path,
+        prefetch=args.prefetch,
         ckpt_dir=args.ckpt, ckpt_every_steps=50,
         anneal_ratio=0.0,
     )

@@ -106,21 +106,34 @@ class Checkpointer:
         return steps[-1] if steps else None
 
     # ------------------------------------------------------------------
+    # Extras: host-side arrays that ride the checkpoint OUTSIDE the model
+    # state tree (the data pipeline's kept-set / grad-scale / prev-epoch
+    # losses).  They live in arrays.npz under an ``extra/`` prefix so
+    # ``restore`` — which walks the *template* tree — never sees them;
+    # ``extras(step)`` reads them back by name.
+    _EXTRA = "extra/"
+
     def save(self, state: PyTree, step: int,
-             metadata: Optional[Dict] = None) -> Path:
+             metadata: Optional[Dict] = None,
+             extras: Optional[Dict[str, np.ndarray]] = None) -> Path:
         self.wait()  # serialize with any in-flight async save
         flat = _flatten(state)
         shardings = {k: _sharding_desc(v) for k, v in flat.items()}
         host_flat = {k: np.asarray(v) for k, v in flat.items()}
+        for k, v in (extras or {}).items():
+            host_flat[self._EXTRA + k] = np.asarray(v)
         return self._write(host_flat, step, metadata or {}, shardings)
 
     def save_async(self, state: PyTree, step: int,
-                   metadata: Optional[Dict] = None) -> None:
+                   metadata: Optional[Dict] = None,
+                   extras: Optional[Dict[str, np.ndarray]] = None) -> None:
         self.wait()
         # snapshot to host NOW (device buffers may be donated next step)
         flat = _flatten(state)
         shardings = {k: _sharding_desc(v) for k, v in flat.items()}
         host_flat = {k: np.asarray(v) for k, v in flat.items()}
+        for k, v in (extras or {}).items():
+            host_flat[self._EXTRA + k] = np.asarray(v)
         md = dict(metadata or {})
 
         def work():
@@ -223,6 +236,16 @@ class Checkpointer:
         keys = list(flat_template.keys())
         return jax.tree_util.tree_unflatten(treedef,
                                             [out[k] for k in keys])
+
+    def extras(self, step: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """The non-state arrays saved alongside ``step`` (empty dict when
+        the checkpoint predates the extras channel)."""
+        if step is None:
+            step = self.latest_step()
+        assert step is not None, f"no checkpoints in {self.dir}"
+        data = np.load(self.step_dir(step) / "arrays.npz")
+        return {k[len(self._EXTRA):]: data[k] for k in data.files
+                if k.startswith(self._EXTRA)}
 
     def manifest(self, step: Optional[int] = None) -> Dict:
         if step is None:

@@ -664,6 +664,37 @@ class EpochSession:
         # step metrics — the trainer folds this into scoring_steps_total)
         self.scoring_primes = 0
 
+    @property
+    def has_held(self) -> bool:
+        """True when a pipelined meta-batch is primed but not yet trained
+        (recorded in the checkpoint cursor so resume can rebuild it)."""
+        return self._held is not None
+
+    def resume_held(self, batch: Batch) -> None:
+        """Reinstall the held meta-batch after a mid-epoch restore.
+
+        The restored ``TrainState.pending_w`` already carries the weights
+        scored for this batch before the checkpoint, so no re-prime runs —
+        the resumed trajectory stays bit-identical to the uninterrupted
+        one (a re-prime would re-score with post-restore params)."""
+        assert self.pipelined and self._held is None
+        self._held = batch
+
+    def run(self, state: TrainState, stream, on_metrics=None) -> TrainState:
+        """Drive one epoch from a batch stream (the data pipeline's
+        ``Prefetcher``/``SyncStream`` or any iterable of device batches).
+
+        Steps every batch — pipelined primes included — and returns the
+        final state.  ``on_metrics(metrics)`` fires after each *trained*
+        step; returning truthy stops the epoch early.  The caller still
+        invokes ``finish`` to drain a pipelined carry.
+        """
+        for batch in stream:
+            state, m = self.step(state, batch)
+            if m is not None and on_metrics is not None and on_metrics(m):
+                break
+        return state
+
     def step(self, state: TrainState, batch: Batch
              ) -> Tuple[TrainState, Optional[Dict[str, jax.Array]]]:
         eng = self.engine

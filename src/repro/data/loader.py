@@ -1,12 +1,11 @@
-"""Sharded index loader with epoch pruning (the ESWP set-level hook).
+"""Legacy loader surface — now a thin shim over the pipeline's sampler.
 
-The loader owns *which indices* flow each epoch:
-  * per-epoch deterministic shuffles (seed, epoch) — identical on every
-    host, so multi-host SPMD stays in lockstep with no coordination;
-  * ``apply_pruning`` installs the kept-index set (+ optional InfoBatch
-    per-sample gradient rescale) for the next epoch;
-  * host sharding: each host materializes only its row-slice of every
-    global batch (tokens are pure functions of sample id).
+The epoch-permutation / kept-set / host-slicing logic lives in
+``repro.data.pipeline.sampler.ESSampler`` (with async prefetch and the
+resumable cursor layered on top by ``repro.data.pipeline.DataPipeline``).
+``IndexLoader`` keeps the old synchronous host-batch API for callers and
+tests that want it; the permutation is bit-identical to the pre-pipeline
+loader (same ``(seed, epoch)`` Philox stream over the same kept-set).
 """
 from __future__ import annotations
 
@@ -14,52 +13,37 @@ from typing import Dict, Iterator, Optional
 
 import numpy as np
 
-from .synthetic import SyntheticLM
+from .pipeline.sampler import ESSampler
 
 
 class IndexLoader:
-    def __init__(self, dataset: SyntheticLM, meta_batch: int, *,
+    def __init__(self, dataset, meta_batch: int, *,
                  seed: int = 0, host_id: int = 0, num_hosts: int = 1,
                  drop_last: bool = True):
-        assert meta_batch % num_hosts == 0
         self.ds = dataset
         self.meta_batch = meta_batch
-        self.seed = seed
-        self.host_id = host_id
-        self.num_hosts = num_hosts
-        self.drop_last = drop_last
-        self._kept: Optional[np.ndarray] = None
-        self._grad_scale: Optional[np.ndarray] = None
+        self.sampler = ESSampler(len(dataset), meta_batch, seed=seed,
+                                 host_id=host_id, num_hosts=num_hosts,
+                                 drop_last=drop_last)
 
     # ---- ESWP / InfoBatch epoch hook ------------------------------------
     def apply_pruning(self, kept: Optional[np.ndarray],
                       grad_scale: Optional[np.ndarray] = None) -> None:
-        self._kept = None if kept is None else np.asarray(kept)
-        self._grad_scale = grad_scale
+        self.sampler.apply_pruning(kept, grad_scale)
+
+    @property
+    def _kept(self) -> Optional[np.ndarray]:
+        return self.sampler.kept
+
+    @property
+    def _grad_scale(self) -> Optional[np.ndarray]:
+        return self.sampler.grad_scale
 
     def epoch_indices(self, epoch: int) -> np.ndarray:
-        idx = (self._kept if self._kept is not None
-               else np.arange(len(self.ds)))
-        rng = np.random.default_rng((self.seed, epoch))
-        return rng.permutation(idx)
+        return self.sampler.epoch_indices(epoch)
 
     def steps_per_epoch(self, epoch: int = 0) -> int:
-        n = len(self.epoch_indices(epoch))
-        return n // self.meta_batch if self.drop_last \
-            else -(-n // self.meta_batch)
+        return self.sampler.steps_per_epoch(epoch)
 
     def epoch(self, epoch: int) -> Iterator[Dict[str, np.ndarray]]:
-        idx = self.epoch_indices(epoch)
-        nb = self.steps_per_epoch(epoch)
-        per_host = self.meta_batch // self.num_hosts
-        for b in range(nb):
-            ids = idx[b * self.meta_batch:(b + 1) * self.meta_batch]
-            if len(ids) < self.meta_batch and self.drop_last:
-                return
-            lo = self.host_id * per_host
-            ids_host = ids[lo:lo + per_host] if self.num_hosts > 1 else ids
-            batch = self.ds.batch(ids_host)
-            if self._grad_scale is not None:
-                batch["grad_scale"] = self._grad_scale[ids_host].astype(
-                    np.float32)
-            yield batch
+        return self.sampler.epoch_batches(self.ds, epoch)

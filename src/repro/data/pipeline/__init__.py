@@ -1,0 +1,36 @@
+"""Streaming data pipeline: pluggable sources, async prefetch, ES-aware
+resumable sampling.
+
+The paper frames ES(WP) as plug-and-play across pre- and post-training;
+this package is the data-side half of that claim.  Three orthogonal
+layers, composed by :class:`DataPipeline`:
+
+  sources   : anything with ``__len__`` + ``batch(ids)`` (the ``Source``
+              protocol).  Shipped: the in-memory synthetic LM adapter, a
+              memory-mapped token-bin corpus, a sharded-file streaming
+              corpus, and a packed SFT source (prompt/response with loss
+              masks) for the post-training scenario.
+  sampler   : ``ESSampler`` owns the (seed, epoch) permutation, the ESWP
+              kept-set / InfoBatch grad-scale installation, multi-host row
+              slicing, and a serializable cursor so checkpoint resume is
+              bit-exact mid-epoch.
+  prefetch  : ``Prefetcher`` builds batch t+1 on a background thread and
+              ``jax.device_put``s it (optionally onto the DP mesh
+              sharding) while the device runs step t — the host data path
+              no longer serializes against the train step.
+
+``repro.data.loader.IndexLoader`` is now a thin shim over these layers.
+"""
+from .pipeline import DataPipeline
+from .prefetch import Prefetcher, SyncStream, make_placer
+from .sampler import ESSampler, kept_digest
+from .sources import (PackedSFTSource, ShardedFileSource, Source,
+                      SyntheticSource, TokenBinSource, get_source,
+                      write_token_bin)
+
+__all__ = [
+    "DataPipeline", "SyncStream", "Prefetcher", "make_placer",
+    "ESSampler", "kept_digest",
+    "Source", "SyntheticSource", "TokenBinSource", "ShardedFileSource",
+    "PackedSFTSource", "get_source", "write_token_bin",
+]

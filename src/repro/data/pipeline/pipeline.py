@@ -1,0 +1,105 @@
+"""DataPipeline: source x sampler x prefetch, one trainer-facing object.
+
+One pipeline owns the full host data path for a training run:
+
+    pipe = DataPipeline(source, meta_batch, seed=0, prefetch=True)
+    for epoch in range(E):
+        with pipe.epoch(epoch) as stream:      # device batches
+            for batch in stream: ...
+    pipe.apply_pruning(kept, grad_scale)       # ESWP epoch hook
+
+``epoch`` returns a context-managed iterator of device-placed batches —
+a background ``Prefetcher`` by default, the inline ``SyncStream`` when
+prefetch is off — so the trainer's epoch loop is identical either way
+and shutdown (end of epoch, early stop, exception) is always clean.
+
+Resume: ``cursor``/``state_arrays`` round-trip the sampler position and
+kept-set through the checkpoint (manifest + extras); ``epoch(epoch,
+start_step=s)`` then continues mid-epoch with exactly the batch ids the
+uninterrupted run would have produced (see ``sampler.ESSampler``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Union
+
+import numpy as np
+
+from .prefetch import Placer, Prefetcher, SyncStream
+from .sampler import ESSampler
+from .sources import Source, source_fingerprint
+
+
+class DataPipeline:
+    def __init__(self, source: Source, meta_batch: int, *,
+                 seed: int = 0, host_id: int = 0, num_hosts: int = 1,
+                 drop_last: bool = True, prefetch: bool = True,
+                 depth: int = 2, place: Optional[Placer] = None):
+        self.source = source
+        self.sampler = ESSampler(len(source), meta_batch, seed=seed,
+                                 host_id=host_id, num_hosts=num_hosts,
+                                 drop_last=drop_last)
+        self.prefetch = prefetch
+        self.depth = depth
+        self.place = place
+
+    def __len__(self) -> int:
+        return len(self.source)
+
+    # ---- epoch streams ---------------------------------------------------
+    def epoch(self, epoch: int, start_step: int = 0
+              ) -> Union[Prefetcher, SyncStream]:
+        host_iter = self.sampler.epoch_batches(self.source, epoch,
+                                               start_step)
+        if self.prefetch:
+            return Prefetcher(host_iter, depth=self.depth, place=self.place)
+        return SyncStream(host_iter, place=self.place)
+
+    def batch_at(self, epoch: int, step: int) -> Dict[str, np.ndarray]:
+        """Host batch ``step`` of ``epoch`` — re-materialized on demand
+        (resume of a pipelined session rebuilds its held batch this way)."""
+        ids = self.sampler.host_slice(self.sampler.batch_ids(epoch, step))
+        batch = self.source.batch(ids)
+        gs = self.sampler.grad_scale
+        if gs is not None:
+            batch["grad_scale"] = gs[ids].astype(np.float32)
+        return batch
+
+    # ---- sampler surface (ESWP hook + bookkeeping) -----------------------
+    def apply_pruning(self, kept, grad_scale=None) -> None:
+        self.sampler.apply_pruning(kept, grad_scale)
+
+    @property
+    def _kept(self) -> Optional[np.ndarray]:
+        # legacy IndexLoader spelling, kept for tests/tools that poke it
+        return self.sampler.kept
+
+    @property
+    def grad_scale(self) -> Optional[np.ndarray]:
+        return self.sampler.grad_scale
+
+    def steps_per_epoch(self, epoch: int = 0) -> int:
+        return self.sampler.steps_per_epoch(epoch)
+
+    def epoch_indices(self, epoch: int) -> np.ndarray:
+        return self.sampler.epoch_indices(epoch)
+
+    # ---- resume ----------------------------------------------------------
+    def cursor(self, epoch: int, step: int) -> Dict:
+        cur = self.sampler.cursor(epoch, step)
+        name, n = source_fingerprint(self.source)
+        cur["source"] = {"kind": name, "n": n}
+        return cur
+
+    def state_arrays(self) -> Dict[str, np.ndarray]:
+        return self.sampler.state_arrays()
+
+    def load_state(self, extras: Dict[str, np.ndarray],
+                   cursor: Optional[Dict] = None) -> None:
+        if cursor is not None and "source" in cursor:
+            name, n = source_fingerprint(self.source)
+            src = cursor["source"]
+            if src["n"] != n:
+                raise ValueError(
+                    f"pipeline resume: source length changed "
+                    f"({src['n']} -> {n}); score rows would misalign")
+        self.sampler.load_state(extras, cursor)

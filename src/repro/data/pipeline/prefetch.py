@@ -1,0 +1,173 @@
+"""Async double-buffered prefetch: batch t+1 lands on device during step t.
+
+The synchronous path the trainer used to run — materialize the host batch
+(token gen / memmap gather), ``jnp.asarray`` it, then step — serializes
+the host data path against the device step, which is exactly the stall
+the engine's pipelined scoring leg works to hide.  ``Prefetcher`` moves
+the build + ``jax.device_put`` onto a background thread feeding a bounded
+queue:
+
+  * depth-2 queue by default (double buffering): the worker is at most
+    one batch ahead and blocks when full — backpressure, no unbounded
+    host memory growth;
+  * the *transfer* is issued on the worker thread too, so with a mesh
+    placer the batch is already resident (and sharded over the DP axes)
+    when the consumer asks for it;
+  * clean shutdown: ``close()`` (or the context manager) stops the worker
+    promptly even when the queue is full and joins it; worker exceptions
+    re-raise in the consumer, not silently on a daemon thread.
+
+``benchmarks/prefetch_overlap.py`` measures host-stall per step of this
+path against the synchronous one.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Dict, Iterable, Iterator, Optional
+
+import numpy as np
+
+Batch = Dict[str, np.ndarray]
+Placer = Callable[[Batch], Dict[str, Any]]
+
+
+def default_placer(batch: Batch) -> Dict[str, Any]:
+    import jax
+    return {k: jax.device_put(np.asarray(v)) for k, v in batch.items()}
+
+
+def make_placer(ctx=None) -> Placer:
+    """Device placement for host batches.
+
+    With a meshful ``ShardCtx`` every array is ``device_put`` with its
+    batch dim sharded over the DP axes (the ``batch`` logical axis) — the
+    placement the jitted step wants, so no resharding lands on the compute
+    stream.  Without a mesh this is a plain single-device put.
+    """
+    if ctx is None or getattr(ctx, "mesh", None) is None:
+        return default_placer
+    import jax
+    from ...distributed.sharding import batch_sharding
+
+    def mesh_place(batch: Batch) -> Dict[str, Any]:
+        return {k: jax.device_put(np.asarray(v),
+                                  batch_sharding(ctx, np.ndim(v)))
+                for k, v in batch.items()}
+    return mesh_place
+
+
+class _Sentinel:
+    __slots__ = ("err",)
+
+    def __init__(self, err: Optional[BaseException] = None):
+        self.err = err
+
+
+class Prefetcher:
+    """Iterate device-placed batches built one step ahead on a worker.
+
+    Also usable as a context manager; iteration ends when the underlying
+    iterable does, or immediately after ``close()``.
+    """
+
+    def __init__(self, batches: Iterable[Batch], *, depth: int = 2,
+                 place: Optional[Placer] = None):
+        self.depth = max(1, int(depth))
+        self._place = place or default_placer
+        self._q: "queue.Queue" = queue.Queue(maxsize=self.depth)
+        self._stop = threading.Event()
+        self._done = False
+        self._thread = threading.Thread(
+            target=self._worker, args=(iter(batches),), daemon=True,
+            name="repro-prefetch")
+        self._thread.start()
+
+    # -- worker ------------------------------------------------------------
+    def _worker(self, it: Iterator[Batch]) -> None:
+        try:
+            for batch in it:
+                if self._stop.is_set():
+                    break
+                item = self._place(batch)
+                # bounded-blocking put that still honors shutdown
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(item, timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
+                if self._stop.is_set():
+                    break
+            self._finish(None)
+        except BaseException as e:     # surfaces in the consumer
+            self._finish(e)
+
+    def _finish(self, err: Optional[BaseException]) -> None:
+        sentinel = _Sentinel(err)
+        while True:
+            try:
+                self._q.put(sentinel, timeout=0.05)
+                return
+            except queue.Full:
+                if self._stop.is_set():
+                    return             # consumer is gone; nothing to flag
+
+    # -- consumer ------------------------------------------------------------
+    def __iter__(self) -> "Prefetcher":
+        return self
+
+    def __next__(self) -> Dict[str, Any]:
+        if self._done:
+            raise StopIteration
+        item = self._q.get()
+        if isinstance(item, _Sentinel):
+            self._done = True
+            if item.err is not None:
+                raise item.err
+            raise StopIteration
+        return item
+
+    def close(self) -> None:
+        """Stop the worker and join it; safe to call more than once."""
+        self._stop.set()
+        self._done = True
+        while True:                    # unblock a worker stuck on put()
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "Prefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class SyncStream:
+    """The synchronous twin of ``Prefetcher`` — same interface (iterator +
+    context manager), batch built and placed inline on the calling thread.
+    The ``--no-prefetch`` path, and the baseline the overlap benchmark
+    measures against."""
+
+    def __init__(self, batches: Iterable[Batch], *,
+                 place: Optional[Placer] = None):
+        self._it = iter(batches)
+        self._place = place or default_placer
+
+    def __iter__(self) -> "SyncStream":
+        return self
+
+    def __next__(self) -> Dict[str, Any]:
+        return self._place(next(self._it))
+
+    def close(self) -> None:
+        pass
+
+    def __enter__(self) -> "SyncStream":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        pass

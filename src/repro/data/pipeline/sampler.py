@@ -1,0 +1,156 @@
+"""ES-aware epoch sampler: permutation, kept-set, and a resumable cursor.
+
+The sampler owns *which global sample ids* flow each epoch:
+
+  * the (seed, epoch) permutation — ``np.random.default_rng((seed, epoch))
+    .permutation(kept)`` — is a pure function of the seed, the epoch and
+    the installed kept-set, identical on every host, so multi-host SPMD
+    stays in lockstep with zero coordination (each host then slices only
+    its rows of every global batch);
+  * ``apply_pruning`` installs the ESWP / InfoBatch kept-set and optional
+    per-sample grad rescale for subsequent epochs;
+  * the cursor (epoch, step, kept digest) plus the kept/grad-scale arrays
+    make mid-epoch checkpoint resume bit-exact: restoring them and asking
+    for ``epoch_batches(epoch, start_step)`` reproduces exactly the batch
+    ids the uninterrupted run would have seen.
+
+The sample-id <-> score-row identity invariant: ids are global dataset
+positions, never re-indexed by pruning, so the (n,) ES score store needs
+no remapping when the kept-set changes or a resume crosses a prune.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+
+def kept_digest(kept: Optional[np.ndarray]) -> str:
+    """Stable digest of a kept-set (``"full"`` when nothing is pruned) —
+    recorded in the checkpoint manifest and verified on resume."""
+    if kept is None:
+        return "full"
+    return hashlib.sha1(
+        np.ascontiguousarray(np.asarray(kept, np.int64))).hexdigest()[:16]
+
+
+class ESSampler:
+    def __init__(self, n_samples: int, meta_batch: int, *,
+                 seed: int = 0, host_id: int = 0, num_hosts: int = 1,
+                 drop_last: bool = True):
+        assert meta_batch % num_hosts == 0
+        assert 0 <= host_id < num_hosts
+        self.n_samples = int(n_samples)
+        self.meta_batch = int(meta_batch)
+        self.seed = seed
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self.drop_last = drop_last
+        self._kept: Optional[np.ndarray] = None
+        self._grad_scale: Optional[np.ndarray] = None
+
+    # ---- ESWP / InfoBatch epoch hook ------------------------------------
+    def apply_pruning(self, kept: Optional[np.ndarray],
+                      grad_scale: Optional[np.ndarray] = None) -> None:
+        self._kept = None if kept is None else np.asarray(kept)
+        self._grad_scale = None if grad_scale is None \
+            else np.asarray(grad_scale, np.float32)
+
+    @property
+    def kept(self) -> Optional[np.ndarray]:
+        return self._kept
+
+    @property
+    def grad_scale(self) -> Optional[np.ndarray]:
+        return self._grad_scale
+
+    # ---- permutation / shape --------------------------------------------
+    def epoch_indices(self, epoch: int) -> np.ndarray:
+        idx = (self._kept if self._kept is not None
+               else np.arange(self.n_samples))
+        rng = np.random.default_rng((self.seed, epoch))
+        return rng.permutation(idx)
+
+    def steps_per_epoch(self, epoch: int = 0) -> int:
+        n = len(self._kept) if self._kept is not None else self.n_samples
+        return n // self.meta_batch if self.drop_last \
+            else -(-n // self.meta_batch)
+
+    def batch_ids(self, epoch: int, step: int) -> np.ndarray:
+        """GLOBAL ids of meta-batch ``step`` of ``epoch`` (all hosts)."""
+        idx = self.epoch_indices(epoch)
+        ids = idx[step * self.meta_batch:(step + 1) * self.meta_batch]
+        if len(ids) < self.meta_batch and self.drop_last:
+            return ids[:0]
+        return ids
+
+    def host_slice(self, ids: np.ndarray) -> np.ndarray:
+        """This host's row-slice of a global batch.
+
+        Full batches split into ``meta_batch // num_hosts`` contiguous
+        rows per host; a partial final batch (``drop_last=False``) is
+        fair-shared (``np.array_split``) so the per-host stitch still
+        reassembles the global batch in order.
+        """
+        if self.num_hosts == 1:
+            return ids
+        return np.array_split(ids, self.num_hosts)[self.host_id]
+
+    # ---- iteration -------------------------------------------------------
+    def epoch_id_stream(self, epoch: int, start_step: int = 0
+                        ) -> Iterator[Tuple[int, np.ndarray]]:
+        """(step, this host's ids) for meta-batches ``start_step..`` of the
+        epoch.  The permutation is materialized once per epoch."""
+        idx = self.epoch_indices(epoch)
+        nb = self.steps_per_epoch(epoch)
+        for b in range(start_step, nb):
+            ids = idx[b * self.meta_batch:(b + 1) * self.meta_batch]
+            yield b, self.host_slice(ids)
+
+    def epoch_batches(self, source, epoch: int, start_step: int = 0
+                      ) -> Iterator[Dict[str, np.ndarray]]:
+        """Host batches: source rows + the installed InfoBatch rescale."""
+        for _, ids in self.epoch_id_stream(epoch, start_step):
+            batch = source.batch(ids)
+            if self._grad_scale is not None:
+                batch["grad_scale"] = self._grad_scale[ids].astype(
+                    np.float32)
+            yield batch
+
+    # ---- resumable cursor ------------------------------------------------
+    def cursor(self, epoch: int, step: int) -> Dict:
+        """Manifest-ready position: everything needed to re-derive the
+        remaining batch ids is either here or in ``state_arrays``."""
+        return {"epoch": int(epoch), "step": int(step),
+                "seed": self.seed if isinstance(self.seed, int)
+                else list(np.atleast_1d(self.seed)),
+                "meta_batch": self.meta_batch,
+                "num_hosts": self.num_hosts,
+                "drop_last": self.drop_last,
+                "kept_digest": kept_digest(self._kept)}
+
+    def state_arrays(self) -> Dict[str, np.ndarray]:
+        """Kept-set / grad-scale payload for the checkpoint ``extras``
+        channel (the manifest carries only the digest)."""
+        out: Dict[str, np.ndarray] = {}
+        if self._kept is not None:
+            out["sampler_kept"] = np.asarray(self._kept, np.int64)
+        if self._grad_scale is not None:
+            out["sampler_grad_scale"] = np.asarray(self._grad_scale,
+                                                   np.float32)
+        return out
+
+    def load_state(self, extras: Dict[str, np.ndarray],
+                   cursor: Optional[Dict] = None) -> None:
+        """Reinstall a checkpointed kept-set; verify it against the
+        manifest digest so a corrupt/mismatched restore fails loudly."""
+        kept = extras.get("sampler_kept")
+        self.apply_pruning(kept, extras.get("sampler_grad_scale"))
+        if cursor is not None:
+            want = cursor.get("kept_digest", "full")
+            have = kept_digest(self._kept)
+            if want != have:
+                raise ValueError(
+                    f"sampler resume: kept-set digest mismatch "
+                    f"(manifest {want!r} != restored {have!r})")

@@ -1,0 +1,301 @@
+"""Pluggable batch sources for the streaming data pipeline.
+
+A *source* is anything with ``__len__`` and ``batch(ids) -> dict`` where
+the dict carries at least ``tokens (B,S) i32``, ``labels (B,S) i32``
+(-1 = masked from the loss) and ``sample_ids (B,) i32``.  Sample identity
+is positional and stable: global id ``i`` always maps to the same example,
+which is what keeps the ES score-store rows, ESWP kept-sets and InfoBatch
+grad scales meaningful across epoch shuffles, source swaps and checkpoint
+resume.
+
+Four implementations:
+
+  SyntheticSource   : adapter over the in-memory ``SyntheticLM`` (the
+                      planted-difficulty stream end-to-end tests use).
+  TokenBinSource    : memory-mapped flat token bin — the pre-training
+                      corpus format (GPT-2/nanoGPT style ``.bin``); sample
+                      i is the i-th contiguous ``seq_len + 1`` window, so
+                      nothing is ever materialized beyond the batch.
+  ShardedFileSource : the same windows streamed over many shard files
+                      (one memmap per shard, opened lazily, small LRU) —
+                      corpora too large for a single file/filesystem.
+  PackedSFTSource   : post-training — (prompt, response) pairs packed to
+                      a fixed length with labels masked to the response
+                      span only, so the ES scores rank *response* loss.
+"""
+from __future__ import annotations
+
+import collections
+import json
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Protocol, Sequence, Tuple
+
+import numpy as np
+
+from ..synthetic import SyntheticConfig, SyntheticLM
+
+
+class Source(Protocol):
+    """The pipeline's source protocol (structural: ``SyntheticLM`` already
+    satisfies it)."""
+
+    def __len__(self) -> int: ...
+
+    def batch(self, ids: np.ndarray) -> Dict[str, np.ndarray]: ...
+
+
+# ---------------------------------------------------------------------------
+# Synthetic adapter
+# ---------------------------------------------------------------------------
+
+class SyntheticSource:
+    """Adapter over ``SyntheticLM`` — same batches, Source-shaped.
+
+    Exists so trainer code holds *a source* rather than the concrete
+    synthetic dataset; the underlying dataset stays reachable (``.ds``)
+    for tests that inspect the planted difficulty classes.
+    """
+
+    def __init__(self, ds: Optional[SyntheticLM] = None, **cfg_kw):
+        self.ds = ds or SyntheticLM(SyntheticConfig(**cfg_kw))
+
+    def __len__(self) -> int:
+        return len(self.ds)
+
+    def batch(self, ids: np.ndarray) -> Dict[str, np.ndarray]:
+        return self.ds.batch(ids)
+
+
+# ---------------------------------------------------------------------------
+# Memory-mapped token bin (pre-training corpora)
+# ---------------------------------------------------------------------------
+
+def write_token_bin(path: str, tokens: np.ndarray,
+                    dtype=np.uint16) -> Path:
+    """Write a flat token stream as a ``.bin`` (the TokenBinSource format)."""
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    np.asarray(tokens).astype(dtype).tofile(p)
+    return p
+
+
+class TokenBinSource:
+    """Fixed-length windows over a memory-mapped flat token file.
+
+    Sample ``i`` is ``tokens[i*seq_len : i*seq_len + seq_len + 1]`` — the
+    +1 token supplies the shifted labels, so consecutive samples share one
+    boundary token and none is wasted.  The memmap means a 100B-token bin
+    costs no host RAM beyond the touched pages; batches gather only their
+    own windows.
+    """
+
+    def __init__(self, path: str, seq_len: int, dtype=np.uint16):
+        self.path = Path(path)
+        self.seq_len = int(seq_len)
+        self._mm = np.memmap(self.path, dtype=dtype, mode="r")
+        self._n = max(0, (len(self._mm) - 1) // self.seq_len)
+        if self._n == 0:
+            raise ValueError(f"{path}: needs > seq_len+1={seq_len + 1} "
+                             f"tokens, has {len(self._mm)}")
+
+    def __len__(self) -> int:
+        return self._n
+
+    def batch(self, ids: np.ndarray) -> Dict[str, np.ndarray]:
+        S = self.seq_len
+        ids = np.asarray(ids)
+        win = np.empty((len(ids), S + 1), np.int32)
+        for j, sid in enumerate(ids):
+            lo = int(sid) * S
+            win[j] = self._mm[lo:lo + S + 1]
+        return {"tokens": win[:, :-1].astype(np.int32),
+                "labels": win[:, 1:].astype(np.int32),
+                "sample_ids": ids.astype(np.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Sharded-file streaming source
+# ---------------------------------------------------------------------------
+
+class ShardedFileSource:
+    """TokenBin windows streamed over many shard files.
+
+    Global sample ids are the concatenation of the per-shard windows in
+    the given file order (stable, so score rows survive restarts).  Shards
+    are memory-mapped lazily and kept in a small LRU — a run touching a
+    slice of a 1000-shard corpus holds only ``max_open`` maps.
+    """
+
+    def __init__(self, paths: Sequence[str], seq_len: int,
+                 dtype=np.uint16, max_open: int = 8):
+        if not paths:
+            raise ValueError("ShardedFileSource: no shard paths")
+        self.paths = [Path(p) for p in paths]
+        self.seq_len = int(seq_len)
+        self.dtype = dtype
+        self.max_open = max(1, int(max_open))
+        self._open: "collections.OrderedDict[int, np.memmap]" = \
+            collections.OrderedDict()
+        counts = []
+        for p in self.paths:
+            n_tok = p.stat().st_size // np.dtype(dtype).itemsize
+            counts.append(max(0, (n_tok - 1) // self.seq_len))
+        self._offsets = np.concatenate([[0], np.cumsum(counts)])
+        if self._offsets[-1] == 0:
+            raise ValueError("ShardedFileSource: every shard is shorter "
+                             f"than seq_len+1={self.seq_len + 1} tokens")
+
+    def __len__(self) -> int:
+        return int(self._offsets[-1])
+
+    def _shard(self, k: int) -> np.memmap:
+        mm = self._open.get(k)
+        if mm is None:
+            mm = np.memmap(self.paths[k], dtype=self.dtype, mode="r")
+            self._open[k] = mm
+            while len(self._open) > self.max_open:
+                self._open.popitem(last=False)
+        else:
+            self._open.move_to_end(k)
+        return mm
+
+    def batch(self, ids: np.ndarray) -> Dict[str, np.ndarray]:
+        S = self.seq_len
+        ids = np.asarray(ids)
+        win = np.empty((len(ids), S + 1), np.int32)
+        shard_of = np.searchsorted(self._offsets, ids, side="right") - 1
+        for j, (sid, k) in enumerate(zip(ids, shard_of)):
+            lo = (int(sid) - int(self._offsets[k])) * S
+            win[j] = self._shard(int(k))[lo:lo + S + 1]
+        return {"tokens": win[:, :-1].astype(np.int32),
+                "labels": win[:, 1:].astype(np.int32),
+                "sample_ids": ids.astype(np.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Packed SFT source (post-training)
+# ---------------------------------------------------------------------------
+
+class PackedSFTSource:
+    """(prompt, response) token pairs packed to ``seq_len`` with loss masks.
+
+    Layout per sample: ``[prompt | response | pad]`` truncated/padded to
+    ``seq_len``.  ``labels[t]`` is the next token only where that next
+    token lies inside the *response* span; prompt continuations and
+    padding are ``-1`` (masked), so per-sample losses — hence the ES
+    scores and ESWP kept-sets — measure response modelling only, the
+    paper's post-training setting.
+    """
+
+    PAD = 0
+
+    def __init__(self, prompts: Sequence[Sequence[int]],
+                 responses: Sequence[Sequence[int]], seq_len: int):
+        assert len(prompts) == len(responses)
+        self.seq_len = int(seq_len)
+        self._tokens = np.full((len(prompts), seq_len), self.PAD, np.int32)
+        self._labels = np.full((len(prompts), seq_len), -1, np.int32)
+        self._resp_len = np.zeros(len(prompts), np.int32)
+        for i, (p, r) in enumerate(zip(prompts, responses)):
+            seq = np.asarray(list(p) + list(r), np.int32)[:seq_len]
+            self._tokens[i, :len(seq)] = seq
+            # supervise position t iff token t+1 is a response token:
+            # t in [len(p)-1, len(p)+len(r)-1), clipped to the packed window
+            lo = max(len(p) - 1, 0)
+            hi = max(min(len(p) + len(r), seq_len) - 1, lo)
+            self._labels[i, lo:hi] = seq[lo + 1:hi + 1]
+            self._resp_len[i] = hi - lo
+
+    def __len__(self) -> int:
+        return self._tokens.shape[0]
+
+    def batch(self, ids: np.ndarray) -> Dict[str, np.ndarray]:
+        ids = np.asarray(ids)
+        return {"tokens": self._tokens[ids].copy(),
+                "labels": self._labels[ids].copy(),
+                "sample_ids": ids.astype(np.int32)}
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def from_jsonl(cls, path: str, seq_len: int) -> "PackedSFTSource":
+        """Rows of ``{"prompt": [ids...], "response": [ids...]}``."""
+        prompts: List[List[int]] = []
+        responses: List[List[int]] = []
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                row = json.loads(line)
+                prompts.append([int(t) for t in row["prompt"]])
+                responses.append([int(t) for t in row["response"]])
+        return cls(prompts, responses, seq_len)
+
+    @classmethod
+    def synthetic(cls, n: int, seq_len: int, vocab: int = 64,
+                  seed: int = 0) -> "PackedSFTSource":
+        """Deterministic SFT pairs with a planted difficulty split.
+
+        70% learnable: the response deterministically transforms the
+        prompt (reverse, +1 shift, or echo, keyed by a prompt token).
+        30% noise: random responses — their masked loss stays high but
+        does not decrease, which is exactly the signal the ES difference
+        term damps.  Pure function of (seed, i): any host can pack any
+        sample without coordination.
+        """
+        prompts, responses = [], []
+        for i in range(n):
+            r = np.random.default_rng((seed, i))
+            p_len = int(r.integers(4, max(5, seq_len // 4)))
+            prompt = r.integers(1, vocab, p_len)
+            kind = i % 10
+            if kind < 3:
+                resp = prompt[::-1]
+            elif kind < 5:
+                resp = (prompt + 1) % vocab
+            elif kind < 7:
+                resp = prompt.copy()
+            else:
+                resp = r.integers(1, vocab, p_len)   # noise
+            prompts.append(prompt.tolist())
+            responses.append(resp.tolist())
+        return cls(prompts, responses, seq_len)
+
+
+# ---------------------------------------------------------------------------
+# Factory (trainer / CLI entry point)
+# ---------------------------------------------------------------------------
+
+def get_source(kind: str, *, path: Optional[str] = None,
+               n_samples: int = 1024, seq_len: int = 64,
+               vocab_size: int = 64, seed: int = 0) -> Source:
+    """Resolve a source by name — the trainer's ``--source`` switch.
+
+    kind: ``synthetic`` | ``tokens`` (memmap bin at ``path``) |
+    ``sharded`` (glob pattern in ``path``) | ``sft`` (JSONL at ``path``,
+    or the planted synthetic SFT set when ``path`` is omitted).
+    """
+    if kind == "synthetic":
+        return SyntheticSource(n_samples=n_samples, seq_len=seq_len,
+                               vocab_size=vocab_size, seed=seed)
+    if kind == "tokens":
+        assert path, "--data-path required for --source tokens"
+        return TokenBinSource(path, seq_len)
+    if kind == "sharded":
+        assert path, "--data-path (glob) required for --source sharded"
+        import glob as _glob
+        paths: Iterable[str] = sorted(_glob.glob(path, recursive=True))
+        return ShardedFileSource(list(paths), seq_len)
+    if kind == "sft":
+        if path:
+            return PackedSFTSource.from_jsonl(path, seq_len)
+        return PackedSFTSource.synthetic(n_samples, seq_len,
+                                         vocab=vocab_size, seed=seed)
+    raise ValueError(f"unknown source kind {kind!r}")
+
+
+def source_fingerprint(source: Source) -> Tuple[str, int]:
+    """(class name, length) — recorded in the checkpoint manifest so a
+    resume against a different corpus fails loudly instead of silently
+    misaligning score rows."""
+    return type(source).__name__, len(source)

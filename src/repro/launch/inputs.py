@@ -60,6 +60,18 @@ def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, ctx: ShardCtx
     return specs, sh
 
 
+def host_batch_placer(ctx: ShardCtx):
+    """Device placement for HOST batches (the data pipeline's placer).
+
+    The runtime counterpart of ``train_batch_specs``'s sharding tree: with
+    a meshful ctx each array's batch dim is ``device_put`` sharded over
+    the DP axes; without a mesh, a plain put.  Both the train prefetcher
+    and the jitted eval path place batches through this one function.
+    """
+    from ..data.pipeline.prefetch import make_placer
+    return make_placer(ctx)
+
+
 # ---------------------------------------------------------------------------
 # Abstract train state (+ shardings) — no allocation
 # ---------------------------------------------------------------------------

@@ -3,9 +3,16 @@ preemption handling, straggler monitoring, metrics logging.
 
 The step layer is the composable ``ESEngine`` (``core/engine.py``): the
 trainer builds ONE engine and drives every epoch through its
-``EpochSession`` — baseline / serial / decimated / pipelined dispatch,
-the pipelined prime/carry/flush protocol, and the set-level pruning
-cadence all live behind that single entry point.
+``EpochSession``.  The data layer is the streaming pipeline
+(``data/pipeline``): a pluggable ``Source`` (synthetic LM, memory-mapped
+token bins, sharded files, packed SFT) feeds an ES-aware resumable
+sampler, and an async double-buffered prefetcher builds + device-places
+batch t+1 while the device runs step t, so the host data path no longer
+serializes against the train step.  The sampler cursor (epoch, step,
+kept-set digest) rides the checkpoint manifest — with the kept-set and
+grad-scale arrays in the checkpoint's extras channel — making mid-epoch
+resume bit-exact: the restored run sees exactly the remaining batch ids,
+kept-set and grad scales of the uninterrupted one.
 
 CPU-runnable with the smoke configs; the same code path drives the pod
 meshes (mesh selection is by device count).  Usage:
@@ -34,12 +41,13 @@ from ..core.frequency import make_schedule
 from ..core.pruning import prune_epoch, prune_epoch_from_shards
 from ..core.scores import ScoreSharding
 from ..checkpoint.checkpointer import Checkpointer
-from ..data.loader import IndexLoader
+from ..data.pipeline import DataPipeline, SyntheticSource, get_source
 from ..data.synthetic import SyntheticConfig, SyntheticLM
 from ..distributed.fault_tolerance import PreemptionHandler, StragglerMonitor
 from ..models.layers import ShardCtx
 from ..optim.adamw import OptConfig
 from ..optim.schedule import get_schedule
+from .inputs import host_batch_placer
 
 
 @dataclasses.dataclass
@@ -71,6 +79,11 @@ class TrainerConfig:
     fused_scores: bool = True     # Pallas score_update kernel in the step
     shard_scores: bool = False    # row-shard ESScores over the DP devices
     grad_compression: bool = False   # int8 EF gradient compression
+    source: str = "synthetic"     # synthetic | tokens | sharded | sft
+    data_path: Optional[str] = None  # bin / glob / jsonl for real sources
+    prefetch: bool = True         # async double-buffered host data path
+    prefetch_depth: int = 2
+    drop_last: bool = True        # False: train the partial final batch
     ckpt_dir: Optional[str] = None
     ckpt_every_steps: int = 50
     log_path: Optional[str] = None
@@ -84,15 +97,35 @@ BATCH_LEVEL = {"es", "eswp", "loss", "order"}
 class Trainer:
     def __init__(self, tc: TrainerConfig,
                  model_cfg: Optional[ModelConfig] = None,
-                 dataset: Optional[SyntheticLM] = None):
+                 dataset: Optional[SyntheticLM] = None,
+                 source=None):
         self.tc = tc
         self.model_cfg = model_cfg or (
             get_smoke_config(tc.arch) if tc.smoke else get_config(tc.arch))
         vocab = self.model_cfg.vocab_size
-        self.ds = dataset or SyntheticLM(SyntheticConfig(
-            n_samples=tc.n_samples, seq_len=tc.seq_len,
-            vocab_size=min(vocab, 64), seed=tc.seed))
-        self.loader = IndexLoader(self.ds, tc.meta_batch, seed=tc.seed)
+        if source is None:
+            if dataset is not None:
+                source = SyntheticSource(dataset)
+            elif tc.source == "synthetic":
+                source = SyntheticSource(SyntheticLM(SyntheticConfig(
+                    n_samples=tc.n_samples, seq_len=tc.seq_len,
+                    vocab_size=min(vocab, 64), seed=tc.seed)))
+            else:
+                source = get_source(tc.source, path=tc.data_path,
+                                    n_samples=tc.n_samples,
+                                    seq_len=tc.seq_len,
+                                    vocab_size=min(vocab, 64), seed=tc.seed)
+        self.source = source
+        # the underlying dataset where one exists (synthetic introspection)
+        self.ds = getattr(source, "ds", source)
+        self.ctx = ShardCtx()
+        self._placer = host_batch_placer(self.ctx)
+        self.pipeline = DataPipeline(self.source, tc.meta_batch,
+                                     seed=tc.seed, drop_last=tc.drop_last,
+                                     prefetch=tc.prefetch,
+                                     depth=tc.prefetch_depth,
+                                     place=self._placer)
+        self.loader = self.pipeline   # legacy alias (pruning hook, _kept)
 
         beta1, beta2 = tc.beta1, tc.beta2
         if tc.method == "loss":
@@ -105,21 +138,28 @@ class Trainer:
                                else "es",
                                beta1=beta1, beta2=beta2,
                                minibatch=minibatch,
-                               n_train=len(self.ds), pipelined=tc.pipelined,
+                               n_train=len(self.source),
+                               pipelined=tc.pipelined,
                                seq_chunk=0, fused_scores=tc.fused_scores)
         self.sel_method = sel_method
         self.opt_cfg = OptConfig(kind=tc.optimizer, lr=tc.lr,
                                  state_dtype=self.model_cfg.optimizer_dtype,
                                  compress_grads=tc.grad_compression)
-        steps_per_epoch = max(1, tc.n_samples // tc.meta_batch)
-        self.schedule = get_schedule(tc.schedule,
-                                     steps_per_epoch * tc.epochs,
-                                     warmup_steps=steps_per_epoch // 2)
+        self.anneal = AnnealSchedule.from_ratio(tc.epochs, tc.anneal_ratio)
+        # pruning-aware step horizons: an ESWP epoch runs over the KEPT
+        # set, so the lr schedule total and the warmup/frequency horizon
+        # are computed from the planned per-epoch step counts, not from
+        # the unpruned n_samples (they'd overshoot by pruning_ratio)
+        steps_first = self.planned_steps_per_epoch(0)
+        total_steps = sum(
+            self.planned_steps_per_epoch(pruned=p) * c
+            for p, c in self._epoch_counts())
+        self.schedule = get_schedule(tc.schedule, max(total_steps, 1),
+                                     warmup_steps=steps_first // 2)
         self.freq = make_schedule(tc.freq_schedule, tc.score_every,
-                                  steps_per_epoch=steps_per_epoch,
+                                  steps_per_epoch=steps_first,
                                   beta1=beta1, beta2=beta2,
                                   gain_floor=tc.gain_floor)
-        self.ctx = ShardCtx()
         self.score_sharding = self._make_score_sharding() \
             if tc.shard_scores else None
         cadence = CadenceConfig(
@@ -134,17 +174,20 @@ class Trainer:
                                self.schedule, self.ctx, freq=self.freq,
                                cadence=cadence,
                                score_sharding=self.score_sharding)
-        self.anneal = AnnealSchedule.from_ratio(tc.epochs, tc.anneal_ratio)
         self.ckpt = Checkpointer(tc.ckpt_dir) if tc.ckpt_dir else None
         self.preempt = PreemptionHandler().install()
         self.straggler = StragglerMonitor()
         self.metrics_log: list = []
         self.prune_events: list = []
+        self.epoch_log: list = []
         self.bp_samples_total = 0.0
         self.scoring_steps_total = 0.0
         self.prev_epoch_losses: Optional[np.ndarray] = None
         self.epochs_since_prune = 0
         self._pruned_in_process = False
+        self._eval_fn = None
+        self._cur_sess = None
+        self._epoch_consumed = 0
 
         key = jax.random.PRNGKey(tc.seed)
         self.state = init_train_state(self.model_cfg, self.es_cfg,
@@ -152,8 +195,40 @@ class Trainer:
                                       score_sharding=self.score_sharding)
         self.global_step = 0
         self.start_epoch = 0
+        self._resume_step = 0          # consumed meta-batches mid-epoch
+        self._resume_held = False      # pipelined carry at checkpoint time
         if self.ckpt and self.ckpt.latest_step() is not None:
             self._resume()
+
+    # ------------------------------------------------------------------
+    def _steps_for(self, n: int) -> int:
+        mb = self.tc.meta_batch
+        return max(1, n // mb if self.tc.drop_last else -(-n // mb))
+
+    def planned_steps_per_epoch(self, epoch: int = 0,
+                                pruned: Optional[bool] = None) -> int:
+        """Step horizon of ``epoch`` as planned at init: the kept-set size
+        for set-level methods inside the annealing window, full n outside.
+        The *actual* per-epoch count is re-read from the sampler at each
+        epoch start (``epoch_log``) — they agree except when a drift-gated
+        prune skips (the kept-set carries over, same size)."""
+        if pruned is None:
+            pruned = (self.tc.method in SET_LEVEL
+                      and self.anneal.selection_active(epoch))
+        n = len(self.source)
+        if pruned:
+            n = max(1, int(round((1.0 - self.tc.pruning_ratio) * n)))
+        return self._steps_for(n)
+
+    def _epoch_counts(self):
+        """[(pruned?, epoch count)] over the whole run — no epoch loop, so
+        examples that bound by max_steps with epochs=10**6 stay O(1)."""
+        e = self.tc.epochs
+        if self.tc.method not in SET_LEVEL:
+            return [(False, e)]
+        lo, hi = self.anneal.start_epochs, e - self.anneal.end_epochs
+        active = max(0, hi - lo)
+        return [(True, active), (False, e - active)]
 
     # ------------------------------------------------------------------
     def _make_score_sharding(self) -> Optional[ScoreSharding]:
@@ -169,7 +244,7 @@ class Trainer:
             warnings.warn("--shard-scores: single device, store stays "
                           "replicated", stacklevel=2)
             return None
-        n = len(self.ds)
+        n = len(self.source)
         if n % n_dev != 0:
             warnings.warn(f"--shard-scores: n_train={n} not divisible by "
                           f"{n_dev} devices, store stays replicated",
@@ -214,17 +289,40 @@ class Trainer:
         self.bp_samples_total = md.get("bp_samples_total", 0.0)
         self.scoring_steps_total = md.get("scoring_steps_total", 0.0)
         self.epochs_since_prune = md.get("epochs_since_prune", 0)
-        print(f"[resume] step={self.global_step} epoch={self.start_epoch}")
+        cur = md.get("data")
+        if cur is not None:
+            extras = self.ckpt.extras(step)
+            self.pipeline.load_state(extras, cur)
+            if "prev_epoch_losses" in extras:
+                self.prev_epoch_losses = extras["prev_epoch_losses"]
+            self._pruned_in_process = self.pipeline._kept is not None
+            self._resume_step = cur.get("step", 0)
+            self._resume_held = cur.get("held", False)
+            # a cursor at the epoch's end (and no pipelined carry) means
+            # the epoch finished: resume at the NEXT epoch, not a re-run
+            if (not self._resume_held and self._resume_step
+                    >= self.pipeline.steps_per_epoch(self.start_epoch)):
+                self.start_epoch += 1
+                self._resume_step = 0
+        print(f"[resume] step={self.global_step} epoch={self.start_epoch}"
+              f" epoch_step={self._resume_step}"
+              f"{' +held' if self._resume_held else ''}")
 
     def _checkpoint(self, epoch: int, final: bool = False) -> None:
         if not self.ckpt:
             return
         cad = self.state.cadence
+        cursor = self.pipeline.cursor(epoch, self._epoch_consumed)
+        cursor["held"] = bool(self._cur_sess is not None
+                              and self._cur_sess.has_held)
         md = {"global_step": self.global_step, "epoch": epoch,
               "bp_samples_total": self.bp_samples_total,
               "scoring_steps_total": self.scoring_steps_total,
               "epochs_since_prune": self.epochs_since_prune,
               "method": self.tc.method,
+              # sampler cursor: mid-epoch bit-exact resume (the kept-set /
+              # grad-scale arrays ride the extras channel of arrays.npz)
+              "data": cursor,
               # CadenceState snapshot: human-readable in the manifest (the
               # authoritative values ride in arrays.npz with the state)
               "cadence": {"kind": self.engine.cadence.kind,
@@ -232,10 +330,13 @@ class Trainer:
                           "drift_s": float(cad.drift_s),
                           "drift_w": float(cad.drift_w),
                           "since_prune": float(cad.since_prune)}}
+        extras = self.pipeline.state_arrays()
+        if self.prev_epoch_losses is not None:
+            extras["prev_epoch_losses"] = self.prev_epoch_losses
         if final:
-            self.ckpt.save(self.state, self.global_step, md)
+            self.ckpt.save(self.state, self.global_step, md, extras)
         else:
-            self.ckpt.save_async(self.state, self.global_step, md)
+            self.ckpt.save_async(self.state, self.global_step, md, extras)
 
     # ------------------------------------------------------------------
     def _prune_for_epoch(self, epoch: int) -> None:
@@ -243,14 +344,14 @@ class Trainer:
         gated by the engine's pruning cadence (every epoch, or drift)."""
         if self.tc.method not in SET_LEVEL \
                 or not self.anneal.selection_active(epoch):
-            self.loader.apply_pruning(None)
+            self.pipeline.apply_pruning(None)
             return
         # count this epoch (inclusive) so prune_max_interval=N really
         # bounds the gap between prunes at N epochs
         self.epochs_since_prune += 1
-        # skipping a re-prune is only sound while the loader still holds
-        # the previous kept-set; after a resume the fresh loader has none,
-        # so the first eligible epoch must always prune
+        # skipping a re-prune is only sound while the sampler still holds
+        # the previous kept-set; a pre-cursor resume restores none, so the
+        # first eligible epoch must then always prune
         if not self._pruned_in_process:
             fired, reason = True, "first-prune"
         else:
@@ -280,7 +381,7 @@ class Trainer:
                               seen=snap["seen"],
                               ratio=self.tc.pruning_ratio)
             s_host = snap["s"]
-        self.loader.apply_pruning(res.kept, res.grad_scale)
+        self.pipeline.apply_pruning(res.kept, res.grad_scale)
         self.prev_epoch_losses = s_host.copy()
         self.epochs_since_prune = 0
         self._pruned_in_process = True
@@ -320,21 +421,52 @@ class Trainer:
         stop = False
         epoch = self.start_epoch
         for epoch in range(self.start_epoch, tc.epochs):
-            self._prune_for_epoch(epoch)
+            start_step = self._resume_step if epoch == self.start_epoch \
+                else 0
+            resume_held = self._resume_held if epoch == self.start_epoch \
+                else False
+            if start_step == 0 and not resume_held:
+                self._prune_for_epoch(epoch)
+            # else: mid-epoch resume — the kept-set (and its grad scales)
+            # was restored from the checkpoint; re-pruning here would use
+            # mid-epoch scores and diverge from the uninterrupted run
             selection_on = (self.anneal.selection_active(epoch)
                             and self.sel_method != "baseline")
+            # the actual horizon, re-read from the sampler now that the
+            # kept-set for this epoch is installed (satellite: the static
+            # n_samples-derived count ignored pruning)
+            spe = self.pipeline.steps_per_epoch(epoch)
+            self.epoch_log.append({"epoch": epoch, "steps_per_epoch": spe,
+                                   "selection_on": selection_on})
             sess = self.engine.session(selection_on, tc.pipelined)
-            for batch in self.loader.epoch(epoch):
-                jb = {k: jnp.asarray(v) for k, v in batch.items()}
-                t0 = time.time()
-                self.state, m = sess.step(self.state, jb)
-                if m is None:       # pipelined prime: batch held, no train
-                    continue
-                stop = self._record(epoch, m, time.time() - t0)
-                if stop:
-                    break
-            # prime steps run real scoring forwards but emit no metrics
-            self.scoring_steps_total += sess.scoring_primes
+            self._cur_sess = sess
+            self._epoch_consumed = start_step
+            if resume_held and start_step > 0 and sess.pipelined:
+                # rebuild the checkpointed pipelined carry: the restored
+                # pending_w was scored for THIS batch, so no re-prime runs
+                held = self.pipeline.batch_at(epoch, start_step - 1)
+                sess.resume_held(self._placer(held))
+            stream = self.pipeline.epoch(epoch, start_step)
+            t0 = time.time()
+            primes_folded = 0
+            with stream:
+                for jb in stream:
+                    self._epoch_consumed += 1
+                    self.state, m = sess.step(self.state, jb)
+                    if m is None:   # pipelined prime: batch held, no train
+                        # fold the prime's scoring forward in NOW so a
+                        # mid-epoch checkpoint (and its resume, which
+                        # never re-primes) carries the same count as the
+                        # uninterrupted run
+                        self.scoring_steps_total += \
+                            sess.scoring_primes - primes_folded
+                        primes_folded = sess.scoring_primes
+                        t0 = time.time()
+                        continue
+                    stop = self._record(epoch, m, time.time() - t0)
+                    t0 = time.time()
+                    if stop:
+                        break
             if stop:
                 break
             # drain the pipelined carry so the epoch's last meta-batch
@@ -344,6 +476,7 @@ class Trainer:
             if m is not None and self._record(epoch, m, time.time() - t0):
                 break
         self._checkpoint(epoch, final=True)
+        self._cur_sess = None
         if self.ckpt:
             self.ckpt.wait()
         out = {
@@ -356,6 +489,7 @@ class Trainer:
             "straggler_reports": len(self.straggler.reports),
             "score_store_sharded": self.score_sharding is not None,
             "prune_events": self.prune_events,
+            "epoch_log": self.epoch_log,
             "metrics": self.metrics_log,
         }
         if tc.log_path:
@@ -365,18 +499,45 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def eval_mean_loss(self, n: int = 256, batch: int = 32) -> float:
-        """Mean per-sample loss over the first n samples (no selection)."""
+        """Mean per-sample loss over the first n samples (no selection).
+
+        One jitted eval step (padded to a fixed batch shape, masked), fed
+        through the pipeline's prefetcher with the same DP-mesh placement
+        as train batches.
+        """
+        from ..data.pipeline import Prefetcher, SyncStream
         from ..models.transformer import lm_per_sample_loss
-        total, cnt = 0.0, 0
-        for lo in range(0, min(n, len(self.ds)), batch):
-            ids = np.arange(lo, min(lo + batch, len(self.ds)))
-            b = self.ds.batch(ids)
-            jb = {k: jnp.asarray(v) for k, v in b.items()}
-            ps, _ = lm_per_sample_loss(self.model_cfg, self.state.params, jb,
-                                       self.ctx, seq_chunk=0)
-            total += float(jnp.sum(ps))
-            cnt += len(ids)
-        return total / max(cnt, 1)
+        if self._eval_fn is None:
+            model_cfg, ctx = self.model_cfg, self.ctx
+
+            def fn(params, eb, mask):
+                ps, _ = lm_per_sample_loss(model_cfg, params, eb, ctx,
+                                           seq_chunk=0)
+                return jnp.sum(ps * mask), jnp.sum(mask)
+            self._eval_fn = jax.jit(fn)
+        n = min(n, len(self.source))
+
+        def host_batches():
+            for lo in range(0, n, batch):
+                ids = np.arange(lo, min(lo + batch, n))
+                mask = np.ones(batch, np.float32)
+                if len(ids) < batch:      # pad: one compiled shape
+                    mask[len(ids):] = 0.0
+                    ids = np.concatenate(
+                        [ids, np.full(batch - len(ids), ids[-1])])
+                eb = self.source.batch(ids)
+                eb["eval_mask"] = mask
+                yield eb
+
+        stream_cls = Prefetcher if self.tc.prefetch else SyncStream
+        total, cnt = 0.0, 0.0
+        with stream_cls(host_batches(), place=self._placer) as stream:
+            for jb in stream:
+                mask = jb.pop("eval_mask")
+                s, c = self._eval_fn(self.state.params, jb, mask)
+                total += float(s)
+                cnt += float(c)
+        return total / max(cnt, 1.0)
 
 
 def main() -> None:
@@ -415,6 +576,22 @@ def main() -> None:
                     help="row-shard the ES score store over the local "
                          "devices (each holds n/D score rows; replicated "
                          "is the default)")
+    ap.add_argument("--source", default="synthetic",
+                    choices=["synthetic", "tokens", "sharded", "sft"],
+                    help="data source: in-memory synthetic LM, memory-"
+                         "mapped token bin, sharded token-bin files, or "
+                         "packed SFT (prompt/response with loss masks)")
+    ap.add_argument("--data-path", default=None,
+                    help="tokens: .bin path; sharded: glob pattern; "
+                         "sft: JSONL path (omit for the synthetic SFT set)")
+    ap.add_argument("--no-prefetch", dest="prefetch", action="store_false",
+                    help="build+place batches inline on the train thread "
+                         "(the synchronous pre-pipeline data path)")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="prefetch queue depth (2 = double buffering)")
+    ap.add_argument("--keep-partial", dest="drop_last",
+                    action="store_false",
+                    help="train the partial final meta-batch of each epoch")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log", dest="log_path", default=None)
     ap.add_argument("--max-steps", type=int, default=None)
@@ -431,10 +608,14 @@ def main() -> None:
                        prune_cadence=args.prune_cadence,
                        fused_scores=args.fused_scores,
                        shard_scores=args.shard_scores,
+                       source=args.source, data_path=args.data_path,
+                       prefetch=args.prefetch,
+                       prefetch_depth=args.prefetch_depth,
+                       drop_last=args.drop_last,
                        log_path=args.log_path, max_steps=args.max_steps)
     out = Trainer(tc).train()
-    print(json.dumps({k: v for k, v in out.items() if k != "metrics"},
-                     indent=1))
+    print(json.dumps({k: v for k, v in out.items()
+                      if k not in ("metrics", "epoch_log")}, indent=1))
 
 
 if __name__ == "__main__":

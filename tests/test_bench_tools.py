@@ -66,6 +66,46 @@ def test_freq_sweep_smoke_emits_staleness_ablation():
     assert json.dumps(out)         # artifact stays JSON-serializable
 
 
+def test_prefetch_overlap_smoke_emits_artifact():
+    """A --smoke-shaped prefetch_overlap run must emit the rows the CI
+    trend gate consumes (host_stall_ms per method, sync anchor present)
+    and stay JSON-serializable; the strict stall-below-sync claim is only
+    asserted on the default (non-smoke) run."""
+    from benchmarks.prefetch_overlap import run_bench
+    args = argparse.Namespace(smoke=True, steps=4, depth=2, meta_batch=4,
+                              minibatch=2, seq_len=16, n_samples=32)
+    out = run_bench(args)
+    methods = {r["method"] for r in out["rows"]}
+    assert methods == {"sync", "prefetch"}
+    for r in out["rows"]:
+        assert math.isfinite(r["mean_step_ms"]) and r["mean_step_ms"] > 0
+        assert math.isfinite(r["host_stall_ms"]) and r["host_stall_ms"] >= 0
+    assert isinstance(out["prefetch_stall_below_sync"], bool)
+    assert json.dumps(out)
+
+
+def test_bench_trend_metric_switch(tmp_path):
+    """--metric host_stall_ms gates the prefetch artifact: a stall
+    regression beyond tolerance fails, within passes."""
+    from benchmarks.bench_trend import compare
+
+    def art(path, stall):
+        path.write_text(json.dumps({"rows": [
+            {"method": "sync", "k": None, "mean_step_ms": 10.0,
+             "host_stall_ms": 2.0},
+            {"method": "prefetch", "k": 2, "mean_step_ms": 10.0,
+             "host_stall_ms": stall}]}))
+        return str(path)
+
+    prev = art(tmp_path / "prev.json", 0.2)
+    ok = art(tmp_path / "ok.json", 0.25)
+    bad = art(tmp_path / "bad.json", 1.5)
+    assert compare(prev, ok, 0.6, relative_to="sync",
+                   metric="host_stall_ms") == 0
+    assert compare(prev, bad, 0.6, relative_to="sync",
+                   metric="host_stall_ms") == 1
+
+
 @pytest.mark.skipif(not any(DRYRUN_DIR.glob(
     "llama3-8b__train_4k__single__*.json")), reason="no artifacts")
 def test_perf_compare_reads_variants():

@@ -1,0 +1,448 @@
+"""Streaming data pipeline: sources, prefetcher, resumable ES sampling.
+
+Covers the pipeline subsystem end to end:
+  * Source protocol implementations (token-bin memmap, sharded files,
+    packed SFT masks, synthetic adapter parity);
+  * async prefetcher semantics (order parity with the sync path, clean
+    shutdown, backpressure bound, worker-exception propagation, DP-mesh
+    placement);
+  * ES-aware sampler (partial-final-batch handling, multi-host slicing,
+    cross-host permutation identity) and the pruning-aware step horizon;
+  * bit-exact mid-epoch checkpoint resume through the trainer, for the
+    replicated, pipelined, and --shard-scores configurations.
+"""
+import textwrap
+import threading
+import time
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:          # hermetic env: deterministic shim
+    from _hypothesis_fallback import given, settings, st
+
+from conftest import run_multidevice
+
+from repro.data.pipeline import (DataPipeline, PackedSFTSource, Prefetcher,
+                                 ShardedFileSource, SyncStream,
+                                 SyntheticSource, TokenBinSource,
+                                 get_source, kept_digest, write_token_bin)
+from repro.data.pipeline.sampler import ESSampler
+from repro.data.synthetic import SyntheticConfig, SyntheticLM
+
+
+# ---------------------------------------------------------------------------
+# Sources
+# ---------------------------------------------------------------------------
+
+def test_token_bin_source_windows(tmp_path):
+    toks = np.arange(1000, dtype=np.uint16) % 251
+    p = write_token_bin(tmp_path / "corpus.bin", toks)
+    src = TokenBinSource(p, seq_len=64)
+    assert len(src) == (1000 - 1) // 64
+    b = src.batch(np.asarray([0, 3]))
+    np.testing.assert_array_equal(b["tokens"][0], toks[:64])
+    np.testing.assert_array_equal(b["labels"][0], toks[1:65])
+    np.testing.assert_array_equal(b["tokens"][1], toks[3 * 64:4 * 64])
+    # labels are the next-token shift of the SAME window
+    np.testing.assert_array_equal(b["tokens"][1][1:], b["labels"][1][:-1])
+    assert b["sample_ids"].dtype == np.int32
+
+
+def test_sharded_file_source_matches_single_bin(tmp_path):
+    """Global ids over shard files == one concatenated bin, and the LRU
+    keeps at most max_open maps."""
+    rng = np.random.default_rng(0)
+    parts = [rng.integers(0, 200, size=n).astype(np.uint16)
+             for n in (257, 129, 321)]
+    paths = [write_token_bin(tmp_path / f"shard{i}.bin", t)
+             for i, t in enumerate(parts)]
+    sh = ShardedFileSource(paths, seq_len=32, max_open=2)
+    singles = [TokenBinSource(p, 32) for p in paths]
+    assert len(sh) == sum(len(s) for s in singles)
+    ids = np.asarray([0, len(singles[0]) - 1, len(singles[0]),
+                      len(sh) - 1])                # crosses every shard
+    got = sh.batch(ids)
+    offs = np.cumsum([0] + [len(s) for s in singles])
+    for j, gid in enumerate(ids):
+        k = np.searchsorted(offs, gid, side="right") - 1
+        ref = singles[k].batch(np.asarray([gid - offs[k]]))
+        np.testing.assert_array_equal(got["tokens"][j], ref["tokens"][0])
+        np.testing.assert_array_equal(got["labels"][j], ref["labels"][0])
+    assert len(sh._open) <= 2
+
+
+def test_packed_sft_loss_masks():
+    prompts = [[5, 6, 7], [9, 9]]
+    responses = [[1, 2], [3]]
+    src = PackedSFTSource(prompts, responses, seq_len=8)
+    b = src.batch(np.asarray([0, 1]))
+    # sample 0: tokens [5 6 7 1 2 0 0 0]; positions 2,3 predict the
+    # response tokens 1,2; everything else masked
+    np.testing.assert_array_equal(b["tokens"][0],
+                                  [5, 6, 7, 1, 2, 0, 0, 0])
+    np.testing.assert_array_equal(b["labels"][0],
+                                  [-1, -1, 1, 2, -1, -1, -1, -1])
+    np.testing.assert_array_equal(b["labels"][1],
+                                  [-1, 3, -1, -1, -1, -1, -1, -1])
+
+
+def test_packed_sft_truncation_and_determinism():
+    src = PackedSFTSource.synthetic(32, seq_len=16, vocab=32, seed=1)
+    again = PackedSFTSource.synthetic(32, seq_len=16, vocab=32, seed=1)
+    b1, b2 = src.batch(np.arange(32)), again.batch(np.arange(32))
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    np.testing.assert_array_equal(b1["labels"], b2["labels"])
+    # every supervised label is the next token of the packed sequence
+    lab, tok = b1["labels"], b1["tokens"]
+    pos = lab >= 0
+    np.testing.assert_array_equal(lab[pos], tok[:, 1:][pos[:, :-1]])
+
+
+def test_synthetic_adapter_and_factory_parity():
+    ds = SyntheticLM(SyntheticConfig(n_samples=64, seq_len=16,
+                                     vocab_size=64, seed=3))
+    src = SyntheticSource(ds)
+    via_factory = get_source("synthetic", n_samples=64, seq_len=16,
+                             vocab_size=64, seed=3)
+    ids = np.asarray([1, 8, 63])
+    for k, v in ds.batch(ids).items():
+        np.testing.assert_array_equal(v, src.batch(ids)[k])
+        np.testing.assert_array_equal(v, via_factory.batch(ids)[k])
+
+
+# ---------------------------------------------------------------------------
+# Prefetcher
+# ---------------------------------------------------------------------------
+
+def _host_batches(n, start=0):
+    for i in range(start, n):
+        yield {"x": np.full((4,), i, np.int32)}
+
+
+def test_prefetcher_order_parity_with_sync():
+    sync = [np.asarray(b["x"]) for b in SyncStream(_host_batches(7))]
+    with Prefetcher(_host_batches(7)) as pf:
+        pre = [np.asarray(b["x"]) for b in pf]
+    assert len(sync) == len(pre) == 7
+    for a, b in zip(sync, pre):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_prefetcher_backpressure_is_bounded():
+    """The worker never runs more than depth batches ahead of the
+    consumer (bounded queue == bounded host memory)."""
+    built = []
+
+    def slow_consumer_batches():
+        for i in range(16):
+            built.append(i)
+            yield {"x": np.asarray([i])}
+
+    with Prefetcher(slow_consumer_batches(), depth=2) as pf:
+        next(pf)
+        time.sleep(0.3)               # let the worker run ahead if it could
+        # consumed 1; worker may hold: 2 queued + 1 in-flight build
+        assert len(built) <= 1 + 2 + 1, built
+        rest = list(pf)
+    assert len(rest) == 15
+
+
+def test_prefetcher_clean_shutdown_mid_stream():
+    pf = Prefetcher(_host_batches(100), depth=2)
+    next(pf)
+    pf.close()                         # early stop: worker must not linger
+    pf._thread.join(timeout=2.0)
+    assert not pf._thread.is_alive()
+    with pytest.raises(StopIteration):
+        next(pf)
+    pf.close()                         # idempotent
+
+
+def test_prefetcher_propagates_worker_exception():
+    def bad_batches():
+        yield {"x": np.asarray([0])}
+        raise RuntimeError("source exploded")
+
+    with Prefetcher(bad_batches()) as pf:
+        next(pf)
+        with pytest.raises(RuntimeError, match="source exploded"):
+            while True:
+                next(pf)
+
+
+def test_prefetcher_threads_do_not_leak():
+    before = threading.active_count()
+    for _ in range(5):
+        with Prefetcher(_host_batches(3)) as pf:
+            list(pf)
+    time.sleep(0.1)
+    assert threading.active_count() <= before + 1
+
+
+def test_prefetcher_places_on_mesh(cpu_mesh8):
+    """With a meshful ctx the placer lands every batch row-sharded over
+    the DP axis before the consumer sees it."""
+    from repro.data.pipeline import make_placer
+    from repro.models.layers import ShardCtx
+
+    ctx = ShardCtx(mesh=cpu_mesh8, rules=(("batch", "data"),))
+    place = make_placer(ctx)
+    src = SyntheticSource(n_samples=32, seq_len=16, vocab_size=64, seed=0)
+    sampler = ESSampler(32, 16, seed=0)
+    with Prefetcher(sampler.epoch_batches(src, 0), place=place) as pf:
+        batch = next(pf)
+    assert len(batch["tokens"].addressable_shards) == 8
+    assert batch["tokens"].sharding.spec[0] == "data"
+    # rows land whole: stitching the shards reproduces the host batch
+    host = sampler.epoch_batches(src, 0).__next__()
+    np.testing.assert_array_equal(np.asarray(batch["tokens"]),
+                                  host["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# Sampler: partial batches, multi-host, permutation identity
+# ---------------------------------------------------------------------------
+
+def test_drop_last_false_partial_final_batch():
+    src = SyntheticSource(n_samples=50, seq_len=8, vocab_size=64, seed=0)
+    s_drop = ESSampler(50, 16, seed=0, drop_last=True)
+    s_keep = ESSampler(50, 16, seed=0, drop_last=False)
+    assert s_drop.steps_per_epoch(0) == 3
+    assert s_keep.steps_per_epoch(0) == 4
+    kept_batches = list(s_keep.epoch_batches(src, 0))
+    assert [len(b["sample_ids"]) for b in kept_batches] == [16, 16, 16, 2]
+    # every sample exactly once, and the full-batch prefix matches drop_last
+    seen = np.concatenate([b["sample_ids"] for b in kept_batches])
+    np.testing.assert_array_equal(np.sort(seen), np.arange(50))
+    drop_batches = list(s_drop.epoch_batches(src, 0))
+    for kb, db in zip(drop_batches, kept_batches):
+        np.testing.assert_array_equal(kb["sample_ids"], db["sample_ids"])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([1, 2, 4]), st.integers(0, 5))
+def test_multi_host_row_slicing_partitions_batches(num_hosts, epoch):
+    """Union of per-host rows == the global batch, in order, no overlap —
+    including the partial final batch under drop_last=False."""
+    samplers = [ESSampler(56, 16, seed=7, host_id=h, num_hosts=num_hosts,
+                          drop_last=False) for h in range(num_hosts)]
+    global_s = ESSampler(56, 16, seed=7, drop_last=False)
+    for b in range(global_s.steps_per_epoch(epoch)):
+        gids = global_s.batch_ids(epoch, b)
+        stitched = np.concatenate(
+            [s.host_slice(gids) for s in samplers])
+        np.testing.assert_array_equal(stitched, gids)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 20), st.integers(0, 50))
+def test_permutation_identical_across_hosts(seed, epoch):
+    """The (seed, epoch) permutation is a pure function of (seed, epoch,
+    kept-set) — every host derives the identical order with zero
+    coordination, so SPMD batches stay aligned."""
+    perms = [ESSampler(128, 16, seed=seed, host_id=h, num_hosts=4)
+             .epoch_indices(epoch) for h in range(4)]
+    for p in perms[1:]:
+        np.testing.assert_array_equal(perms[0], p)
+    # ... and with a kept-set installed
+    kept = np.arange(0, 128, 3)
+    ks = []
+    for h in range(4):
+        s = ESSampler(128, 16, seed=seed, host_id=h, num_hosts=4)
+        s.apply_pruning(kept)
+        ks.append(s.epoch_indices(epoch))
+    for p in ks[1:]:
+        np.testing.assert_array_equal(ks[0], p)
+
+
+def test_kept_digest_tracks_kept_set():
+    s = ESSampler(64, 8, seed=0)
+    assert s.cursor(0, 0)["kept_digest"] == "full"
+    s.apply_pruning(np.arange(32))
+    d1 = s.cursor(0, 0)["kept_digest"]
+    assert d1 != "full" and d1 == kept_digest(np.arange(32))
+    s.apply_pruning(np.arange(33))
+    assert s.cursor(0, 0)["kept_digest"] != d1
+
+
+def test_pipeline_load_state_rejects_digest_mismatch():
+    src = SyntheticSource(n_samples=64, seq_len=8, vocab_size=64, seed=0)
+    pipe = DataPipeline(src, 8, seed=0)
+    pipe.apply_pruning(np.arange(32))
+    cur = pipe.cursor(1, 2)
+    with pytest.raises(ValueError, match="digest mismatch"):
+        pipe.load_state({"sampler_kept": np.arange(30)}, cur)
+
+
+# ---------------------------------------------------------------------------
+# Trainer integration: pruning-aware horizons, jitted eval, resume
+# ---------------------------------------------------------------------------
+
+def _tc(**kw):
+    from repro.launch.train import TrainerConfig
+    base = dict(arch="qwen1.5-0.5b", method="eswp", epochs=3,
+                meta_batch=16, minibatch=4, n_samples=128, seq_len=32,
+                lr=3e-3, anneal_ratio=0.0, pruning_ratio=0.5)
+    base.update(kw)
+    return TrainerConfig(**base)
+
+
+def test_steps_per_epoch_sees_pruned_horizon():
+    """Satellite regression: the warmup/frequency schedule and lr total
+    must be computed from the PRUNED per-epoch step count, and the actual
+    count must be re-read from the sampler each epoch."""
+    from repro.launch.train import Trainer
+    tr = Trainer(_tc(freq_schedule="warmup", score_every=4))
+    # 128 samples, ratio 0.5 -> 64 kept -> 4 steps/epoch (not 8)
+    assert tr.planned_steps_per_epoch(0) == 4
+    assert tr.freq.warmup_steps == 2           # pruned steps // 2, not 4
+    assert tr.freq.ramp_steps == 4
+    out = tr.train()
+    assert [e["steps_per_epoch"] for e in out["epoch_log"]] == [4, 4, 4]
+    assert out["steps"] == 12
+    # batch-level method: full horizon, no pruning correction
+    tr_es = Trainer(_tc(method="es"))
+    assert tr_es.planned_steps_per_epoch(0) == 8
+
+
+def test_eval_mean_loss_jitted_matches_reference():
+    import jax.numpy as jnp
+    from repro.launch.train import Trainer
+    from repro.models.transformer import lm_per_sample_loss
+    tr = Trainer(_tc(method="es", epochs=1))
+    got = tr.eval_mean_loss(n=40, batch=16)    # exercises the padded tail
+    total, cnt = 0.0, 0
+    for lo in range(0, 40, 16):
+        ids = np.arange(lo, min(lo + 16, 40))
+        jb = {k: jnp.asarray(v) for k, v in tr.source.batch(ids).items()}
+        ps, _ = lm_per_sample_loss(tr.model_cfg, tr.state.params, jb,
+                                   tr.ctx, seq_chunk=0)
+        total += float(jnp.sum(ps))
+        cnt += len(ids)
+    assert got == pytest.approx(total / cnt, rel=1e-4)
+
+
+def _resume_tail(kw, stop_at):
+    """(reference tail, resumed tail, ref final params, resumed final
+    params) for a kill at ``stop_at`` steps."""
+    import jax
+    from repro.launch.train import Trainer
+    ref = Trainer(_tc(**kw))
+    ref_out = ref.train()
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        Trainer(_tc(ckpt_dir=d, max_steps=stop_at, **kw)).train()
+        tr2 = Trainer(_tc(ckpt_dir=d, **kw))
+        assert tr2.global_step == stop_at
+        out2 = tr2.train()
+    return ([m["loss"] for m in ref_out["metrics"][stop_at:]],
+            [m["loss"] for m in out2["metrics"]],
+            jax.tree.leaves(ref.state.params),
+            jax.tree.leaves(tr2.state.params))
+
+
+def test_mid_epoch_resume_bit_exact_replicated():
+    """Kill/restore at an arbitrary mid-epoch step reproduces the same
+    remaining losses AND bit-identical final params — the sampler cursor
+    + kept-set + grad scales round-trip through the checkpoint."""
+    tail_ref, tail_res, p_ref, p_res = _resume_tail(
+        dict(method="eswp"), stop_at=6)     # step 6 = mid-epoch 1
+    np.testing.assert_array_equal(np.asarray(tail_ref),
+                                  np.asarray(tail_res))
+    for a, b in zip(p_ref, p_res):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mid_epoch_resume_bit_exact_infobatch_grad_scale():
+    """InfoBatch attaches per-sample grad rescales — they must survive
+    the resume too (they ride the checkpoint extras channel)."""
+    tail_ref, tail_res, p_ref, p_res = _resume_tail(
+        dict(method="infobatch"), stop_at=9)
+    np.testing.assert_array_equal(np.asarray(tail_ref),
+                                  np.asarray(tail_res))
+    for a, b in zip(p_ref, p_res):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mid_epoch_resume_bit_exact_pipelined_held_batch():
+    """Pipelined sessions checkpoint with a primed-but-untrained carry;
+    resume rebuilds the held batch from the cursor and reuses the
+    restored pending_w (no re-prime), staying bit-exact."""
+    tail_ref, tail_res, p_ref, p_res = _resume_tail(
+        dict(method="es", pipelined=True), stop_at=9)
+    np.testing.assert_array_equal(np.asarray(tail_ref),
+                                  np.asarray(tail_res))
+    for a, b in zip(p_ref, p_res):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mid_epoch_resume_bit_exact_sharded_subprocess():
+    """The same kill/restore pin for --shard-scores: the row-sharded
+    score store, kept-set and cursor all round-trip on an 8-device mesh."""
+    code = textwrap.dedent("""
+        import sys, tempfile; sys.path.insert(0, "src")
+        import numpy as np, jax
+        from repro.launch.train import Trainer, TrainerConfig
+
+        kw = dict(arch="qwen1.5-0.5b", method="eswp", epochs=3,
+                  meta_batch=16, minibatch=4, n_samples=64, seq_len=32,
+                  lr=3e-3, anneal_ratio=0.0, pruning_ratio=0.5,
+                  shard_scores=True)
+        ref = Trainer(TrainerConfig(**kw))
+        assert ref.score_sharding is not None
+        ref_out = ref.train()
+        with tempfile.TemporaryDirectory() as d:
+            Trainer(TrainerConfig(ckpt_dir=d, max_steps=3, **kw)).train()
+            tr2 = Trainer(TrainerConfig(ckpt_dir=d, **kw))
+            assert tr2.global_step == 3 and tr2._resume_step > 0
+            out2 = tr2.train()
+        tail_ref = [m["loss"] for m in ref_out["metrics"][3:]]
+        tail_res = [m["loss"] for m in out2["metrics"]]
+        np.testing.assert_array_equal(np.asarray(tail_ref),
+                                      np.asarray(tail_res))
+        for a, b in zip(jax.tree.leaves(ref.state.params),
+                        jax.tree.leaves(tr2.state.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(ref.pipeline._kept,
+                                      tr2.pipeline._kept)
+        print("OK")
+    """)
+    run_multidevice(code)
+
+
+def test_trainer_no_prefetch_matches_prefetch():
+    """The async data path changes WHEN batches are built, never WHICH —
+    prefetch on/off trajectories are bit-identical."""
+    from repro.launch.train import Trainer
+    out_a = Trainer(_tc(method="es", epochs=2)).train()
+    out_b = Trainer(_tc(method="es", epochs=2, prefetch=False)).train()
+    np.testing.assert_array_equal(
+        np.asarray([m["loss"] for m in out_a["metrics"]]),
+        np.asarray([m["loss"] for m in out_b["metrics"]]))
+
+
+def test_trainer_partial_final_batch_trains():
+    """drop_last=False: the short final meta-batch reaches the step (its
+    own compiled shape) and every sample of the epoch is consumed."""
+    from repro.launch.train import Trainer
+    tr = Trainer(_tc(method="es", epochs=1, n_samples=72, drop_last=False))
+    out = tr.train()
+    # 72/16 -> 4 full + 1 partial(8); selection still caps BP at minibatch
+    assert out["epoch_log"][0]["steps_per_epoch"] == 5
+    assert out["steps"] == 5
+    assert out["bp_samples_total"] == 5 * 4
+
+
+def test_trainer_sft_source_end_to_end():
+    """Post-training leg: the packed SFT source trains through the same
+    pipeline (response-masked losses feed the score store)."""
+    from repro.launch.train import Trainer
+    tr = Trainer(_tc(method="es", epochs=2, source="sft", n_samples=96,
+                     seq_len=32))
+    out = tr.train()
+    losses = [m["loss"] for m in out["metrics"]]
+    assert losses[-1] < losses[0]
+    assert len(tr.state.scores.w) == 96
