@@ -18,6 +18,25 @@ each leaf's mesh/spec in the manifest (provenance — restore is driven by
 the TEMPLATE's sharding, so a checkpoint written on one mesh shape loads
 onto any other, sharded->replicated and replicated->sharded included).
 
+Multi-host runs round-trip through the same manifests.  Two topologies:
+
+  * pod backends (global mesh): score leaves are global jax.Arrays whose
+    shards span processes — ``save`` allgathers the non-addressable rows
+    into the full host copy before writing (process 0 writes);
+  * per-process row ownership (``partition=`` from
+    ``ScoreStore.checkpoint_partition()``): each process's leaves cover
+    only its row range, so every process writes its blocks —
+    ``arrays.npz`` (process 0, plus all unpartitioned leaves) /
+    ``arrays.part<p>.npz`` — under offset-tagged keys (``scores/s#<off>``),
+    and the manifest (process 0) records the union plus the process count.
+
+Restore is topology-free either way: block entries are reassembled into
+the full array and sliced to the template's row range (``partition=``),
+so a 2-process manifest restores onto 1 process, onto 8 devices of one
+process, or onto a different process count — and a single-process
+checkpoint restores into a partitioned run.  The checkpoint directory
+must be on a filesystem every process can read (the usual pod setup).
+
 The ES score store is part of the state: losing it would silently degrade
 selection quality after restart (scores are EMAs, not derivable from params).
 """
@@ -79,6 +98,34 @@ def _path_str(p) -> str:
     return str(p)
 
 
+_BLOCK = "#"     # key#<offset>: a row block of a process-partitioned leaf
+
+
+def _to_host(leaf: Any) -> np.ndarray:
+    """Host copy of a leaf; global arrays with non-addressable shards
+    (process-spanning meshes on pod backends) are allgathered first."""
+    if isinstance(leaf, jax.Array) and not leaf.is_fully_addressable:
+        from jax.experimental import multihost_utils
+        leaf = multihost_utils.process_allgather(leaf, tiled=True)
+    return np.asarray(leaf)
+
+
+def _split_partitioned(flat: Dict[str, Any], partition: Optional[Dict]
+                       ) -> Dict[str, Any]:
+    """Rename process-owned leaves to their offset-tagged block keys."""
+    if not partition:
+        return dict(flat)
+    prefixes = tuple(partition.get("prefixes", ()))
+    off = int(partition.get("offset", 0))
+    out = {}
+    for k, v in flat.items():
+        if prefixes and k.startswith(prefixes):
+            out[f"{k}{_BLOCK}{off:012d}"] = v
+        else:
+            out[k] = v
+    return out
+
+
 class Checkpointer:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = Path(directory)
@@ -113,27 +160,60 @@ class Checkpointer:
     # ``extras(step)`` reads them back by name.
     _EXTRA = "extra/"
 
+    @staticmethod
+    def _host_snapshot(state: PyTree, extras, partition):
+        """Host copies of every leaf (partitioned leaves block-keyed,
+        non-addressable pod leaves allgathered) + sharding descriptors —
+        the one snapshot both the sync and async save paths take."""
+        flat = _split_partitioned(_flatten(state), partition)
+        shardings = {k: _sharding_desc(v) for k, v in flat.items()}
+        host_flat = {k: _to_host(v) for k, v in flat.items()}
+        for k, v in (extras or {}).items():
+            host_flat[Checkpointer._EXTRA + k] = np.asarray(v)
+        return host_flat, shardings
+
+    @staticmethod
+    def _writer_only() -> bool:
+        """False on the processes of a global-mesh multi-host run that
+        must NOT write: with no partition every process would otherwise
+        race the same tmp dir / os.replace on the shared filesystem —
+        process 0 publishes the (assembled, identical) checkpoint for
+        everyone."""
+        from ..distributed.hostcomm import get_comm
+        comm = get_comm()
+        return comm is None or comm.process_index == 0
+
     def save(self, state: PyTree, step: int,
              metadata: Optional[Dict] = None,
-             extras: Optional[Dict[str, np.ndarray]] = None) -> Path:
+             extras: Optional[Dict[str, np.ndarray]] = None,
+             partition: Optional[Dict] = None) -> Path:
+        """``partition`` (from ``ScoreStore.checkpoint_partition()``)
+        marks leaves that cover only this process's row range; every
+        process then participates in the write (see module docstring)."""
         self.wait()  # serialize with any in-flight async save
-        flat = _flatten(state)
-        shardings = {k: _sharding_desc(v) for k, v in flat.items()}
-        host_flat = {k: np.asarray(v) for k, v in flat.items()}
-        for k, v in (extras or {}).items():
-            host_flat[self._EXTRA + k] = np.asarray(v)
+        host_flat, shardings = self._host_snapshot(state, extras, partition)
+        comm = (partition or {}).get("comm")
+        if comm is not None:
+            return self._write_cluster(host_flat, step, metadata or {},
+                                       shardings, partition, comm)
+        if not self._writer_only():
+            return self.step_dir(step)     # process 0 writes for the run
         return self._write(host_flat, step, metadata or {}, shardings)
 
     def save_async(self, state: PyTree, step: int,
                    metadata: Optional[Dict] = None,
-                   extras: Optional[Dict[str, np.ndarray]] = None) -> None:
+                   extras: Optional[Dict[str, np.ndarray]] = None,
+                   partition: Optional[Dict] = None) -> None:
+        if (partition or {}).get("comm") is not None:
+            # multi-process writes are barrier-coordinated: keep them on
+            # the caller thread so collective order stays deterministic
+            self.save(state, step, metadata, extras, partition)
+            return
         self.wait()
         # snapshot to host NOW (device buffers may be donated next step)
-        flat = _flatten(state)
-        shardings = {k: _sharding_desc(v) for k, v in flat.items()}
-        host_flat = {k: np.asarray(v) for k, v in flat.items()}
-        for k, v in (extras or {}).items():
-            host_flat[self._EXTRA + k] = np.asarray(v)
+        host_flat, shardings = self._host_snapshot(state, extras, partition)
+        if not self._writer_only():
+            return
         md = dict(metadata or {})
 
         def work():
@@ -154,21 +234,20 @@ class Checkpointer:
             raise err
 
     # ------------------------------------------------------------------
-    def _write(self, host_flat: Dict[str, np.ndarray], step: int,
-               metadata: Dict,
-               shardings: Optional[Dict[str, Any]] = None) -> Path:
-        final = self.step_dir(step)
-        tmp = Path(str(final) + ".tmp")
-        if tmp.exists():
-            shutil.rmtree(tmp)
-        tmp.mkdir(parents=True)
-        np.savez(tmp / "arrays.npz", **host_flat)
-        shardings = shardings or {}
+    @staticmethod
+    def _leaf_descriptors(host_flat: Dict[str, np.ndarray],
+                          shardings: Dict[str, Any]) -> Dict[str, Dict]:
         leaves = {}
         for k, v in host_flat.items():
             leaves[k] = {"shape": list(v.shape), "dtype": str(v.dtype)}
             if shardings.get(k) is not None:
                 leaves[k]["sharding"] = shardings[k]
+        return leaves
+
+    def _publish(self, tmp: Path, final: Path, step: int,
+                 leaves: Dict[str, Dict], metadata: Dict) -> None:
+        """Manifest write + fsync + atomic rename — the one publish tail
+        every writer (single- and multi-process) goes through."""
         manifest = {
             "step": step,
             "time": time.time(),
@@ -184,6 +263,62 @@ class Checkpointer:
             shutil.rmtree(final)
         os.replace(tmp, final)
         self._gc()
+
+    def _write(self, host_flat: Dict[str, np.ndarray], step: int,
+               metadata: Dict,
+               shardings: Optional[Dict[str, Any]] = None) -> Path:
+        final = self.step_dir(step)
+        tmp = Path(str(final) + ".tmp")
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "arrays.npz", **host_flat)
+        self._publish(tmp, final, step,
+                      self._leaf_descriptors(host_flat, shardings or {}),
+                      metadata)
+        return final
+
+    def _write_cluster(self, host_flat: Dict[str, np.ndarray], step: int,
+                       metadata: Dict, shardings: Dict[str, Any],
+                       partition: Dict, comm) -> Path:
+        """Barrier-coordinated multi-process write.
+
+        Process 0 writes ``arrays.npz`` (its blocks + every unpartitioned
+        leaf) and the manifest; process p writes only its block leaves to
+        ``arrays.part<p>.npz``.  Leaf metadata is exchanged over the host
+        collective so the manifest records the union.
+        """
+        final = self.step_dir(step)
+        tmp = Path(str(final) + ".tmp")
+        p = comm.process_index
+        if p == 0:
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+        comm.barrier("ckpt-mkdir")
+        blocks = {k: v for k, v in host_flat.items() if _BLOCK in k}
+        if p == 0:
+            np.savez(tmp / "arrays.npz", **host_flat)
+            mine = host_flat
+        else:
+            np.savez(tmp / f"arrays.part{p}.npz", **blocks)
+            mine = blocks
+        # manifest union: every process contributes its leaf descriptors
+        # (the allgather doubles as the barrier that orders every part
+        # write before process 0 publishes)
+        packed = comm.allgather(np.frombuffer(
+            json.dumps(self._leaf_descriptors(mine, shardings)).encode(),
+            np.uint8))
+        if p == 0:
+            leaves = {}
+            for buf in packed:
+                leaves.update(json.loads(bytes(buf).decode()))
+            md = dict(metadata)
+            md["process_count"] = comm.process_count
+            md["partitioned"] = {"prefixes": list(partition["prefixes"]),
+                                 "n_global": int(partition["n_global"])}
+            self._publish(tmp, final, step, leaves, md)
+        comm.barrier("ckpt-done")
         return final
 
     def _gc(self) -> None:
@@ -192,8 +327,36 @@ class Checkpointer:
             shutil.rmtree(self.step_dir(s), ignore_errors=True)
 
     # ------------------------------------------------------------------
-    def restore(self, template: PyTree, step: Optional[int] = None
-                ) -> PyTree:
+    def _load_arrays(self, step: int) -> Dict[str, np.ndarray]:
+        """All array files of a step (``arrays.npz`` + any per-process
+        ``arrays.part<p>.npz``), merged — block keys are globally unique."""
+        d = self.step_dir(step)
+        data: Dict[str, np.ndarray] = {}
+        for f in sorted(d.glob("arrays*.npz")):
+            with np.load(f) as z:
+                for k in z.files:
+                    data[k] = z[k]
+        return data
+
+    @staticmethod
+    def _assemble_blocks(data: Dict[str, np.ndarray], key: str
+                         ) -> Optional[np.ndarray]:
+        """The full leaf from its offset-tagged row blocks, if any."""
+        pre = key + _BLOCK
+        blocks = {int(k[len(pre):]): v for k, v in data.items()
+                  if k.startswith(pre)}
+        if not blocks:
+            return None
+        offs = sorted(blocks)
+        n = offs[-1] + len(blocks[offs[-1]])
+        out = np.zeros((n,) + blocks[offs[0]].shape[1:],
+                       blocks[offs[0]].dtype)
+        for o in offs:
+            out[o:o + len(blocks[o])] = blocks[o]
+        return out
+
+    def restore(self, template: PyTree, step: Optional[int] = None,
+                partition: Optional[Dict] = None) -> PyTree:
         """Load into the template's structure/shardings (elastic restore).
 
         Leaves present in the template but absent from the checkpoint keep
@@ -202,24 +365,36 @@ class Checkpointer:
         ``CadenceState``) restores cleanly, the new field simply starting
         from its init, placed with the template's sharding like any other
         leaf.
+
+        Cross-topology: leaves stored as row blocks (a partitioned
+        multi-process save) are reassembled into the full array, and when
+        THIS run is partitioned (``partition`` from the restoring store's
+        ``checkpoint_partition()``) each full array is sliced to the
+        template's row range — so any process count restores any other.
         """
         if step is None:
             step = self.latest_step()
         assert step is not None, f"no checkpoints in {self.dir}"
-        data = np.load(self.step_dir(step) / "arrays.npz")
+        data = self._load_arrays(step)
+        prefixes = tuple((partition or {}).get("prefixes", ()))
+        offset = int((partition or {}).get("offset", 0))
         flat_template = _flatten(template)
         out = {}
         missing = []
         for key, leaf in flat_template.items():
-            if key not in data.files:
+            arr = data.get(key)
+            if arr is None:
+                arr = self._assemble_blocks(data, key)
+            if arr is None:
                 missing.append(key)
                 # abstract templates (ShapeDtypeStruct) carry no values;
                 # zero-init the absent leaf with the template's shape/dtype
                 arr = (np.zeros(leaf.shape, leaf.dtype)
                        if isinstance(leaf, jax.ShapeDtypeStruct)
                        else np.asarray(leaf))
-            else:
-                arr = data[key]
+            if prefixes and key.startswith(prefixes) \
+                    and arr.shape[:1] != tuple(leaf.shape[:1]):
+                arr = arr[offset:offset + leaf.shape[0]]
             if hasattr(leaf, "sharding") and leaf.sharding is not None \
                     and hasattr(leaf.sharding, "mesh"):
                 out[key] = jax.device_put(arr.astype(leaf.dtype),

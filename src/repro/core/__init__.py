@@ -1,10 +1,10 @@
 """Evolved Sampling (ES/ESWP) — the paper's contribution as a JAX library."""
-from .scores import (ESScores, ScoreSharding, init_scores, update_scores,
-                     update_scores_sharded, gather_scores_sharded,
-                     batch_weights)
-from .selection import (select_minibatch, gumbel_topk_select, topk_select,
-                        sharded_gumbel_topk)
-from .pruning import prune_epoch, prune_epoch_from_shards, PruneResult
+from .scores import (ESScores, ReplicatedStore, ScoreSharding, ScoreStore,
+                     ShardedStore, batch_weights, init_scores, make_store,
+                     update_scores)
+from .selection import select_minibatch, gumbel_topk_select, topk_select
+from .pruning import (PruneResult, PruneSnapshot, prune_epoch,
+                      prune_epoch_snapshot)
 from .annealing import AnnealSchedule
 from .frequency import FreqSchedule, adaptive_period, make_schedule
 from .engine import (CadenceConfig, CadenceState, ESConfig, ESEngine,

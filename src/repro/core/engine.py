@@ -42,14 +42,15 @@ epoch start, carry, FLUSH the held meta-batch at epoch end — no batch is
 ever dropped at an epoch boundary) and caches one jitted function per step
 kind.
 
-Score-store updates go through the fused Pallas ``score_update`` kernel on
-TPU; off-TPU the ops wrapper falls back to the XLA scatter path
-(``ESConfig.fused_scores=False`` forces the scatter path everywhere).
-With a ``ScoreSharding`` the store is row-sharded over the DP mesh axes:
-every gather/scatter leg routes sample ids to the owning device
-(``core.scores`` shard_map ops / the per-shard masked kernel dispatch) and
-Gumbel selection merges per-shard candidates, so no device materializes a
-full ``(n,)`` score array.  Replicated remains the default off-mesh.
+Score-store placement is a ``ScoreStore`` backend (``core.scores``), not
+an engine concern: every leg talks to ``self.store`` —
+``ReplicatedStore`` (full arrays, direct scatters; the default) or
+``ShardedStore`` (rows over the DP mesh axes: ids routed to the owning
+device inside shard_map, per-shard masked kernel dispatch, candidate-merge
+Gumbel selection — no device materializes a full ``(n,)`` array).  The
+fused Pallas ``score_update`` kernel rides the same backend (TPU-compiled;
+off-TPU the backends fall back to the XLA scatter;
+``ESConfig.fused_scores=False`` forces the scatter path everywhere).
 
 Batch dict: tokens (B,S) i32, labels (B,S) i32 (-1 = masked),
 sample_ids (B,) i32, optional grad_scale (B,) f32 (InfoBatch rescale),
@@ -68,8 +69,7 @@ from ..models.layers import ShardCtx
 from ..models.transformer import lm_per_sample_loss
 from ..optim.adamw import OptConfig, OptState, init_opt_state, apply_updates
 from .frequency import FreqSchedule
-from .scores import (ESScores, ScoreSharding, gather_scores_sharded,
-                     init_scores, update_scores, update_scores_sharded,
+from .scores import (ESScores, ScoreSharding, ScoreStore, make_store,
                      weights_from_prev)
 from .selection import select_minibatch
 
@@ -165,9 +165,11 @@ class TrainState:
 def init_train_state(model_cfg: ModelConfig, es_cfg: ESConfig,
                      opt_cfg: OptConfig, key: jax.Array,
                      meta_batch: int,
-                     score_sharding: Optional[ScoreSharding] = None
-                     ) -> TrainState:
+                     score_sharding: Optional[ScoreSharding] = None,
+                     store: Optional[ScoreStore] = None) -> TrainState:
     from ..models.transformer import init_lm
+    if store is None:
+        store = make_store(score_sharding)
     pkey, rkey = jax.random.split(key)
     params, _ = init_lm(model_cfg, pkey)
     if model_cfg.param_dtype != "float32":
@@ -180,7 +182,7 @@ def init_train_state(model_cfg: ModelConfig, es_cfg: ESConfig,
     return TrainState(
         params=params,
         opt=init_opt_state(opt_cfg, params),
-        scores=init_scores(es_cfg.n_train, score_sharding),
+        scores=store.init_leaf(es_cfg.n_train),
         rng=rkey,
         pending_w=jnp.full((meta_batch,), 1.0, jnp.float32),
         grad_err=grad_err,
@@ -210,15 +212,26 @@ class ESEngine:
                  opt_cfg: OptConfig, schedule: Callable, ctx: ShardCtx,
                  freq: Optional[FreqSchedule] = None,
                  cadence: Optional[CadenceConfig] = None,
-                 score_sharding: Optional[ScoreSharding] = None):
+                 score_sharding: Optional[ScoreSharding] = None,
+                 store: Optional[ScoreStore] = None):
         self.model_cfg = model_cfg
         self.es_cfg = es_cfg
         self.opt_cfg = opt_cfg
         self.schedule = schedule
         self.ctx = ctx
-        self.score_sharding = score_sharding
-        if score_sharding is not None:
-            score_sharding.shard_size(es_cfg.n_train)  # validate divisibility
+        # the one placement decision: every leg goes through this backend
+        # (``score_sharding`` kept as a convenience spelling of the
+        # sharded backend)
+        self.store = store if store is not None else make_store(score_sharding)
+        self.store.validate(es_cfg.n_train)
+        if getattr(self.store, "is_process_local", False):
+            raise NotImplementedError(
+                "a per-process-rows ShardedStore (ScoreSharding.n_global "
+                "set) completes gather/select host-side between steps and "
+                "cannot run inside the jitted engine legs; training on "
+                "multi-host meshes uses the global-mesh form "
+                "(jax.make_mesh over jax.devices()), the process-local "
+                "form drives store-level ops and the CPU-cluster harness")
         self.freq = freq or FreqSchedule()     # default: score every step
         if cadence is None:
             # a drift FreqSchedule implies the drift cadence; its k is the
@@ -258,26 +271,15 @@ class ESEngine:
 
     def _update_scores(self, scores: ESScores, ids: jax.Array,
                        losses: jax.Array) -> ESScores:
-        if self.es_cfg.fused_scores:
-            from ..kernels.score_update.ops import update_scores_fused
-            return update_scores_fused(scores, ids, losses,
-                                       self.es_cfg.beta1, self.es_cfg.beta2,
-                                       sharding=self.score_sharding)
-        if self.score_sharding is not None:
-            return update_scores_sharded(scores, ids, losses,
-                                         self.es_cfg.beta1,
-                                         self.es_cfg.beta2,
-                                         self.score_sharding)
-        return update_scores(scores, ids, losses,
-                             self.es_cfg.beta1, self.es_cfg.beta2)
+        return self.store.update(scores, ids, losses, self.es_cfg.beta1,
+                                 self.es_cfg.beta2,
+                                 fused=self.es_cfg.fused_scores)
 
     def _prev_sw(self, scores: ESScores, ids: jax.Array
                  ) -> Tuple[jax.Array, jax.Array]:
-        """(s[ids], w[ids]) — direct gather, or the routed psum-gather when
-        the store is row-sharded over the mesh."""
-        if self.score_sharding is not None:
-            return gather_scores_sharded(scores, ids, self.score_sharding)
-        return scores.s[ids], scores.w[ids]
+        """(s[ids], w[ids]) — the backend's gather (direct load, or the
+        routed psum-gather when the store is row-sharded)."""
+        return self.store.gather(scores, ids)
 
     def _observe(self, cad: CadenceState, s_prev: jax.Array,
                  w_prev: jax.Array, losses: jax.Array, w_new: jax.Array,
@@ -290,8 +292,16 @@ class ESEngine:
         sharded store pays its routed gather once.  The s-delta follows
         from Eq. (3.1) without a second gather: Δs = (1-β2)(l - s_prev).
         ``rel`` normalizes by the store scale so the servo is loss-scale
-        free.  In drift mode the period is AIMD-adapted inside the band;
-        in static mode it just mirrors the FreqSchedule for observability.
+        free, and the EMAs fold the PER-STEP drift — the observed rel
+        divided by the steps since the last firing — so
+        ``CadenceConfig.target`` means the same thing at any scoring
+        period k (a store scored every 4th step legitimately moves ~4x
+        more per firing; without the normalization the servo would read
+        that as 4x the drift and never grow the period).  At k=1 the
+        divisor is exactly 1: pre-normalization behaviour, pinned by the
+        regression suite.  In drift mode the period is AIMD-adapted
+        inside the band; in static mode it just mirrors the FreqSchedule
+        for observability.
         """
         c = self.cadence
         b2 = self.es_cfg.beta2
@@ -299,8 +309,14 @@ class ESEngine:
         d_w = jnp.mean(jnp.abs(w_new - w_prev))
         rel_s = d_s / (jnp.mean(jnp.abs(s_prev)) + _EPS)
         rel_w = d_w / (jnp.mean(jnp.abs(w_prev)) + _EPS)
-        drift_s = c.rho * cad.drift_s + (1.0 - c.rho) * rel_s
-        drift_w = c.rho * cad.drift_w + (1.0 - c.rho) * rel_w
+        # steps since the last firing (1 on the very first firing: the
+        # sentinel init would otherwise divide the first observation away)
+        never = cad.last_scored <= _NEVER_SCORED // 2
+        k_eff = jnp.where(never, 1,
+                          jnp.maximum(step - cad.last_scored, 1)
+                          ).astype(jnp.float32)
+        drift_s = c.rho * cad.drift_s + (1.0 - c.rho) * rel_s / k_eff
+        drift_w = c.rho * cad.drift_w + (1.0 - c.rho) * rel_w / k_eff
         if c.kind == "drift":
             grow = drift_s < c.target / c.band
             shrink = drift_s > c.target * c.band
@@ -415,7 +431,7 @@ class ESEngine:
         # (3) mini-batch selection (replicated PRNG: same on all hosts)
         rng, sel_key = jax.random.split(state.rng)
         idx = select_minibatch(self.es_cfg.method, sel_key, w, b,
-                               score_sharding=self.score_sharding)
+                               store=self.store)
         sel = _gather_batch(batch, idx)
 
         # (4) grad step on the mini-batch
@@ -459,7 +475,7 @@ class ESEngine:
 
         rng, sel_key = jax.random.split(state.rng)
         idx = select_minibatch(self.es_cfg.method, sel_key, w, b,
-                               score_sharding=self.score_sharding)
+                               store=self.store)
         sel = _gather_batch(batch, idx)
 
         (mean, _), grads = self._grad_fn(state.params, sel)
@@ -499,7 +515,7 @@ class ESEngine:
         # train on current meta-batch with carried weights
         rng, sel_key = jax.random.split(state.rng)
         idx = select_minibatch(self.es_cfg.method, sel_key, state.pending_w,
-                               b, score_sharding=self.score_sharding)
+                               b, store=self.store)
         sel = _gather_batch(cur, idx)
         (mean, _), grads = self._grad_fn(state.params, sel)
 
@@ -562,7 +578,7 @@ class ESEngine:
             return self.baseline_step(state, batch)
         rng, sel_key = jax.random.split(state.rng)
         idx = select_minibatch(self.es_cfg.method, sel_key, state.pending_w,
-                               b, score_sharding=self.score_sharding)
+                               b, store=self.store)
         sel = _gather_batch(batch, idx)
         (mean, _), grads = self._grad_fn(state.params, sel)
         metrics = {"loss": mean, "sel_loss": mean,

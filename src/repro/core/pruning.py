@@ -16,19 +16,22 @@ Implemented policies (paper Tab. 1 & §4.1 comparisons):
   random    : uniform (1-r)·n keep (ablation baseline)
   none      : keep everything
 
-When the score store is sharded over the mesh (``core.scores.ScoreSharding``)
-the trainer snapshots only the device-local row blocks and calls
-``prune_epoch_from_shards``: quantile/kept-set computation then works from
-per-shard statistics — exact global sums/extrema for the InfoBatch mean and
-UCB horizon (so the kept-set statistics stay unbiased, per the InfoBatch
-rescaling argument), and per-shard candidate top-k merges for the
-threshold methods, with random draws made by GLOBAL sample position so the
-kept-set matches the replicated ``prune_epoch`` for the same rng.
+There is ONE implementation, over a ``PruneSnapshot`` — the host-local row
+blocks a ``ScoreStore`` backend exposes (``core.scores``).  A replicated
+store snapshots one full block; a sharded store snapshots its addressable
+n/D blocks; a multi-host store snapshots only the blocks its process owns
+and carries a ``HostComm`` for the cross-process legs.  Global statistics
+come from block reductions (exact f64 sums/extrema — the kept-set stats
+the InfoBatch 1/(1-r) rescale relies on stay unbiased), threshold methods
+merge per-block candidate top-k lists (allgathered across processes when
+rows are process-owned), and every random draw is made by GLOBAL sample
+position — so the kept-set is identical for any block layout or process
+count, given the same rng.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -39,11 +42,192 @@ class PruneResult:
     grad_scale: Optional[np.ndarray]    # (n,) f32 per-sample rescale or None
 
 
-def _gumbel_topk_np(rng: np.random.Generator, weights: np.ndarray,
-                    k: int) -> np.ndarray:
-    logw = np.log(np.maximum(weights.astype(np.float64), 1e-20))
-    g = rng.gumbel(size=weights.shape)
-    return np.argpartition(-(logw + g), k - 1)[:k]
+@dataclasses.dataclass
+class PruneSnapshot:
+    """Host view of the score store for set-level pruning.
+
+    ``weights``/``losses``/``seen`` are this process's addressable row
+    blocks (in offset order); ``offsets`` their first GLOBAL row; ``n``
+    the logical store size (sum of all block lengths over every process).
+    ``comm`` is the cross-process exchange when rows are process-owned
+    (None: all rows are local and no exchange runs).
+    """
+    weights: List[np.ndarray]
+    losses: List[np.ndarray]
+    seen: Optional[List[np.ndarray]]
+    offsets: np.ndarray
+    n: int
+    comm: object = None
+
+    def block_ranges(self) -> List[Tuple[int, int]]:
+        return [(int(o), int(o) + len(b))
+                for o, b in zip(self.offsets, self.losses)]
+
+    def assemble(self, blocks: List[np.ndarray]) -> np.ndarray:
+        """Global (n,) array from per-block values (+ every other
+        process's, allgathered, when rows are process-owned).  ``blocks``
+        must be in ``block_ranges()`` order."""
+        ranges = self.block_ranges()
+        local = np.concatenate(blocks) if blocks else np.empty(0)
+        out = np.zeros(self.n, local.dtype)
+        if self.comm is not None:
+            lens = np.asarray([hi - lo for lo, hi in ranges], np.int64)
+            packed = self.comm.allgather(local)
+            all_offs = self.comm.allgather(
+                np.asarray(self.offsets, np.int64))
+            all_lens = self.comm.allgather(lens)
+            for buf, proc_offs, proc_lens in zip(packed, all_offs, all_lens):
+                pos = 0
+                for o, ln in zip(proc_offs, proc_lens):
+                    out[o:o + ln] = buf[pos:pos + ln]
+                    pos += ln
+        else:
+            for (lo, hi), b in zip(ranges, blocks):
+                out[lo:hi] = b
+        return out
+
+    def full_losses(self) -> np.ndarray:
+        """The assembled (n,) s-EMA snapshot (the trainer's
+        ``prev_epoch_losses``)."""
+        return self.assemble(self.losses)
+
+
+def _local_topk(keys: np.ndarray, k: int) -> np.ndarray:
+    k = min(k, len(keys))
+    return np.argpartition(-keys, k - 1)[:k] if k else np.empty(0, np.int64)
+
+
+def _merge_candidates(snap: PruneSnapshot, keys: List[np.ndarray],
+                      ids: List[np.ndarray], k: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Global top-k (ids, keys) from per-block candidate lists.
+
+    Exact: the global top-k holds at most k entries per block, so each
+    block pre-filtering to its local top-min(k, |block|) loses nothing.
+    Candidate lists are allgathered across processes when rows are
+    process-owned — O(k * blocks) scalars, never the (n,) store.
+    """
+    keys_cat = np.concatenate(keys) if keys else np.empty(0)
+    ids_cat = np.concatenate(ids) if ids else np.empty(0, np.int64)
+    if snap.comm is not None:
+        keys_cat = np.concatenate(snap.comm.allgather(keys_cat))
+        ids_cat = np.concatenate(snap.comm.allgather(ids_cat))
+    k = min(k, len(ids_cat))
+    if k <= 0:
+        return ids_cat[:0], keys_cat[:0]
+    sel = np.argpartition(-keys_cat, k - 1)[:k]
+    return ids_cat[sel], keys_cat[sel]
+
+
+def prune_epoch_snapshot(method: str, rng: np.random.Generator,
+                         snap: PruneSnapshot, *,
+                         prev_losses: Optional[np.ndarray] = None,
+                         ratio: float = 0.2, ucb_c: float = 1.0,
+                         ka_tau: float = 1.0) -> PruneResult:
+    """Pick kept indices for the next epoch from a score-store snapshot.
+
+    weights: ES w_i blocks; losses: latest per-sample losses (the s_i EMA
+    works as a robust proxy); prev_losses/seen feed KA / UCB variants.
+    ka_tau is the KA move-back decay tolerance: a hidden sample stays
+    hidden only if its loss decayed below ka_tau x last epoch's (1.0 =
+    plain comparison).  Every process of a multi-host run returns the SAME
+    PruneResult (global ids, (n,) grad_scale).
+    """
+    n = snap.n
+    n_keep = max(1, int(round((1.0 - ratio) * n)))
+
+    if method in ("none", "baseline", "es", "loss", "order", "uniform"):
+        return PruneResult(np.arange(n), None)
+
+    if method == "eswp":
+        # Gumbel keys drawn by GLOBAL position: every process/block layout
+        # sees the same draw, so the kept-set is layout-invariant
+        g = rng.gumbel(size=n)
+        keys, ids = [], []
+        for (lo, hi), w in zip(snap.block_ranges(), snap.weights):
+            key = np.log(np.maximum(w.astype(np.float64), 1e-20)) + g[lo:hi]
+            loc = _local_topk(key, n_keep)
+            keys.append(key[loc])
+            ids.append(loc + lo)
+        kept, _ = _merge_candidates(snap, keys, ids, n_keep)
+        return PruneResult(np.sort(kept), None)
+
+    if method == "random":
+        kept = rng.choice(n, size=n_keep, replace=False)
+        return PruneResult(np.sort(kept), None)
+
+    if method == "infobatch":
+        # global mean from per-block f64 partial sums (allreduced across
+        # processes) — an f32 mean would diverge at ~1e-7 rel and flip
+        # below-mean flags near the threshold, biasing the 1/(1-r) rescale
+        partial = np.asarray(sum(float(x.sum(dtype=np.float64))
+                                 for x in snap.losses), np.float64)
+        if snap.comm is not None:
+            partial = snap.comm.allreduce_sum(partial)
+        mean = float(partial) / n
+        u = rng.random(n)                  # global-position draw
+        drop = np.zeros(n, bool)
+        scale = np.ones(n, np.float32)
+        for (lo, hi), losses in zip(snap.block_ranges(), snap.losses):
+            below = losses < mean
+            blk_drop = below & (u[lo:hi] < ratio)
+            drop[lo:hi] = blk_drop
+            scale[lo:hi][below & ~blk_drop] = 1.0 / (1.0 - ratio)
+        if snap.comm is not None:
+            # each process computed only its rows: assemble the global
+            # decision (keep-masks and scales are (rows,) bools/f32 — the
+            # only O(n) exchange, once per epoch)
+            ranges = snap.block_ranges()
+            drop = snap.assemble([drop[lo:hi] for lo, hi in ranges])
+            scale = snap.assemble([scale[lo:hi] for lo, hi in ranges])
+        kept = np.nonzero(~drop)[0]
+        return PruneResult(kept, scale)
+
+    if method == "ucb":
+        seen = snap.seen or [np.ones(len(x)) for x in snap.losses]
+        t = np.asarray(max(int(x.max()) for x in seen), np.int64)
+        if snap.comm is not None:
+            t = snap.comm.allreduce_max(t)
+        t = max(1, int(t))
+        keys, ids = [], []
+        for (lo, hi), losses, cnt in zip(snap.block_ranges(), snap.losses,
+                                         seen):
+            cnt = np.maximum(cnt, 1)
+            score = losses + ucb_c * np.sqrt(np.log(t + 1.0) / cnt)
+            loc = _local_topk(score, n_keep)
+            keys.append(score[loc])
+            ids.append(loc + lo)
+        kept, _ = _merge_candidates(snap, keys, ids, n_keep)
+        return PruneResult(np.sort(kept), None)
+
+    if method == "ka":
+        n_hide = n - n_keep
+        # global bottom-n_hide from per-block bottom candidates (negated
+        # keys -> top-k machinery); move-back then consults prev_losses by
+        # global id.  The hidden samples' losses ride the candidate keys,
+        # so no process needs foreign loss rows.
+        keys, ids = [], []
+        for (lo, hi), losses in zip(snap.block_ranges(), snap.losses):
+            neg = -losses.astype(np.float64)
+            loc = _local_topk(neg, n_hide)
+            keys.append(neg[loc])
+            ids.append(loc + lo)
+        hidden, hkeys = _merge_candidates(snap, keys, ids, n_hide)
+        if prev_losses is not None and n_hide > 0:
+            # move-back: a hidden sample re-enters unless its loss decayed
+            # below the ka_tau fraction of last epoch's — ka_tau = 1 is
+            # the plain "loss went up" rule, ka_tau < 1 demands a real
+            # improvement before a sample may stay hidden (hysteresis
+            # against hiding samples the model is still learning)
+            hidden_losses = (-hkeys).astype(np.float32)
+            worse = hidden_losses > prev_losses[hidden] * ka_tau
+            hidden = np.setdiff1d(hidden, hidden[worse],
+                                  assume_unique=False)
+        mask = np.ones(n, bool)
+        mask[hidden] = False
+        return PruneResult(np.nonzero(mask)[0], None)
+
+    raise ValueError(f"unknown pruning method {method!r}")
 
 
 def prune_epoch(method: str, rng: np.random.Generator, *,
@@ -52,191 +236,11 @@ def prune_epoch(method: str, rng: np.random.Generator, *,
                 seen: Optional[np.ndarray] = None,
                 ratio: float = 0.2, ucb_c: float = 1.0,
                 ka_tau: float = 1.0) -> PruneResult:
-    """Pick kept indices for the next epoch from per-sample statistics.
-
-    weights: ES w_i snapshot; losses: latest per-sample losses (s_i works as
-    a robust proxy); prev_losses/seen feed KA / UCB variants.  ka_tau is the
-    KA move-back decay tolerance: a hidden sample stays hidden only if its
-    loss decayed below ka_tau x last epoch's (1.0 = plain comparison).
-    """
-    n = weights.shape[0]
-    n_keep = max(1, int(round((1.0 - ratio) * n)))
-
-    if method in ("none", "baseline", "es", "loss", "order", "uniform"):
-        return PruneResult(np.arange(n), None)
-
-    if method == "eswp":
-        kept = _gumbel_topk_np(rng, weights, n_keep)
-        return PruneResult(np.sort(kept), None)
-
-    if method == "random":
-        kept = rng.choice(n, size=n_keep, replace=False)
-        return PruneResult(np.sort(kept), None)
-
-    if method == "infobatch":
-        # f64 accumulation: the same threshold the sharded path derives
-        # from per-shard f64 sums (an f32 mean would diverge at ~1e-7 rel
-        # and flip below-mean flags near the threshold)
-        mean = float(np.mean(losses, dtype=np.float64))
-        below = losses < mean
-        drop = below & (rng.random(n) < ratio)
-        kept = np.nonzero(~drop)[0]
-        scale = np.ones(n, np.float32)
-        # kept below-mean samples get 1/(1-r) to keep the gradient unbiased
-        scale[below & ~drop] = 1.0 / (1.0 - ratio)
-        return PruneResult(kept, scale)
-
-    if method == "ucb":
-        t = max(1, int(seen.max()) if seen is not None else 1)
-        cnt = np.maximum(seen if seen is not None else np.ones(n), 1)
-        score = losses + ucb_c * np.sqrt(np.log(t + 1.0) / cnt)
-        kept = np.argpartition(-score, n_keep - 1)[:n_keep]
-        return PruneResult(np.sort(kept), None)
-
-    if method == "ka":
-        kept = _ka_keep(losses, prev_losses, n_keep, ka_tau)
-        return PruneResult(kept, None)
-
-    raise ValueError(f"unknown pruning method {method!r}")
-
-
-def _ka_keep(losses: np.ndarray, prev_losses: Optional[np.ndarray],
-             n_keep: int, ka_tau: float) -> np.ndarray:
-    n = losses.shape[0]
-    order = np.argsort(losses)            # ascending: easiest first
-    n_hide = n - n_keep
-    hidden = order[:n_hide]
-    if prev_losses is not None and n_hide > 0:
-        # move-back: a hidden sample re-enters unless its loss decayed
-        # below the ka_tau fraction of last epoch's — ka_tau = 1 is the
-        # plain "loss went up" rule, ka_tau < 1 demands a real
-        # improvement before a sample may stay hidden (hysteresis
-        # against hiding samples the model is still learning)
-        worse = losses[hidden] > prev_losses[hidden] * ka_tau
-        moved_back = hidden[worse]
-        hidden = np.setdiff1d(hidden, moved_back, assume_unique=False)
-    mask = np.ones(n, bool)
-    mask[hidden] = False
-    return np.nonzero(mask)[0]
-
-
-# ---------------------------------------------------------------------------
-# Sharded-store variant: kept-set from device-local row blocks
-# ---------------------------------------------------------------------------
-
-def _shard_offsets(shards: Sequence[np.ndarray]) -> np.ndarray:
-    return np.concatenate([[0], np.cumsum([len(x) for x in shards])])
-
-
-def _merge_topk(per_shard_keys: List[np.ndarray],
-                per_shard_ids: List[np.ndarray], k: int) -> np.ndarray:
-    """Global top-k by key from per-shard candidate (key, global id) lists.
-
-    Exact: the global top-k holds at most k entries per shard, so each
-    shard pre-filtering to its local top-min(k, |shard|) loses nothing.
-    """
-    keys = np.concatenate(per_shard_keys)
-    ids = np.concatenate(per_shard_ids)
-    k = min(k, len(ids))
-    if k <= 0:
-        return ids[:0]
-    return ids[np.argpartition(-keys, k - 1)[:k]]
-
-
-def _local_topk(keys: np.ndarray, k: int) -> np.ndarray:
-    k = min(k, len(keys))
-    return np.argpartition(-keys, k - 1)[:k] if k else np.empty(0, np.int64)
-
-
-def prune_epoch_from_shards(method: str, rng: np.random.Generator, *,
-                            shard_weights: Sequence[np.ndarray],
-                            shard_losses: Sequence[np.ndarray],
-                            prev_losses: Optional[np.ndarray] = None,
-                            shard_seen: Optional[Sequence[np.ndarray]] = None,
-                            ratio: float = 0.2, ucb_c: float = 1.0,
-                            ka_tau: float = 1.0) -> PruneResult:
-    """``prune_epoch`` from device-local score-store row blocks.
-
-    ``shard_*`` are the per-device contiguous row blocks in shard order
-    (shard k owns global ids ``[offs[k], offs[k+1])``).  Global statistics
-    come from per-shard reductions (exact sums/extrema — unbiased kept-set
-    stats for the InfoBatch rescale); threshold methods merge per-shard
-    candidate top-k lists.  Random draws are made by global sample
-    position, so the kept-set matches the replicated path for the same rng
-    (up to float-tie breaking).  ``prev_losses`` stays a host-side full
-    array (the trainer's previous-epoch snapshot, not device state).
-    """
-    offs = _shard_offsets(shard_weights)
-    n = int(offs[-1])
-    n_keep = max(1, int(round((1.0 - ratio) * n)))
-
-    if method in ("none", "baseline", "es", "loss", "order", "uniform"):
-        return PruneResult(np.arange(n), None)
-
-    if method == "eswp":
-        g = rng.gumbel(size=n)             # global-position draw: parity
-        keys, ids = [], []
-        for k, w in enumerate(shard_weights):
-            key = np.log(np.maximum(w.astype(np.float64), 1e-20)) \
-                + g[offs[k]:offs[k + 1]]
-            loc = _local_topk(key, n_keep)
-            keys.append(key[loc])
-            ids.append(loc + offs[k])
-        return PruneResult(np.sort(_merge_topk(keys, ids, n_keep)), None)
-
-    if method == "random":
-        kept = rng.choice(n, size=n_keep, replace=False)
-        return PruneResult(np.sort(kept), None)
-
-    if method == "infobatch":
-        # global mean from per-shard f64 sums — the kept-set statistics
-        # the 1/(1-r) rescale relies on stay unbiased, and the threshold
-        # matches prune_epoch's f64 mean (grouping differences are ~1e-15
-        # rel, far below any realistic loss-to-mean gap)
-        mean = sum(float(x.sum(dtype=np.float64))
-                   for x in shard_losses) / n
-        u = rng.random(n)
-        kept_parts, scale_parts = [], []
-        for k, losses in enumerate(shard_losses):
-            below = losses < mean
-            drop = below & (u[offs[k]:offs[k + 1]] < ratio)
-            kept_parts.append(np.nonzero(~drop)[0] + offs[k])
-            scale = np.ones(len(losses), np.float32)
-            scale[below & ~drop] = 1.0 / (1.0 - ratio)
-            scale_parts.append(scale)
-        return PruneResult(np.concatenate(kept_parts),
-                           np.concatenate(scale_parts))
-
-    if method == "ucb":
-        seen = shard_seen or [np.ones(len(x)) for x in shard_losses]
-        t = max(1, max(int(x.max()) for x in seen))
-        keys, ids = [], []
-        for k, losses in enumerate(shard_losses):
-            cnt = np.maximum(seen[k], 1)
-            score = losses + ucb_c * np.sqrt(np.log(t + 1.0) / cnt)
-            loc = _local_topk(score, n_keep)
-            keys.append(score[loc])
-            ids.append(loc + offs[k])
-        return PruneResult(np.sort(_merge_topk(keys, ids, n_keep)), None)
-
-    if method == "ka":
-        n_hide = n - n_keep
-        # global bottom-n_hide from per-shard bottom candidates (negated
-        # keys -> top-k machinery); move-back then consults prev_losses by
-        # global id, exactly like the replicated rule
-        keys, ids = [], []
-        for k, losses in enumerate(shard_losses):
-            loc = _local_topk(-losses.astype(np.float64), n_hide)
-            keys.append(-losses.astype(np.float64)[loc])
-            ids.append(loc + offs[k])
-        hidden = _merge_topk(keys, ids, n_hide)
-        if prev_losses is not None and n_hide > 0:
-            all_losses = np.concatenate(shard_losses)
-            worse = all_losses[hidden] > prev_losses[hidden] * ka_tau
-            hidden = np.setdiff1d(hidden, hidden[worse],
-                                  assume_unique=False)
-        mask = np.ones(n, bool)
-        mask[hidden] = False
-        return PruneResult(np.nonzero(mask)[0], None)
-
-    raise ValueError(f"unknown pruning method {method!r}")
+    """``prune_epoch_snapshot`` over full host arrays (the one-block
+    snapshot) — the reference the block/shard layouts are pinned to."""
+    snap = PruneSnapshot(
+        weights=[np.asarray(weights)], losses=[np.asarray(losses)],
+        seen=None if seen is None else [np.asarray(seen)],
+        offsets=np.asarray([0], np.int64), n=int(len(weights)))
+    return prune_epoch_snapshot(method, rng, snap, prev_losses=prev_losses,
+                                ratio=ratio, ucb_c=ucb_c, ka_tau=ka_tau)

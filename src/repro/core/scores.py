@@ -11,23 +11,43 @@ here are pure-JAX scatter ops so they live *inside* the jitted train step
 (no host round-trip).  ``explicit_weights`` implements the unrolled Eq. (3.2)
 expansion and is used by property tests to verify the equivalence.
 
-The store may be REPLICATED (default; ``update_scores``/direct indexing) or
-SHARDED over the data-parallel mesh axes (``ScoreSharding`` + the
-``*_sharded`` ops): each device then holds only its contiguous n/D row
-block of the three ``(n,)`` arrays.  The sharded ops route every sample id
-to its owning device inside ``shard_map`` — the (tiny, ``(B,)``) ids/losses
-are broadcast, each shard applies a masked scatter to the rows it owns, and
-gathers come back via a masked-contribution ``psum`` (each global row has
-exactly one owner, so the sum IS the owner's value).  No device ever
-materializes a full ``(n,)`` array.
+The score triple is the system's only O(n_train) state, so its PLACEMENT
+is a backend decision behind one protocol — ``ScoreStore`` — and invisible
+to every consumer (engine legs, selection, trainer, checkpointer):
+
+  ``ReplicatedStore``   every device holds the full (n,) arrays; updates
+                        are direct masked scatters, gathers direct loads.
+  ``ShardedStore``      row blocks over the mesh axes of a ``ScoreSharding``
+                        (device d owns rows [d*n/D, (d+1)*n/D)).  Sample
+                        ids are routed to the owning device inside
+                        ``shard_map``: the (tiny, (B,)) ids/losses are
+                        broadcast, each shard applies a masked scatter to
+                        the rows it owns, and gathers come back via a
+                        masked-contribution ``psum``.  Gumbel selection
+                        merges per-shard candidates (O(k*D) exchanged, not
+                        O(B)); set-level pruning works from host-local
+                        shard snapshots with exact global stat reductions.
+                        No device ever materializes a full (n,) array.
+
+Multi-host: on pod backends the mesh simply spans processes
+(``jax.make_mesh(jax.devices())``) and the in-jit shard_map ops already
+route across hosts.  ``ScoreSharding.n_global``/``offset`` additionally
+support per-PROCESS row ownership (each process's arrays cover only its
+row range — the CPU-cluster topology, where XLA cannot run multiprocess
+computations): device-level ops then run on the local rows and the
+epoch-boundary legs (gather completion, candidate merges, pruning stats,
+checkpoint assembly) reduce across processes host-side via the exact
+KV-store collectives in ``distributed.hostcomm``, bit-identical to the
+single-process path.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -48,15 +68,23 @@ class ESScores:
 
 @dataclasses.dataclass(frozen=True)
 class ScoreSharding:
-    """Row-sharding of the score store over data-parallel mesh axes.
+    """Row-layout of the score store over data-parallel mesh axes.
 
-    ``axes`` are the mesh axes the ``(n,)`` arrays are split over (axis
-    order = shard order, row-major over the axes, matching
+    ``axes`` are the mesh axes the row dimension is split over (axis order
+    = shard order, row-major over the axes, matching
     ``PartitionSpec((axes,))``).  Shards are contiguous row blocks: device
     d owns rows ``[d*n/D, (d+1)*n/D)``.
+
+    ``n_global``/``offset`` describe per-PROCESS ownership: when set, this
+    process's arrays hold only rows ``[offset, offset + local_n)`` of an
+    ``n_global``-row logical store (the CPU-cluster topology; on pod
+    backends the mesh itself spans processes and both stay at their
+    defaults).
     """
     mesh: Mesh
     axes: Tuple[str, ...] = ("data",)
+    n_global: Optional[int] = None   # logical store rows (None: local == global)
+    offset: int = 0                  # first global row owned by this process
 
     @property
     def n_shards(self) -> int:
@@ -87,8 +115,12 @@ class ScoreSharding:
 
 
 def init_scores(n: int, sharding: Optional[ScoreSharding] = None) -> ESScores:
-    scores = ESScores(s=jnp.full((n,), 1.0 / n, jnp.float32),
-                      w=jnp.full((n,), 1.0 / n, jnp.float32),
+    """Replicated (n,) init, or the ``sharding``'s placement (its
+    ``n_global`` — set for per-process ownership — scales the 1/n init)."""
+    n_logical = n if sharding is None or sharding.n_global is None \
+        else sharding.n_global
+    scores = ESScores(s=jnp.full((n,), 1.0 / n_logical, jnp.float32),
+                      w=jnp.full((n,), 1.0 / n_logical, jnp.float32),
                       seen=jnp.zeros((n,), jnp.int32))
     if sharding is not None:
         sharding.shard_size(n)          # validate divisibility
@@ -105,19 +137,27 @@ def weights_from_prev(s_prev: jax.Array, losses: jax.Array,
 
 def update_scores(scores: ESScores, sample_ids: jax.Array,
                   losses: jax.Array, beta1: float, beta2: float) -> ESScores:
-    """Scatter the Eq. (3.1) update for one meta-batch.
+    """Scatter the Eq. (3.1) update for one meta-batch (the replicated
+    reference all backends are pinned to).
 
     sample_ids: (B,) int32 indices into the score store; losses: (B,) f32.
+    Ids outside ``[0, n)`` are DROPPED (the backends' shared masking rule —
+    a negative id marks an entry some other owner will apply).
     Note: ``w`` uses s(t-1) (the *pre*-update s), per the paper.
     """
+    n = scores.s.shape[0]
     losses = losses.astype(jnp.float32)
-    s_prev = scores.s[sample_ids]
+    mask = (sample_ids >= 0) & (sample_ids < n)
+    pos = jnp.where(mask, sample_ids, 0)
+    s_prev = scores.s[pos]
     w_new = weights_from_prev(s_prev, losses, beta1)
     s_new = beta2 * s_prev + (1.0 - beta2) * losses
-    return ESScores(
-        s=scores.s.at[sample_ids].set(s_new),
-        w=scores.w.at[sample_ids].set(w_new),
-        seen=scores.seen.at[sample_ids].add(1),
+    oob = jnp.where(mask, sample_ids, n)      # out-of-range: point past the
+    return ESScores(                          # end and drop
+        s=scores.s.at[oob].set(s_new, mode="drop"),
+        w=scores.w.at[oob].set(w_new, mode="drop"),
+        seen=scores.seen.at[oob].add(mask.astype(scores.seen.dtype),
+                                     mode="drop"),
     )
 
 
@@ -127,75 +167,383 @@ def batch_weights(scores: ESScores, sample_ids: jax.Array,
     return weights_from_prev(scores.s[sample_ids], losses, beta1)
 
 
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
 # ---------------------------------------------------------------------------
-# Sharded store ops (shard_map: ids routed to the owning device)
+# ScoreStore protocol: one backend interface for every consumer
 # ---------------------------------------------------------------------------
 
-def _local_mask(ids: jax.Array, ss: ScoreSharding, shard: int
-                ) -> Tuple[jax.Array, jax.Array]:
-    """(local positions, ownership mask) for replicated ids on this shard."""
-    local = ids - ss.shard_index() * shard
-    mask = (local >= 0) & (local < shard)
-    return local, mask
+class ScoreStore:
+    """Placement backend for the (n,) score triple.
 
+    Consumers (``ESEngine`` legs, ``select_minibatch``, the trainer's
+    pruning hook, ``launch/inputs`` and the checkpointer) speak only this
+    interface; whether the rows live replicated, sharded over a mesh, or
+    split across processes is a backend detail.
 
-def gather_scores_sharded(scores: ESScores, sample_ids: jax.Array,
-                          ss: ScoreSharding
-                          ) -> Tuple[jax.Array, jax.Array]:
-    """(s[ids], w[ids]) from a row-sharded store, replicated ``(B,)`` out.
-
-    Each shard contributes its owned rows (zeros elsewhere); the cross-shard
-    ``psum`` assembles the full gather — the only collective is over the
-    tiny ``(B,)`` batch vectors, never the ``(n,)`` store.
+    Device ops (inside the jitted step):
+      ``update(scores, ids, losses, beta1, beta2, fused=...)``
+      ``gather(scores, ids) -> (s[ids], w[ids])``
+      ``select(key, weights, k) -> (k,) indices``  (Gumbel top-k)
+    Host ops (epoch boundary):
+      ``prune_snapshot(scores)``  host-local row blocks + global offsets
+      ``prune_epoch(...)``        set-level kept-set from the snapshot
+    Placement plumbing:
+      ``init_leaf(n)``, ``leaf_sharding()``, ``checkpoint_spec()``,
+      ``checkpoint_partition()``
     """
-    shard = ss.shard_size(scores.s.shape[0])
 
-    def body(s, w, ids):
-        local, mask = _local_mask(ids, ss, shard)
-        pos = jnp.where(mask, local, 0)
-        s_v = jnp.where(mask, s[pos], 0.0)
-        w_v = jnp.where(mask, w[pos], 0.0)
-        return (jax.lax.psum(s_v, ss.axes), jax.lax.psum(w_v, ss.axes))
+    sharding: Optional[ScoreSharding] = None
 
-    sp = ss.spec()
-    return shard_map(body, mesh=ss.mesh, in_specs=(sp, sp, P()),
-                     out_specs=(P(), P()), check_rep=False)(
-                         scores.s, scores.w, sample_ids)
+    # -- device ops -----------------------------------------------------
+    def init_leaf(self, n: int) -> ESScores:
+        raise NotImplementedError
+
+    def update(self, scores: ESScores, ids: jax.Array, losses: jax.Array,
+               beta1: float, beta2: float, *, fused: bool = False,
+               interpret: Optional[bool] = None) -> ESScores:
+        raise NotImplementedError
+
+    def gather(self, scores: ESScores, ids: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+        raise NotImplementedError
+
+    def select(self, key: jax.Array, weights: jax.Array, k: int) -> jax.Array:
+        raise NotImplementedError
+
+    # -- host ops -------------------------------------------------------
+    def prune_snapshot(self, scores: ESScores):
+        raise NotImplementedError
+
+    def prune_epoch(self, method: str, rng: np.random.Generator,
+                    scores: ESScores, *, prev_losses=None, ratio: float = 0.2,
+                    ucb_c: float = 1.0, ka_tau: float = 1.0):
+        """Set-level kept-set for the next epoch -> (PruneResult, s_full).
+
+        One implementation for every backend: the snapshot carries the
+        host-local blocks (plus the cross-process comm when rows are
+        process-owned) and ``core.pruning`` computes the kept-set from
+        exact global reductions.  ``s_full`` is the assembled (n,) s-EMA
+        snapshot the trainer keeps as ``prev_epoch_losses``.
+        """
+        from .pruning import prune_epoch_snapshot
+        snap = self.prune_snapshot(scores)
+        res = prune_epoch_snapshot(method, rng, snap,
+                                   prev_losses=prev_losses, ratio=ratio,
+                                   ucb_c=ucb_c, ka_tau=ka_tau)
+        return res, snap.full_losses()
+
+    # -- placement plumbing ---------------------------------------------
+    def validate(self, n: int) -> None:
+        pass
+
+    def leaf_sharding(self) -> Optional[NamedSharding]:
+        return None
+
+    def checkpoint_spec(self) -> dict:
+        raise NotImplementedError
+
+    def checkpoint_partition(self) -> Optional[dict]:
+        """Non-None when this process's score leaves cover only a row
+        range of the logical store (per-process ownership): the
+        checkpointer then writes/reads block entries (see
+        ``Checkpointer``)."""
+        return None
 
 
-def update_scores_sharded(scores: ESScores, sample_ids: jax.Array,
-                          losses: jax.Array, beta1: float, beta2: float,
-                          ss: ScoreSharding) -> ESScores:
-    """Eq. (3.1) scatter into a row-sharded store.
+@dataclasses.dataclass(frozen=True)
+class ReplicatedStore(ScoreStore):
+    """Full (n,) arrays on every device — the default, off-mesh backend."""
 
-    ids/losses arrive replicated (an all-gather of two ``(B,)`` vectors at
-    most); each shard applies the update to the rows it owns via a masked
-    ``mode='drop'`` scatter and never touches foreign rows.  Bit-identical
-    per row to ``update_scores`` on a replicated store.
+    sharding: Optional[ScoreSharding] = None     # always None; protocol slot
+
+    def init_leaf(self, n: int) -> ESScores:
+        return init_scores(n)
+
+    def update(self, scores, ids, losses, beta1, beta2, *, fused=False,
+               interpret=None):
+        # interpret=None: kernel only where it compiles (TPU); an explicit
+        # True/False forces the kernel in interpret/compiled mode
+        if fused and (interpret is not None or _on_tpu()):
+            from ..kernels.score_update.score_update import fused_score_update
+            n = scores.s.shape[0]
+            # the shared masking rule: out-of-range ids become -1 and the
+            # masked kernel drops them, matching the scatter path
+            ids = jnp.where((ids >= 0) & (ids < n), ids, -1)
+            s, w, seen = fused_score_update(
+                scores.s, scores.w, scores.seen, ids, losses,
+                beta1=beta1, beta2=beta2, interpret=bool(interpret),
+                masked=True)
+            return ESScores(s=s, w=w, seen=seen)
+        return update_scores(scores, ids, losses, beta1, beta2)
+
+    def gather(self, scores, ids):
+        return scores.s[ids], scores.w[ids]
+
+    def select(self, key, weights, k):
+        from .selection import gumbel_topk_select
+        return gumbel_topk_select(key, weights, k)
+
+    def prune_snapshot(self, scores):
+        from .pruning import PruneSnapshot
+        return PruneSnapshot(
+            weights=[np.asarray(scores.w)], losses=[np.asarray(scores.s)],
+            seen=[np.asarray(scores.seen)],
+            offsets=np.asarray([0], np.int64), n=int(scores.s.shape[0]))
+
+    def checkpoint_spec(self) -> dict:
+        return {"kind": "replicated"}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedStore(ScoreStore):
+    """Row blocks over the ``ScoreSharding``'s mesh axes.
+
+    Absorbs the routed shard_map scatter/gather, the per-shard masked
+    kernel dispatch, the candidate-merge Gumbel selection and the
+    shard-snapshot pruning stats behind the one ``ScoreStore`` interface.
+    With per-process ownership (``sharding.n_global`` set) the
+    epoch-boundary legs complete across processes via
+    ``distributed.hostcomm``; ``gather``/``select`` then finish host-side
+    and are driven eagerly between steps rather than inside one jit.
     """
-    losses = losses.astype(jnp.float32)
-    shard = ss.shard_size(scores.s.shape[0])
-    b1, b2 = beta1, beta2
 
-    def body(s, w, seen, ids, ls):
-        local, mask = _local_mask(ids, ss, shard)
-        pos = jnp.where(mask, local, 0)
-        s_prev = s[pos]
-        w_new = weights_from_prev(s_prev, ls, b1)
-        s_new = b2 * s_prev + (1.0 - b2) * ls
-        # out-of-shard ids are pointed past the block and dropped
-        oob = jnp.where(mask, local, shard)
-        return (s.at[oob].set(s_new, mode="drop"),
-                w.at[oob].set(w_new, mode="drop"),
-                seen.at[oob].add(mask.astype(seen.dtype), mode="drop"))
+    sharding: ScoreSharding = None
 
-    sp = ss.spec()
-    s, w, seen = shard_map(body, mesh=ss.mesh,
-                           in_specs=(sp, sp, sp, P(), P()),
-                           out_specs=(sp, sp, sp), check_rep=False)(
-                               scores.s, scores.w, scores.seen,
-                               sample_ids, losses)
-    return ESScores(s=s, w=w, seen=seen)
+    # -- layout helpers --------------------------------------------------
+    @property
+    def is_process_local(self) -> bool:
+        """Per-process row ownership: this process's arrays cover only its
+        row range (CPU-cluster topology).  False on a pod's global mesh,
+        where the arrays are global and span processes."""
+        return self.sharding.n_global is not None
+
+    @staticmethod
+    def _comm():
+        """The cross-process host collective of this run, or None outside
+        a multi-process run.  Needed by the epoch-boundary legs in BOTH
+        multi-host topologies: with per-process rows AND on a global pod
+        mesh, ``prune_snapshot`` sees only host-local addressable shards,
+        so the pruning stats always reduce across processes."""
+        from ..distributed.hostcomm import get_comm
+        return get_comm()
+
+    def validate(self, n: int) -> None:
+        local = n
+        if self.is_process_local:
+            comm = self._comm()
+            nproc = comm.process_count if comm else 1
+            if n % nproc != 0:
+                raise ValueError(f"store size {n} not divisible by "
+                                 f"{nproc} processes")
+            local = n // nproc
+        self.sharding.shard_size(local)
+
+    def init_leaf(self, n: int) -> ESScores:
+        if not self.is_process_local:
+            return init_scores(n, self.sharding)
+        assert n == self.sharding.n_global, (n, self.sharding.n_global)
+        comm = self._comm()
+        nproc = comm.process_count if comm else 1
+        return init_scores(n // nproc, self.sharding)
+
+    # -- device ops ------------------------------------------------------
+    def update(self, scores, ids, losses, beta1, beta2, *, fused=False,
+               interpret=None):
+        ss = self.sharding
+        shard = ss.shard_size(scores.s.shape[0])
+        base = ss.offset
+        losses = losses.astype(jnp.float32)
+        # interpret=None: kernel only where it compiles (TPU); an explicit
+        # True/False forces the kernel in interpret/compiled mode
+        use_kernel = fused and (interpret is not None or _on_tpu())
+        b1, b2 = beta1, beta2
+
+        if use_kernel:
+            from ..kernels.score_update.score_update import fused_score_update
+
+            def body(s, w, seen, ids_, ls):
+                local = ids_ - (base + ss.shard_index() * shard)
+                mask = (local >= 0) & (local < shard)
+                local = jnp.where(mask, local, -1)   # masked kernel: skip
+                return fused_score_update(s, w, seen, local, ls, beta1=b1,
+                                          beta2=b2,
+                                          interpret=bool(interpret),
+                                          masked=True)
+        else:
+            def body(s, w, seen, ids_, ls):
+                local = ids_ - (base + ss.shard_index() * shard)
+                mask = (local >= 0) & (local < shard)
+                pos = jnp.where(mask, local, 0)
+                s_prev = s[pos]
+                w_new = weights_from_prev(s_prev, ls, b1)
+                s_new = b2 * s_prev + (1.0 - b2) * ls
+                # foreign/out-of-range ids point past the block: dropped
+                oob = jnp.where(mask, local, shard)
+                return (s.at[oob].set(s_new, mode="drop"),
+                        w.at[oob].set(w_new, mode="drop"),
+                        seen.at[oob].add(mask.astype(seen.dtype),
+                                         mode="drop"))
+
+        sp = ss.spec()
+        s, w, seen = shard_map(body, mesh=ss.mesh,
+                               in_specs=(sp, sp, sp, P(), P()),
+                               out_specs=(sp, sp, sp), check_rep=False)(
+                                   scores.s, scores.w, scores.seen,
+                                   ids, losses)
+        return ESScores(s=s, w=w, seen=seen)
+
+    def gather(self, scores, ids):
+        """(s[ids], w[ids]) routed from the owning shards, (B,) replicated.
+
+        Each shard contributes its owned rows (zeros elsewhere); the
+        cross-shard ``psum`` assembles the full gather — the only
+        collective is over the tiny (B,) batch vectors, never the (n,)
+        store.  With per-process rows the mesh psum covers only the local
+        range and the host collective completes the sum across processes
+        (exact: every global row has exactly one owner).
+        """
+        ss = self.sharding
+        shard = ss.shard_size(scores.s.shape[0])
+        base = ss.offset
+
+        def body(s, w, ids_):
+            local = ids_ - (base + ss.shard_index() * shard)
+            mask = (local >= 0) & (local < shard)
+            pos = jnp.where(mask, local, 0)
+            s_v = jnp.where(mask, s[pos], 0.0)
+            w_v = jnp.where(mask, w[pos], 0.0)
+            return (jax.lax.psum(s_v, ss.axes), jax.lax.psum(w_v, ss.axes))
+
+        sp = ss.spec()
+        s_v, w_v = shard_map(body, mesh=ss.mesh, in_specs=(sp, sp, P()),
+                             out_specs=(P(), P()), check_rep=False)(
+                                 scores.s, scores.w, ids)
+        # only per-process rows need host completion; a process-spanning
+        # mesh already psums over every shard inside the jitted op
+        comm = self._comm() if self.is_process_local else None
+        if comm is not None:
+            s_v = jnp.asarray(comm.allreduce_sum(np.asarray(s_v)))
+            w_v = jnp.asarray(comm.allreduce_sum(np.asarray(w_v)))
+        return s_v, w_v
+
+    def select(self, key, weights, k):
+        """Gumbel top-k from device-local weight shards.
+
+        weights: (B,).  Each device computes Gumbel keys for its slice
+        (drawn by GLOBAL position from the shared ``key``), keeps its
+        local top-min(k, B/D) candidates, and only those (key, global
+        index) pairs are all-gathered for the global top-k — an exchange
+        of O(k*D) scalars instead of O(B).  Exactness: the global top-k
+        can contain at most k entries from any one shard, so merging
+        per-shard top-k candidates loses nothing; per-element keys are
+        drawn by global position, so the result is bit-identical to the
+        replicated Gumbel top-k (up to float ties).  With per-process rows
+        the (B,) weights are already complete on every process (the
+        gather's cross-process psum), so the replicated form IS the
+        sharded result.
+        """
+        from .selection import gumbel_topk_select
+        B = weights.shape[0]
+        ss = self.sharding
+        if self.is_process_local or B % ss.n_shards != 0:
+            return gumbel_topk_select(key, weights, k)
+        n_local = B // ss.n_shards
+        m = min(k, n_local)
+
+        def body(w_local):
+            lo = ss.shard_index() * n_local
+            # same (B,) draw on every device, sliced to this shard's
+            # positions: bit-parity with the replicated per-element keys
+            g = jax.random.gumbel(key, (B,), jnp.float32)
+            g_local = jax.lax.dynamic_slice(g, (lo,), (n_local,))
+            logw = jnp.log(jnp.maximum(w_local.astype(jnp.float32), 1e-20))
+            kv, ki = jax.lax.top_k(logw + g_local, m)
+            cand_keys = jax.lax.all_gather(kv, ss.axes, tiled=True)
+            cand_ids = jax.lax.all_gather(ki + lo, ss.axes, tiled=True)
+            _, sel = jax.lax.top_k(cand_keys, k)
+            return cand_ids[sel].astype(jnp.int32)
+
+        return shard_map(body, mesh=ss.mesh, in_specs=ss.spec(),
+                         out_specs=P(), check_rep=False)(weights)
+
+    # -- host ops --------------------------------------------------------
+    def _local_blocks(self, arr) -> Tuple[List[np.ndarray], List[int]]:
+        """Host-local addressable row blocks + their GLOBAL offsets.
+
+        Dedups by row range: on a multi-axis mesh the store is replicated
+        over non-DP axes, so several addressable shards carry the same
+        rows — keep one copy per range.  Only addressable shards are
+        touched: on a process-spanning mesh each host snapshots just its
+        own rows.
+        """
+        by_start = {sh.index[0].start or 0: sh
+                    for sh in arr.addressable_shards}
+        starts = sorted(by_start)
+        blocks = [np.asarray(by_start[s].data) for s in starts]
+        return blocks, [self.sharding.offset + s for s in starts]
+
+    def prune_snapshot(self, scores):
+        from .pruning import PruneSnapshot
+        w_blocks, offs = self._local_blocks(scores.w)
+        s_blocks, _ = self._local_blocks(scores.s)
+        seen_blocks, _ = self._local_blocks(scores.seen)
+        n = self.sharding.n_global if self.is_process_local \
+            else int(scores.s.shape[0])
+        comm = self._comm()
+        covers = sum(len(b) for b in s_blocks) == n
+        if comm is not None and not self.is_process_local and covers:
+            # a process-LOCAL mesh inside a distributed run: every process
+            # holds the whole store, so a cross-process merge would double
+            # every candidate — each process prunes the full view alone
+            # (identical result everywhere, same rng)
+            comm = None
+        if comm is None and not covers:
+            # partial view with no cross-process reduction would compute
+            # silently-wrong global stats — fail loudly instead
+            raise AssertionError(
+                f"prune_snapshot: local blocks cover "
+                f"{sum(len(b) for b in s_blocks)} of {n} rows but no "
+                "host collective is available (jax.distributed not "
+                "initialized?)")
+        return PruneSnapshot(weights=w_blocks, losses=s_blocks,
+                             seen=seen_blocks,
+                             offsets=np.asarray(offs, np.int64), n=int(n),
+                             comm=comm)
+
+    # -- placement plumbing ----------------------------------------------
+    def leaf_sharding(self) -> Optional[NamedSharding]:
+        return self.sharding.named_sharding()
+
+    def checkpoint_spec(self) -> dict:
+        comm = self._comm()
+        return {"kind": "sharded",
+                "axes": list(self.sharding.axes),
+                "mesh": {str(a): int(self.sharding.mesh.shape[a])
+                         for a in self.sharding.mesh.axis_names},
+                "n_global": self.sharding.n_global,
+                "offset": int(self.sharding.offset),
+                "process_count": comm.process_count if comm else 1}
+
+    def checkpoint_partition(self) -> Optional[dict]:
+        if not self.is_process_local:
+            # global-mesh leaves checkpoint as full arrays (save
+            # allgathers the non-addressable rows) — nothing to partition
+            return None
+        return {"prefixes": ("scores/",),
+                "offset": int(self.sharding.offset),
+                "n_global": int(self.sharding.n_global),
+                "comm": self._comm()}
+
+
+def make_store(sharding: Optional[ScoreSharding] = None) -> ScoreStore:
+    """The backend for a row layout: ``ShardedStore`` over a
+    ``ScoreSharding``, else the replicated default."""
+    if sharding is None:
+        return ReplicatedStore()
+    return ShardedStore(sharding)
 
 
 # ---------------------------------------------------------------------------

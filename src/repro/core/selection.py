@@ -11,13 +11,12 @@ All strategies run *inside* the jitted step with static shapes:
 ``loss`` is ES with beta1 = beta2 = 0 (paper Eq. 2.3) and is provided as a
 named method for the baseline table.
 
-When the weights live sharded over the DP mesh (``ScoreSharding``),
-``sharded_gumbel_topk`` runs the same Gumbel top-k from device-local
-shards: each shard keeps only its top-min(k, B/D) candidate (key, index)
-pairs, and the cross-device all-gather moves just those selected indices —
-never the full weight vector.  Per-element Gumbel keys are drawn by GLOBAL
-position, so the selection is distributionally (and, up to ties,
-bit-) identical to the replicated ``gumbel_topk_select``.
+Placement is the score store's concern, not this module's: the Gumbel
+family dispatches through ``ScoreStore.select`` (``core.scores``), so a
+``ShardedStore`` samples from device-local weight shards (per-shard
+candidates, all-gather only the O(k·D) selected pairs — bit-identical to
+the replicated top-k, which is what ``gumbel_topk_select`` here remains:
+the reference implementation and the ``ReplicatedStore`` path).
 """
 from __future__ import annotations
 
@@ -25,11 +24,9 @@ from typing import TYPE_CHECKING, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
-from jax.sharding import PartitionSpec as P
 
 if TYPE_CHECKING:
-    from .scores import ScoreSharding
+    from .scores import ScoreStore
 
 _EPS = 1e-20
 
@@ -48,41 +45,6 @@ def gumbel_topk_select(key: jax.Array, weights: jax.Array, k: int
     return idx.astype(jnp.int32)
 
 
-def sharded_gumbel_topk(key: jax.Array, weights: jax.Array, k: int,
-                        ss: "ScoreSharding") -> jax.Array:
-    """``gumbel_topk_select`` from device-local weight shards.
-
-    weights: (B,) split over ``ss.axes`` (B % n_shards == 0).  Each device
-    computes Gumbel keys for its own slice (drawn by global position from
-    the shared ``key``), keeps its local top-min(k, B/D) candidates, and
-    only those (key, global index) pairs are all-gathered for the global
-    top-k — a candidate exchange of O(k·D) scalars instead of O(B).
-    Exactness: the global top-k set can contain at most k entries from any
-    one shard, so merging per-shard top-k candidates loses nothing.
-    """
-    B = weights.shape[0]
-    if B % ss.n_shards != 0:
-        raise ValueError(f"batch {B} not divisible by {ss.n_shards} shards")
-    n_local = B // ss.n_shards
-    m = min(k, n_local)
-
-    def body(w_local):
-        lo = ss.shard_index() * n_local
-        # same (B,) draw on every device, sliced to this shard's positions:
-        # bit-parity with the replicated path's per-element keys
-        g = jax.random.gumbel(key, (B,), jnp.float32)
-        g_local = jax.lax.dynamic_slice(g, (lo,), (n_local,))
-        logw = jnp.log(jnp.maximum(w_local.astype(jnp.float32), _EPS))
-        kv, ki = jax.lax.top_k(logw + g_local, m)
-        cand_keys = jax.lax.all_gather(kv, ss.axes, tiled=True)
-        cand_ids = jax.lax.all_gather(ki + lo, ss.axes, tiled=True)
-        _, sel = jax.lax.top_k(cand_keys, k)
-        return cand_ids[sel].astype(jnp.int32)
-
-    return shard_map(body, mesh=ss.mesh, in_specs=ss.spec(), out_specs=P(),
-                     check_rep=False)(weights)
-
-
 def topk_select(weights: jax.Array, k: int) -> jax.Array:
     """Deterministic top-k (Ordered SGD)."""
     _, idx = jax.lax.top_k(weights.astype(jnp.float32), k)
@@ -97,21 +59,21 @@ def uniform_select(key: jax.Array, n: int, k: int) -> jax.Array:
 
 
 def select_minibatch(method: str, key: jax.Array, weights: jax.Array,
-                     k: int,
-                     score_sharding: Optional["ScoreSharding"] = None
+                     k: int, store: Optional["ScoreStore"] = None
                      ) -> jax.Array:
     """Dispatch. ``weights`` are the per-meta-batch-sample w_i(t).
 
-    With ``score_sharding``, the Gumbel family samples from device-local
-    weight shards (candidate all-gather only); order/uniform need no
-    weights exchange and stay as-is.
+    The Gumbel family goes through the ``store``'s backend (a sharded
+    store samples from device-local weight shards with a candidate
+    all-gather only); order/uniform need no weights exchange and are
+    backend-free.  ``store=None`` is the replicated default.
     """
     n = weights.shape[0]
     if k >= n:
         return jnp.arange(n, dtype=jnp.int32)
     if method in ("es", "eswp", "loss"):
-        if score_sharding is not None and n % score_sharding.n_shards == 0:
-            return sharded_gumbel_topk(key, weights, k, score_sharding)
+        if store is not None:
+            return store.select(key, weights, k)
         return gumbel_topk_select(key, weights, k)
     if method == "order":
         return topk_select(weights, k)

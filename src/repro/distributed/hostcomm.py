@@ -1,0 +1,131 @@
+"""Host-side cross-process collectives over the jax.distributed KV store.
+
+The score store's epoch-boundary legs (set-level pruning stats, candidate
+merges, checkpoint assembly) are HOST-side numpy code by design — they run
+between jitted steps, not inside them.  On a multi-host cluster those legs
+need exact cross-process reductions of tiny payloads (candidate lists,
+f64 partial sums, keep-masks), which must not depend on the accelerator
+backend: XLA's CPU backend cannot run multiprocess computations at all,
+and on pods we don't want to burn a device program on a 100-float
+host-side exchange.  ``HostComm`` therefore rides the coordination
+service that ``jax.distributed.initialize`` already stands up: payloads
+travel through the KV store byte-exact (``np.save`` encoding — dtype and
+shape preserved, f64 stays f64), so reductions built on it are
+bit-reproducible regardless of process count.
+
+Collectives are matched by a per-instance sequence number: every process
+must issue the SAME collectives in the SAME order (the usual SPMD
+contract).  Keys are deleted after a trailing barrier, so long trainings
+do not grow the coordinator's store.
+"""
+from __future__ import annotations
+
+import io
+import itertools
+from typing import List, Optional
+
+import numpy as np
+
+_TIMEOUT_MS = 120_000
+
+
+def _encode(arr: np.ndarray) -> bytes:
+    buf = io.BytesIO()
+    np.save(buf, np.ascontiguousarray(arr), allow_pickle=False)
+    return buf.getvalue()
+
+
+def _decode(raw: bytes) -> np.ndarray:
+    return np.load(io.BytesIO(raw), allow_pickle=False)
+
+
+class HostComm:
+    """Exact host collectives for one distributed run.
+
+    One instance per process; all processes must call each method the same
+    number of times in the same order.  Payload dtypes round-trip exactly
+    (f64 sums stay f64), which is what makes the sharded pruning stats
+    bit-identical to the single-process path.
+    """
+
+    def __init__(self, client, process_index: int, process_count: int,
+                 namespace: str = "repro_hostcomm"):
+        self._client = client
+        self.process_index = int(process_index)
+        self.process_count = int(process_count)
+        self._ns = namespace
+        self._seq = itertools.count()
+
+    # ------------------------------------------------------------------
+    def barrier(self, tag: str = "b") -> None:
+        self._client.wait_at_barrier(
+            f"{self._ns}/{next(self._seq)}/{tag}", _TIMEOUT_MS)
+
+    def allgather(self, arr: np.ndarray) -> List[np.ndarray]:
+        """Every process's array, in process order.
+
+        Shapes may differ across processes (shape/dtype ride the payload);
+        the only requirement is that all processes participate.
+        """
+        arr = np.asarray(arr)
+        tag = f"{self._ns}/{next(self._seq)}"
+        self._client.key_value_set_bytes(
+            f"{tag}/{self.process_index}", _encode(arr))
+        self._client.wait_at_barrier(f"{tag}/ready", _TIMEOUT_MS)
+        out = []
+        for p in range(self.process_count):
+            if p == self.process_index:
+                out.append(arr)
+            else:
+                out.append(_decode(self._client.blocking_key_value_get_bytes(
+                    f"{tag}/{p}", _TIMEOUT_MS)))
+        self._client.wait_at_barrier(f"{tag}/done", _TIMEOUT_MS)
+        self._client.key_value_delete(f"{tag}/{self.process_index}")
+        return out
+
+    def allreduce_sum(self, x: np.ndarray) -> np.ndarray:
+        """Elementwise sum over processes, in the INPUT's dtype (pass f64
+        partials for the exact pruning-stat reductions)."""
+        x = np.asarray(x)
+        parts = self.allgather(x.reshape(-1))
+        out = parts[0].copy()
+        for p in parts[1:]:
+            out += p
+        return out.reshape(x.shape)
+
+    def allreduce_max(self, x) -> np.ndarray:
+        x = np.asarray(x)
+        parts = self.allgather(x.reshape(-1))
+        out = parts[0]
+        for p in parts[1:]:
+            out = np.maximum(out, p)
+        return out.reshape(x.shape)
+
+
+_comm: Optional[HostComm] = None
+
+
+def get_comm() -> Optional[HostComm]:
+    """The process's ``HostComm``, or None outside a >1-process
+    ``jax.distributed`` run (the single-process fast path).
+
+    Only a LIVE comm is cached: a call before
+    ``jax.distributed.initialize`` re-probes next time instead of pinning
+    None for the process lifetime (one sequence counter per process — the
+    collectives stay matched because every process constructs its comm
+    from the same initialize()).
+    """
+    global _comm
+    if _comm is not None:
+        return _comm
+    try:
+        from jax._src import distributed
+        state = distributed.global_state
+        client = getattr(state, "client", None)
+        nproc = getattr(state, "num_processes", None)
+        pid = getattr(state, "process_id", None)
+        if client is not None and nproc and nproc > 1 and pid is not None:
+            _comm = HostComm(client, pid, nproc)
+    except Exception:          # no distributed runtime: stay single-process
+        _comm = None
+    return _comm

@@ -3,76 +3,29 @@
 On TPU the fused Pallas kernel replaces the three XLA scatters with one
 in-place VMEM pass.  Off-TPU there is no compiled Pallas path and the
 interpret-mode emulation of the serial update loop is an order of magnitude
-SLOWER than the scatters it fuses, so the wrapper falls back to the pure-JAX
-``core.scores.update_scores`` instead; interpret mode must be requested
-explicitly (``interpret=True`` — tests do, to pin kernel semantics).  The
-two paths agree exactly on the train path's unique-id batches (see
-``ref.py`` for the duplicate-id divergence, covered by tests).
+SLOWER than the scatters it fuses, so the store backends fall back to the
+pure-JAX scatter instead; interpret mode must be requested explicitly
+(``interpret=True`` — tests do, to pin kernel semantics).  The two paths
+agree exactly on the train path's unique-id batches (see ``ref.py`` for
+the duplicate-id divergence, covered by tests).
 
-With a ``ScoreSharding`` the store is row-sharded over the DP mesh axes and
-the update dispatches PER SHARD inside ``shard_map``: each device rewrites
-the batch ids into local coordinates (foreign ids become -1) and runs the
-masked kernel — or, off-TPU, the masked XLA scatter of
-``core.scores.update_scores_sharded`` — on only the n/D rows it owns.
+This module is a compatibility shim: the whole dispatch — backend pick,
+per-shard masked-kernel rewrite (foreign ids become -1 inside
+``shard_map``), scatter fallback — now lives in the ``ScoreStore``
+backends (``core.scores.ReplicatedStore`` / ``ShardedStore``), one code
+path for every consumer.  ``update_scores_fused`` keeps the historical
+signature for tests and benchmarks.
 """
 from __future__ import annotations
 
 import jax
-from jax.experimental.shard_map import shard_map
-from jax.sharding import PartitionSpec as P
 
-from ...core.scores import (ESScores, ScoreSharding, update_scores,
-                            update_scores_sharded)
-from .score_update import fused_score_update
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _update_scores_fused_sharded(scores: ESScores, ids: jax.Array,
-                                 losses: jax.Array, beta1: float,
-                                 beta2: float, ss: ScoreSharding,
-                                 interpret: bool) -> ESScores:
-    """Per-shard masked-kernel dispatch: one Pallas call per device, over
-    its own (n/D,) row block only."""
-    import jax.numpy as jnp
-    shard = ss.shard_size(scores.s.shape[0])
-
-    def body(s, w, seen, ids, ls):
-        local = ids - ss.shard_index() * shard
-        mask = (local >= 0) & (local < shard)
-        local = jnp.where(mask, local, -1)      # masked kernel: -1 = skip
-        return fused_score_update(s, w, seen, local, ls, beta1=beta1,
-                                  beta2=beta2, interpret=interpret,
-                                  masked=True)
-
-    sp = ss.spec()
-    s, w, seen = shard_map(body, mesh=ss.mesh,
-                           in_specs=(sp, sp, sp, P(), P()),
-                           out_specs=(sp, sp, sp), check_rep=False)(
-                               scores.s, scores.w, scores.seen, ids,
-                               losses.astype(jnp.float32))
-    return ESScores(s=s, w=w, seen=seen)
+from ...core.scores import ESScores, ScoreSharding, make_store
 
 
 def update_scores_fused(scores: ESScores, ids: jax.Array, losses: jax.Array,
                         beta1: float, beta2: float,
                         interpret: bool | None = None,
                         sharding: ScoreSharding | None = None) -> ESScores:
-    if sharding is not None:
-        if interpret is None:
-            if not _on_tpu():
-                return update_scores_sharded(scores, ids, losses,
-                                             beta1, beta2, sharding)
-            interpret = False
-        return _update_scores_fused_sharded(scores, ids, losses, beta1,
-                                            beta2, sharding, interpret)
-    if interpret is None:
-        if not _on_tpu():
-            return update_scores(scores, ids, losses, beta1, beta2)
-        interpret = False
-    s, w, seen = fused_score_update(scores.s, scores.w, scores.seen, ids,
-                                    losses, beta1=beta1, beta2=beta2,
-                                    interpret=interpret)
-    return ESScores(s=s, w=w, seen=seen)
+    return make_store(sharding).update(scores, ids, losses, beta1, beta2,
+                                       fused=True, interpret=interpret)

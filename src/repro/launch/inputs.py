@@ -97,9 +97,13 @@ def abstract_train_state(cfg: ModelConfig, es_cfg: ESConfig,
                          shard_scores: bool = False) -> Tuple[PyTree, PyTree]:
     """Returns (state_struct, state_shardings) matching TrainState.
 
-    ``shard_scores`` rows the three ESScores (n,) arrays over the mesh's
-    DP axes via the ``scores`` logical axis (replicated by default).
+    ``shard_scores`` places the three ESScores (n,) arrays through the
+    ``ScoreStore`` backend built for the mesh (rows over the DP axes —
+    the same ``ShardedStore`` the trainer runs; replicated by default or
+    when the mesh has no DP extent).
     """
+    from ..core.scores import make_store
+    from ..distributed.sharding import score_store_sharding
     params_struct, axes = abstract_params_and_axes(cfg)
     state_struct = jax.eval_shape(
         lambda key: init_train_state(cfg, es_cfg, opt_cfg, key, meta_batch),
@@ -108,8 +112,9 @@ def abstract_train_state(cfg: ModelConfig, es_cfg: ESConfig,
     param_sh = axes_to_sharding(axes, ctx)
     repl = replicated(ctx)
     score_sh = repl
-    if shard_scores and ctx.axis("scores"):
-        score_sh = NamedSharding(ctx.mesh, P(ctx.axis("scores")))
+    if shard_scores:
+        store = make_store(score_store_sharding(ctx.mesh))
+        score_sh = store.leaf_sharding() or repl
     opt_sh = OptState(
         step=repl, m=param_sh,
         v=param_sh if opt_cfg.kind == "adamw" else None)

@@ -38,8 +38,7 @@ from ..configs.registry import get_config, get_smoke_config, list_archs
 from ..core.annealing import AnnealSchedule
 from ..core.engine import CadenceConfig, ESConfig, ESEngine, init_train_state
 from ..core.frequency import make_schedule
-from ..core.pruning import prune_epoch, prune_epoch_from_shards
-from ..core.scores import ScoreSharding
+from ..core.scores import ScoreStore, make_store
 from ..checkpoint.checkpointer import Checkpointer
 from ..data.pipeline import DataPipeline, SyntheticSource, get_source
 from ..data.synthetic import SyntheticConfig, SyntheticLM
@@ -78,6 +77,9 @@ class TrainerConfig:
     prune_max_interval: int = 4   # drift prune cadence: epochs backstop
     fused_scores: bool = True     # Pallas score_update kernel in the step
     shard_scores: bool = False    # row-shard ESScores over the DP devices
+    host_id: Optional[int] = None    # data-slicing host id; default:
+    #                                  jax.process_index() (test override)
+    num_hosts: Optional[int] = None  # default: jax.process_count()
     grad_compression: bool = False   # int8 EF gradient compression
     source: str = "synthetic"     # synthetic | tokens | sharded | sft
     data_path: Optional[str] = None  # bin / glob / jsonl for real sources
@@ -120,8 +122,18 @@ class Trainer:
         self.ds = getattr(source, "ds", source)
         self.ctx = ShardCtx()
         self._placer = host_batch_placer(self.ctx)
+        # real host identity: each host loads only its rows of every
+        # global batch (hardcoding 0/1 here would train every row on every
+        # host of a multi-process run); tc overrides exist for tests
+        self.host_id = tc.host_id if tc.host_id is not None \
+            else jax.process_index()
+        self.num_hosts = tc.num_hosts if tc.num_hosts is not None \
+            else jax.process_count()
         self.pipeline = DataPipeline(self.source, tc.meta_batch,
-                                     seed=tc.seed, drop_last=tc.drop_last,
+                                     seed=tc.seed,
+                                     host_id=self.host_id,
+                                     num_hosts=self.num_hosts,
+                                     drop_last=tc.drop_last,
                                      prefetch=tc.prefetch,
                                      depth=tc.prefetch_depth,
                                      place=self._placer)
@@ -162,6 +174,9 @@ class Trainer:
                                   gain_floor=tc.gain_floor)
         self.score_sharding = self._make_score_sharding() \
             if tc.shard_scores else None
+        # the one placement decision: every consumer (engine legs, state
+        # init, pruning, checkpoint) goes through this backend
+        self.score_store: ScoreStore = make_store(self.score_sharding)
         cadence = CadenceConfig(
             kind="drift" if tc.freq_schedule == "drift" else "static",
             target=tc.drift_target,
@@ -172,8 +187,7 @@ class Trainer:
         # serial / decimated / pipelined + prime/flush) is engine-built
         self.engine = ESEngine(self.model_cfg, self.es_cfg, self.opt_cfg,
                                self.schedule, self.ctx, freq=self.freq,
-                               cadence=cadence,
-                               score_sharding=self.score_sharding)
+                               cadence=cadence, store=self.score_store)
         self.ckpt = Checkpointer(tc.ckpt_dir) if tc.ckpt_dir else None
         self.preempt = PreemptionHandler().install()
         self.straggler = StragglerMonitor()
@@ -192,7 +206,7 @@ class Trainer:
         key = jax.random.PRNGKey(tc.seed)
         self.state = init_train_state(self.model_cfg, self.es_cfg,
                                       self.opt_cfg, key, tc.meta_batch,
-                                      score_sharding=self.score_sharding)
+                                      store=self.score_store)
         self.global_step = 0
         self.start_epoch = 0
         self._resume_step = 0          # consumed meta-batches mid-epoch
@@ -231,8 +245,10 @@ class Trainer:
         return [(True, active), (False, e - active)]
 
     # ------------------------------------------------------------------
-    def _make_score_sharding(self) -> Optional[ScoreSharding]:
-        """Row-shard the ES score store over every local device.
+    def _make_score_sharding(self):
+        """Row-shard the ES score store over every device of the run
+        (``jax.make_mesh`` draws from ``jax.devices()``, so on a pod the
+        mesh — and the store — spans hosts).
 
         Flag-gated (``--shard-scores``); replicated remains the default.
         Falls back to replicated (with a warning) when there is nothing to
@@ -253,36 +269,11 @@ class Trainer:
         from ..distributed.sharding import score_store_sharding
         return score_store_sharding(jax.make_mesh((n_dev,), ("data",)))
 
-    def _score_snapshot(self) -> Dict[str, Any]:
-        """Host snapshot of the score store for set-level pruning.
-
-        Replicated store: full arrays.  Sharded store: the per-device row
-        blocks (in shard order) — pruning then runs on device-local shards
-        (``prune_epoch_from_shards``) and no full (n,) copy is built from
-        device memory.
-        """
-        scores = self.state.scores
-        if self.score_sharding is None:
-            return {"w": np.asarray(scores.w), "s": np.asarray(scores.s),
-                    "seen": np.asarray(scores.seen)}
-
-        def blocks(arr):
-            # dedup by row range: on a multi-axis mesh the store is
-            # replicated over non-DP axes, so several addressable shards
-            # carry the same rows — keep one copy per range
-            by_start = {sh.index[0].start or 0: sh
-                        for sh in arr.addressable_shards}
-            shards = [by_start[s] for s in sorted(by_start)]
-            assert len(shards) == self.score_sharding.n_shards, \
-                (len(shards), self.score_sharding.n_shards)
-            return [np.asarray(sh.data) for sh in shards]
-
-        return {"w": blocks(scores.w), "s": blocks(scores.s),
-                "seen": blocks(scores.seen)}
-
     def _resume(self) -> None:
         step = self.ckpt.latest_step()
-        self.state = self.ckpt.restore(self.state, step)
+        self.state = self.ckpt.restore(
+            self.state, step,
+            partition=self.score_store.checkpoint_partition())
         md = self.ckpt.manifest(step)["metadata"]
         self.global_step = md.get("global_step", step)
         self.start_epoch = md.get("epoch", 0)
@@ -320,6 +311,9 @@ class Trainer:
               "scoring_steps_total": self.scoring_steps_total,
               "epochs_since_prune": self.epochs_since_prune,
               "method": self.tc.method,
+              # backend provenance (restore is template-driven; this is
+              # for runbooks and cross-topology sanity checks)
+              "score_store": self.score_store.checkpoint_spec(),
               # sampler cursor: mid-epoch bit-exact resume (the kept-set /
               # grad-scale arrays ride the extras channel of arrays.npz)
               "data": cursor,
@@ -333,10 +327,13 @@ class Trainer:
         extras = self.pipeline.state_arrays()
         if self.prev_epoch_losses is not None:
             extras["prev_epoch_losses"] = self.prev_epoch_losses
+        partition = self.score_store.checkpoint_partition()
         if final:
-            self.ckpt.save(self.state, self.global_step, md, extras)
+            self.ckpt.save(self.state, self.global_step, md, extras,
+                           partition=partition)
         else:
-            self.ckpt.save_async(self.state, self.global_step, md, extras)
+            self.ckpt.save_async(self.state, self.global_step, md, extras,
+                                 partition=partition)
 
     # ------------------------------------------------------------------
     def _prune_for_epoch(self, epoch: int) -> None:
@@ -365,22 +362,13 @@ class Trainer:
             if cad is not None else 0.0})
         if not fired:
             return                         # keep the previous kept-set
-        snap = self._score_snapshot()
+        # one path for every backend: the store snapshots its host-local
+        # row blocks and the kept-set comes from exact global reductions
         rng = np.random.default_rng((self.tc.seed, epoch, 17))
-        if self.score_sharding is not None:
-            res = prune_epoch_from_shards(
-                self.tc.method, rng, shard_weights=snap["w"],
-                shard_losses=snap["s"],
-                prev_losses=self.prev_epoch_losses,
-                shard_seen=snap["seen"], ratio=self.tc.pruning_ratio)
-            s_host = np.concatenate(snap["s"])
-        else:
-            res = prune_epoch(self.tc.method, rng, weights=snap["w"],
-                              losses=snap["s"],
-                              prev_losses=self.prev_epoch_losses,
-                              seen=snap["seen"],
-                              ratio=self.tc.pruning_ratio)
-            s_host = snap["s"]
+        res, s_host = self.score_store.prune_epoch(
+            self.tc.method, rng, self.state.scores,
+            prev_losses=self.prev_epoch_losses,
+            ratio=self.tc.pruning_ratio)
         self.pipeline.apply_pruning(res.kept, res.grad_scale)
         self.prev_epoch_losses = s_host.copy()
         self.epochs_since_prune = 0
@@ -573,9 +561,16 @@ def main() -> None:
                     action="store_false",
                     help="use XLA scatter instead of the Pallas score kernel")
     ap.add_argument("--shard-scores", action="store_true",
-                    help="row-shard the ES score store over the local "
-                         "devices (each holds n/D score rows; replicated "
-                         "is the default)")
+                    help="row-shard the ES score store over the run's "
+                         "devices (each holds n/D score rows; on a pod "
+                         "the mesh spans hosts; replicated is the default)")
+    ap.add_argument("--host-id", type=int, default=None,
+                    help="data-slicing host id override (default: "
+                         "jax.process_index(); tests use this to emulate "
+                         "one host of a larger run)")
+    ap.add_argument("--num-hosts", type=int, default=None,
+                    help="data-slicing host count override (default: "
+                         "jax.process_count())")
     ap.add_argument("--source", default="synthetic",
                     choices=["synthetic", "tokens", "sharded", "sft"],
                     help="data source: in-memory synthetic LM, memory-"
@@ -608,6 +603,7 @@ def main() -> None:
                        prune_cadence=args.prune_cadence,
                        fused_scores=args.fused_scores,
                        shard_scores=args.shard_scores,
+                       host_id=args.host_id, num_hosts=args.num_hosts,
                        source=args.source, data_path=args.data_path,
                        prefetch=args.prefetch,
                        prefetch_depth=args.prefetch_depth,

@@ -68,6 +68,65 @@ def run_multidevice(code: str, n_devices: int = 8, timeout: int = 900
     return r
 
 
+def run_cluster(code: str, n_procs: int = 2, n_devices_per_proc: int = 4,
+                timeout: int = 900, extra_env=None) -> list:
+    """Run a python snippet on a local ``jax.distributed`` CPU cluster.
+
+    Extends ``run_multidevice`` to real multi-PROCESS topology: ``n_procs``
+    fresh interpreters each with ``n_devices_per_proc`` forced CPU devices,
+    joined through a coordinator on a free localhost port —
+    ``jax.process_count() == n_procs`` and the KV-store host collectives
+    (``distributed.hostcomm``) are live.  The snippet runs after
+    ``jax.distributed.initialize`` on every process and must print ``OK``
+    on each.  Returns the per-process stdouts (process order) so callers
+    can compare cross-topology digests.
+    """
+    import socket
+    import textwrap
+    sock = socket.socket()
+    sock.bind(("127.0.0.1", 0))
+    port = sock.getsockname()[1]
+    sock.close()
+    preamble = textwrap.dedent(f"""
+        import os, sys
+        sys.path.insert(0, "src"); sys.path.insert(0, "tests")
+        import jax
+        jax.distributed.initialize(
+            coordinator_address="127.0.0.1:{port}",
+            num_processes={n_procs},
+            process_id=int(os.environ["REPRO_PROC_ID"]))
+    """)
+    procs = []
+    for p in range(n_procs):
+        env = dict(os.environ)
+        env.pop("REPRO_CPU_DEVICES", None)
+        import re
+        flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                       env.get("XLA_FLAGS", ""))
+        env["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count"
+            f"={n_devices_per_proc}").strip()
+        env["JAX_PLATFORMS"] = "cpu"
+        env["REPRO_PROC_ID"] = str(p)
+        env.update(extra_env or {})
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", preamble + code],
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+            env=env, cwd=os.path.join(os.path.dirname(__file__), "..")))
+    outs = []
+    for p, proc in enumerate(procs):
+        try:
+            out, _ = proc.communicate(timeout=timeout)
+        except subprocess.TimeoutExpired:
+            for q in procs:
+                q.kill()
+            raise
+        outs.append(out)
+    for p, out in enumerate(outs):
+        assert "OK" in out, f"--- process {p} ---\n" + out
+    return outs
+
+
 def smoke_engine_setup(freq=None, cadence=None, n=128, meta_batch=16,
                        minibatch=4, fused=True, lr=1e-3):
     """Shared smoke-scale ESEngine fixture for the step parity suites

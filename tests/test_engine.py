@@ -203,6 +203,53 @@ def test_drift_cadence_cap1_matches_es_step_trajectory():
         np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
 
 
+def test_drift_ema_normalized_by_steps_since_last_score():
+    """Cadence-invariant servo (ISSUE 5 satellite): the drift EMAs fold
+    the PER-STEP drift — the observed rel divided by steps-since-last-
+    score — so ``CadenceConfig.target`` means the same thing at any
+    scoring period k.  k=1 is pinned to the pre-normalization formula by
+    a hand-computed expectation; a k-step gap folds exactly rel/k; the
+    first firing (sentinel ``last_scored``) divides by 1, not by the
+    sentinel gap."""
+    import dataclasses
+    from repro.core.engine import init_cadence
+    from repro.core.scores import weights_from_prev
+    eng, _, _ = _setup(cadence=CadenceConfig(rho=0.8))
+    b1, b2, rho = eng.es_cfg.beta1, eng.es_cfg.beta2, eng.cadence.rho
+    s_prev = jnp.asarray([1.0, 2.0, 0.5], jnp.float32)
+    w_prev = jnp.asarray([0.9, 2.1, 0.6], jnp.float32)
+    losses = jnp.asarray([1.5, 1.0, 1.0], jnp.float32)
+    w_new = weights_from_prev(s_prev, losses, b1)
+    drift0 = 0.37
+
+    def observe(last_scored, step):
+        cad = dataclasses.replace(
+            init_cadence(),
+            drift_s=jnp.asarray(drift0, jnp.float32),
+            last_scored=jnp.asarray(last_scored, jnp.int32))
+        return eng._observe(cad, s_prev, w_prev, losses, w_new,
+                            jnp.asarray(step, jnp.int32))
+
+    rel = float(np.mean(np.abs((1 - b2) * (np.asarray(losses)
+                                           - np.asarray(s_prev))))
+                / (np.mean(np.abs(np.asarray(s_prev))) + 1e-12))
+    # k=1: exactly the pre-normalization EMA folding
+    np.testing.assert_allclose(float(observe(9, 10).drift_s),
+                               rho * drift0 + (1 - rho) * rel, rtol=1e-6)
+    # k=4: the firing folds the per-step drift rel/4
+    np.testing.assert_allclose(float(observe(6, 10).drift_s),
+                               rho * drift0 + (1 - rho) * rel / 4,
+                               rtol=1e-6)
+    # first firing: the sentinel init counts as one step, not 2^20
+    cad0 = observe(int(init_cadence().last_scored), 0)
+    np.testing.assert_allclose(float(cad0.drift_s),
+                               rho * drift0 + (1 - rho) * rel, rtol=1e-6)
+    # the prune accumulator keeps the RAW rel (total drift since prune),
+    # independent of the scoring period
+    np.testing.assert_allclose(float(observe(6, 10).since_prune), rel,
+                               rtol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # set-level pruning cadence (host-side gate)
 # ---------------------------------------------------------------------------

@@ -413,6 +413,30 @@ def test_mid_epoch_resume_bit_exact_sharded_subprocess():
     run_multidevice(code)
 
 
+def test_trainer_wires_real_host_identity_with_overrides():
+    """ISSUE 5 satellite: the trainer defaults the sampler's host
+    identity to jax.process_index()/process_count() (hardcoded 0/1 would
+    train every row on every host of a multi-process run); the
+    TrainerConfig/--host-id/--num-hosts overrides emulate one host of a
+    larger run for tests."""
+    import jax
+    from repro.launch.train import Trainer
+    tr = Trainer(_tc(method="es", epochs=1))
+    assert tr.host_id == jax.process_index()
+    assert tr.num_hosts == jax.process_count()
+    assert tr.pipeline.sampler.host_id == jax.process_index()
+    assert tr.pipeline.sampler.num_hosts == jax.process_count()
+    # overrides: this process acts as host 1 of 2 — it must see only its
+    # half of every global meta-batch
+    tr1 = Trainer(_tc(method="es", epochs=1, host_id=1, num_hosts=2))
+    assert (tr1.pipeline.sampler.host_id,
+            tr1.pipeline.sampler.num_hosts) == (1, 2)
+    global_ids = tr1.pipeline.sampler.batch_ids(0, 0)
+    host_ids = tr1.pipeline.sampler.host_slice(global_ids)
+    assert len(host_ids) == len(global_ids) // 2
+    np.testing.assert_array_equal(host_ids, global_ids[len(global_ids) // 2:])
+
+
 def test_trainer_no_prefetch_matches_prefetch():
     """The async data path changes WHEN batches are built, never WHICH —
     prefetch on/off trajectories are bit-identical."""

@@ -24,15 +24,30 @@ from conftest import run_multidevice
 jax = pytest.importorskip("jax")
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core.pruning import prune_epoch, prune_epoch_from_shards  # noqa: E402
-from repro.core.scores import (ScoreSharding, gather_scores_sharded,  # noqa: E402
-                               init_scores, update_scores,
-                               update_scores_sharded)
-from repro.core.selection import gumbel_topk_select, sharded_gumbel_topk  # noqa: E402
+from repro.core.pruning import (PruneSnapshot, prune_epoch,  # noqa: E402
+                                prune_epoch_snapshot)
+from repro.core.scores import (ScoreSharding, ShardedStore,  # noqa: E402
+                               init_scores, update_scores)
+from repro.core.selection import gumbel_topk_select  # noqa: E402
 
 
 def _ss(mesh) -> ScoreSharding:
     return ScoreSharding(mesh, ("data",))
+
+
+def _store(mesh) -> ShardedStore:
+    return ShardedStore(_ss(mesh))
+
+
+def _snap(w_blocks, l_blocks, seen_blocks=None) -> PruneSnapshot:
+    """A PruneSnapshot over explicit row blocks (what
+    ``ShardedStore.prune_snapshot`` assembles from addressable shards)."""
+    lens = [len(b) for b in w_blocks]
+    offs = np.concatenate([[0], np.cumsum(lens)])[:-1].astype(np.int64)
+    return PruneSnapshot(
+        weights=list(w_blocks), losses=list(l_blocks),
+        seen=None if seen_blocks is None else list(seen_blocks),
+        offsets=offs, n=int(sum(lens)))
 
 
 # ---------------------------------------------------------------------------
@@ -58,19 +73,20 @@ def test_init_scores_sharded_specs(cpu_mesh8):
 
 def test_update_and_gather_bit_parity(cpu_mesh8):
     ss = _ss(cpu_mesh8)
+    store = _store(cpu_mesh8)
     n, B = 64, 16
     rep, shd = init_scores(n), init_scores(n, ss)
     rng = np.random.default_rng(0)
     for _ in range(6):
         ids = jnp.asarray(rng.choice(n, B, replace=False), jnp.int32)
         losses = jnp.asarray(rng.uniform(0.1, 3.0, B), jnp.float32)
-        s_g, w_g = gather_scores_sharded(shd, ids, ss)
+        s_g, w_g = store.gather(shd, ids)
         np.testing.assert_array_equal(np.asarray(s_g),
                                       np.asarray(rep.s[ids]))
         np.testing.assert_array_equal(np.asarray(w_g),
                                       np.asarray(rep.w[ids]))
         rep = update_scores(rep, ids, losses, 0.2, 0.9)
-        shd = update_scores_sharded(shd, ids, losses, 0.2, 0.9, ss)
+        shd = store.update(shd, ids, losses, 0.2, 0.9)
     for a, b in ((shd.s, rep.s), (shd.w, rep.w), (shd.seen, rep.seen)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -128,14 +144,14 @@ def test_scores_logical_axis_and_store_sharding_builder(cpu_mesh8):
 
 
 def test_sharded_gumbel_topk_matches_replicated(cpu_mesh8):
-    ss = _ss(cpu_mesh8)
+    store = _store(cpu_mesh8)
     rng = np.random.default_rng(2)
     for trial in range(4):
         w = jnp.asarray(rng.uniform(0.01, 5.0, 32), jnp.float32)
         key = jax.random.PRNGKey(trial)
         np.testing.assert_array_equal(
             np.asarray(gumbel_topk_select(key, w, 6)),
-            np.asarray(sharded_gumbel_topk(key, w, 6, ss)))
+            np.asarray(store.select(key, w, 6)))
 
 
 # ---------------------------------------------------------------------------
@@ -257,10 +273,10 @@ def test_prune_from_shards_matches_replicated(method):
     seen = rng(6).integers(1, 9, n)
     a = prune_epoch(method, rng(42), weights=w, losses=losses,
                     prev_losses=prev, seen=seen, ratio=0.25)
-    b = prune_epoch_from_shards(
-        method, rng(42), shard_weights=np.split(w, 8),
-        shard_losses=np.split(losses, 8), prev_losses=prev,
-        shard_seen=np.split(seen, 8), ratio=0.25)
+    b = prune_epoch_snapshot(
+        method, rng(42),
+        _snap(np.split(w, 8), np.split(losses, 8), np.split(seen, 8)),
+        prev_losses=prev, ratio=0.25)
     np.testing.assert_array_equal(np.sort(a.kept), np.sort(b.kept))
     if a.grad_scale is None:
         assert b.grad_scale is None
@@ -274,10 +290,9 @@ def test_infobatch_shard_mean_unbiased():
     n = 128
     losses = np.random.default_rng(7).uniform(0.0, 4.0, n).astype(np.float32)
     for d in (2, 4, 8):
-        res = prune_epoch_from_shards(
+        res = prune_epoch_snapshot(
             "infobatch", np.random.default_rng(0),
-            shard_weights=np.split(losses, d),
-            shard_losses=np.split(losses, d), ratio=0.25)
+            _snap(np.split(losses, d), np.split(losses, d)), ratio=0.25)
         kept_scale = res.grad_scale[res.kept]
         # E[scale * kept] reconstructs the full-set mean gradient weight
         assert abs(float(kept_scale.sum()) - n) / n < 0.1
