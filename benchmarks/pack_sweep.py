@@ -1,0 +1,197 @@
+"""Packing sweep: equal-document step time, packed vs unpacked rows.
+
+Times the segment-granular ``packed`` engine step over the SAME document
+corpus packed at different densities and emits ``BENCH_pack_sweep.json``.
+The unpacked anchor is ``max_segments=1`` (one document per row, tail
+padded) through the *identical* step flavour, so the comparison isolates
+packing itself — not a code-path difference.
+
+Two numbers per row:
+
+  mean_step_ms : raw jitted step wall time at fixed (B, S) — packed rows
+                 pay the segment mask here, typically a few percent
+  corpus_ms    : time to push the whole document corpus through training,
+                 ``mean_step_ms x n_rows / meta_batch`` — the equal-token
+                 budget per step is constant, so fewer rows means packed
+                 ``corpus_ms`` lands strictly below the unpacked anchor
+                 by ~ the pack factor
+
+    PYTHONPATH=src:. python benchmarks/pack_sweep.py [--smoke] \
+        [--ms 1,2,4] [--steps 48] [--out BENCH_pack_sweep.json]
+
+``--smoke`` shrinks the model and sweep for the CI benchmark-smoke job.
+CI gates the artifact against the previous run's via
+``benchmarks/bench_trend.py`` twice: ``--metric corpus_ms --relative-to
+unpacked`` (a lost mask fusion or an accidental extra forward shows up
+here) and ``--metric padding_waste --relative-to none`` (the packer is
+deterministic, so any drift is a packing regression, not noise).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import ESConfig, ESEngine, init_train_state
+from repro.data.pipeline.sources import PackedSource
+from repro.models.layers import ShardCtx
+from repro.optim.adamw import OptConfig
+
+BENCH_MODEL = ModelConfig(
+    name="bench-pack", family="dense",
+    num_layers=4, d_model=128, num_heads=4, num_kv_heads=4, head_dim=32,
+    d_ff=512, vocab_size=512, tie_embeddings=True,
+    norm_kind="rmsnorm", mlp_kind="swiglu",
+    remat_policy="none", fsdp_params=False, attn_chunk_q=0,
+)
+
+SMOKE_MODEL = dataclasses.replace(BENCH_MODEL, name="bench-pack-smoke",
+                                  num_layers=2, d_model=64, d_ff=256,
+                                  num_heads=2, num_kv_heads=2,
+                                  vocab_size=256)
+
+
+def _make_docs(n_docs: int, seq_len: int, vocab: int,
+               seed: int = 0) -> List[np.ndarray]:
+    """One fixed corpus for every packing density.
+
+    Same recipe as ``PackedSource.synthetic`` but with a length ceiling
+    independent of ``max_segments``, so each sweep point repacks the SAME
+    documents and corpus_ms is an equal-document comparison.
+    """
+    docs = []
+    for i in range(n_docs):
+        r = np.random.default_rng((seed, i))
+        L = int(r.integers(4, seq_len // 2 + 1))
+        if i % 10 < 7:
+            motif = r.integers(1, vocab, int(r.integers(2, 5)))
+            d = np.tile(motif, L // len(motif) + 1)[:L]
+        else:
+            d = r.integers(1, vocab, L)
+        docs.append(d.astype(np.int32))
+    return docs
+
+
+def _make_batches(src: PackedSource, n_batches: int, meta_batch: int
+                  ) -> List[Dict[str, jax.Array]]:
+    n_rows = len(src)
+    return [{k: jnp.asarray(v) for k, v in
+             src.batch(np.arange(i * meta_batch,
+                                 (i + 1) * meta_batch) % n_rows).items()}
+            for i in range(n_batches)]
+
+
+def _time_step(step_fn: Callable, state, inputs: List, steps: int,
+               reps: int, warmup: int) -> float:
+    """Mean ms/step, min over ``reps`` timed passes (state threads through)."""
+    nb = len(inputs)
+    for i in range(warmup):
+        state, m = step_fn(state, inputs[i % nb])
+    jax.block_until_ready(m)
+    means = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for i in range(steps):
+            state, m = step_fn(state, inputs[i % nb])
+        jax.block_until_ready(m)
+        means.append((time.perf_counter() - t0) / steps * 1e3)
+    return min(means)
+
+
+def run_sweep(args) -> Dict:
+    model_cfg = SMOKE_MODEL if args.smoke else BENCH_MODEL
+    meta_batch = args.meta_batch
+    ms_list = sorted({int(m) for m in args.ms.split(",")})
+    assert 1 in ms_list, "the unpacked anchor (max_segments=1) is required"
+    docs = _make_docs(args.n_docs, args.seq_len, model_cfg.vocab_size)
+    opt_cfg = OptConfig(kind="adamw", lr=1e-3)
+    schedule = lambda s: jnp.asarray(1.0, jnp.float32)  # noqa: E731
+    ctx = ShardCtx()
+    key = jax.random.PRNGKey(0)
+
+    rows = []
+    for m in ms_list:
+        src = PackedSource(docs, args.seq_len, max_segments=m)
+        es_cfg = ESConfig(method="es", minibatch=args.minibatch,
+                          n_train=src.n_docs, seq_chunk=0)
+        engine = ESEngine(model_cfg, es_cfg, opt_cfg, schedule, ctx)
+        state = init_train_state(model_cfg, es_cfg, opt_cfg, key, meta_batch)
+        batches = _make_batches(src, args.n_batches, meta_batch)
+        ms = _time_step(jax.jit(engine.packed_step, donate_argnums=0),
+                        state, batches, args.steps, args.reps, warmup=3)
+        corpus_ms = ms * len(src) / meta_batch
+        rows.append({
+            "method": "unpacked" if m == 1 else "packed",
+            "k": m,
+            "mean_step_ms": round(ms, 4),
+            "corpus_ms": round(corpus_ms, 4),
+            "n_rows": len(src),
+            "pack_factor": round(src.pack_factor, 4),
+            "padding_waste": round(src.padding_waste, 6),
+        })
+        print(f"{rows[-1]['method']:<10} M={m:<3} {ms:8.3f} ms/step "
+              f"{corpus_ms:9.3f} ms/corpus  pack={src.pack_factor:.2f} "
+              f"waste={src.padding_waste:.3f}", flush=True)
+
+    anchor = next(r["corpus_ms"] for r in rows if r["method"] == "unpacked")
+    packed = [r for r in rows if r["method"] == "packed"]
+    below = bool(packed) and all(r["corpus_ms"] < anchor for r in packed)
+
+    return {
+        "bench": "pack_sweep",
+        "config": {
+            "model": model_cfg.name, "smoke": args.smoke,
+            "meta_batch": meta_batch, "minibatch": args.minibatch,
+            "seq_len": args.seq_len, "n_docs": args.n_docs,
+            "steps": args.steps, "reps": args.reps, "ms": ms_list,
+            "backend": jax.default_backend(),
+        },
+        "rows": rows,
+        # the acceptance flag: packed corpus time strictly below the
+        # unpacked equal-token anchor at every sweep density
+        "packed_below_unpacked": below,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized model and sweep")
+    ap.add_argument("--ms", default="1,2,4",
+                    help="comma-separated max_segments sweep "
+                         "(1 = the unpacked anchor)")
+    ap.add_argument("--steps", type=int, default=48,
+                    help="timed steps per pass")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--meta-batch", type=int, default=32)
+    ap.add_argument("--minibatch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--n-docs", type=int, default=512)
+    ap.add_argument("--n-batches", type=int, default=8)
+    ap.add_argument("--out", default="BENCH_pack_sweep.json")
+    args = ap.parse_args()
+    if args.smoke:
+        args.steps = min(args.steps, 24)
+        args.seq_len = min(args.seq_len, 32)
+        args.meta_batch = min(args.meta_batch, 16)
+        args.n_docs = min(args.n_docs, 256)
+        # corpus_ms deltas ride on small per-step numbers; more
+        # min-of-means passes keep the gate noise-proof
+        args.reps = max(args.reps, 5)
+
+    out = run_sweep(args)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out} "
+          f"(packed_below_unpacked={out['packed_below_unpacked']})")
+
+
+if __name__ == "__main__":
+    main()

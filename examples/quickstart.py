@@ -14,16 +14,17 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 from repro.launch.train import Trainer, TrainerConfig
 
 
-def main():
+def main(smoke: bool = False):
+    # --smoke: CI-sized run (one epoch, tiny corpus) — same code path
     tc = TrainerConfig(
         arch="qwen1.5-0.5b",       # any of the 10 assigned archs
         smoke=True,                # reduced config (CPU-friendly)
         method="es",               # es | eswp | loss | order | baseline | ...
-        epochs=4,
+        epochs=1 if smoke else 4,
         meta_batch=16,             # B: scored every step
         minibatch=4,               # b: backpropagated every step  (b/B = 25%)
         beta1=0.2, beta2=0.9,      # paper defaults (Eq. 3.1)
-        n_samples=256, seq_len=32,
+        n_samples=64 if smoke else 256, seq_len=32,
         lr=3e-3,
     )
     trainer = Trainer(tc)
@@ -42,4 +43,4 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    main(smoke="--smoke" in sys.argv[1:])

@@ -72,7 +72,14 @@ def main():
                     help="synchronous host data path (no background "
                          "build+device_put of batch t+1)")
     ap.add_argument("--ckpt", default="/tmp/repro_es_ckpt")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: few steps, tiny batch/sequence")
     args = ap.parse_args()
+    if args.smoke:
+        args.steps = min(args.steps, 12)
+        args.meta_batch = min(args.meta_batch, 8)
+        args.minibatch = min(args.minibatch, 2)
+        args.seq_len = min(args.seq_len, 32)
 
     cfg = HUNDRED_M if args.hundred_m else SMALL
     print(f"model: {cfg.name} ({cfg.n_params() / 1e6:.1f}M params)")

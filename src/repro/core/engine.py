@@ -54,7 +54,10 @@ off-TPU the backends fall back to the XLA scatter;
 
 Batch dict: tokens (B,S) i32, labels (B,S) i32 (-1 = masked),
 sample_ids (B,) i32, optional grad_scale (B,) f32 (InfoBatch rescale),
-optional frames / image_embeds (modality stubs).
+optional frames / image_embeds (modality stubs).  PackedSource batches
+additionally carry segment_ids/positions (B,S), doc_ids (B,M) and
+doc_grad_scale (B,M); ``EpochSession`` routes them to the ``packed``
+step flavours, where ES identity is the document, not the row.
 """
 from __future__ import annotations
 
@@ -66,12 +69,12 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..models.layers import ShardCtx
-from ..models.transformer import lm_per_sample_loss
+from ..models.transformer import lm_per_sample_loss, lm_per_segment_loss
 from ..optim.adamw import OptConfig, OptState, init_opt_state, apply_updates
 from .frequency import FreqSchedule
 from .scores import (ESScores, ScoreSharding, ScoreStore, make_store,
                      weights_from_prev)
-from .selection import select_minibatch
+from .selection import masked_select_kept, select_minibatch
 
 PyTree = Any
 Batch = Dict[str, jax.Array]
@@ -79,7 +82,8 @@ Batch = Dict[str, jax.Array]
 _EPS = 1e-12
 _NEVER_SCORED = -(1 << 20)   # CadenceState.last_scored init: step 0 fires
 
-STEP_KINDS = ("baseline", "es", "scheduled", "pipelined", "prime", "flush")
+STEP_KINDS = ("baseline", "es", "scheduled", "pipelined", "prime", "flush",
+              "packed", "packed_baseline")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -589,6 +593,93 @@ class ESEngine:
                                    rng=rng, grad_err=new_err), metrics
 
     # ------------------------------------------------------------------
+    def _packed_impl(self, state: TrainState, batch: Batch, select: bool
+                     ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        """Segment-granular ES on a ``PackedSource`` batch.
+
+        One forward serves both scoring and training: dropped segments
+        share their rows with kept ones, so a dedicated scoring forward
+        would recompute the identical hidden states.  Inside ``loss_fn``
+        the stop-gradiented per-segment NLLs feed Eq. (3.1) against the
+        gathered prior scores, the (masked) Gumbel top-k keeps b of the
+        valid document slots, and the training loss is the kept-slot mean
+        — a dropped document's loss term is multiplied by exactly zero, so
+        it contributes nothing to the gradient.  The score store is keyed
+        by global DOCUMENT ids (``batch["doc_ids"]``); empty/pruned slots
+        carry id -1, which the backends' shared masking rule drops.
+        """
+        doc_ids = batch["doc_ids"]                       # (B, M)
+        B, M = doc_ids.shape
+        n = B * M
+        flat_ids = doc_ids.reshape(n)
+        valid = flat_ids >= 0
+        validf = valid.astype(jnp.float32)
+        safe = jnp.where(valid, flat_ids, 0)             # clamp for gather
+        s_prev, w_prev = self._prev_sw(state.scores, safe)
+        b = min(self.es_cfg.minibatch, n)
+        select = select and b < n
+        rng, sel_key = jax.random.split(state.rng)
+        gs = batch.get("doc_grad_scale")
+        scale = gs.reshape(n) if gs is not None else jnp.ones((n,), jnp.float32)
+
+        def loss_fn(params):
+            per_seg, _ = lm_per_segment_loss(
+                self.model_cfg, params, batch, self.ctx,
+                seq_chunk=self.es_cfg.seq_chunk)
+            losses = jax.lax.stop_gradient(per_seg.reshape(n))
+            w = jnp.where(valid,
+                          weights_from_prev(s_prev, losses,
+                                            self.es_cfg.beta1), 0.0)
+            if select:
+                kept = masked_select_kept(self.es_cfg.method, sel_key, w,
+                                          valid, b)
+            else:
+                kept = valid
+            kf = kept.astype(jnp.float32)
+            mean = (jnp.sum(per_seg.reshape(n) * kf * scale)
+                    / jnp.maximum(jnp.sum(kf), 1.0))
+            return mean, (losses, w, kept)
+
+        (mean, (losses, w, kept)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params)
+
+        n_valid = jnp.maximum(jnp.sum(validf), 1.0)
+        metrics = {
+            "loss": jnp.sum(losses * validf) / n_valid,
+            "sel_loss": mean,
+            "bp_samples": jnp.sum(kept.astype(jnp.float32)),
+            "seg_valid": jnp.sum(validf),
+            "w_mean": jnp.sum(w) / n_valid,
+            "w_max": jnp.max(w),
+            # scoring rides the training forward: no dedicated forward ran
+            "scored": jnp.zeros((), jnp.float32),
+        }
+        new_params, new_opt, new_err = self._optim(state, grads, metrics)
+        # invalid slots observe zero drift and update nothing (-1 drops)
+        losses_obs = jnp.where(valid, losses, s_prev)
+        w_obs = jnp.where(valid, w, w_prev)
+        cad = self._observe(state.cadence, s_prev, w_prev, losses_obs,
+                            w_obs, state.opt.step)
+        scores = self._update_scores(state.scores,
+                                     jnp.where(valid, flat_ids, -1), losses)
+        return dataclasses.replace(state, params=new_params, opt=new_opt,
+                                   scores=scores, rng=rng, grad_err=new_err,
+                                   cadence=cad), metrics
+
+    def packed_step(self, state: TrainState, batch: Batch
+                    ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        """Packed batch with segment-level selection (fused scoring)."""
+        return self._packed_impl(state, batch, select=True)
+
+    def packed_baseline_step(self, state: TrainState, batch: Batch
+                             ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        """Packed batch, selection off: every valid document trains; the
+        store still updates from the free per-segment losses (set-level
+        ESWP pruning over documents rides on top via the source's
+        kept-docs mask)."""
+        return self._packed_impl(state, batch, select=False)
+
+    # ------------------------------------------------------------------
     # host-side API
     # ------------------------------------------------------------------
     def build_step(self, kind: str) -> Callable:
@@ -714,6 +805,12 @@ class EpochSession:
     def step(self, state: TrainState, batch: Batch
              ) -> Tuple[TrainState, Optional[Dict[str, jax.Array]]]:
         eng = self.engine
+        if "doc_ids" in batch:
+            # packed batches: scoring is fused into the training forward,
+            # so there is no separate scoring leg to decimate or overlap —
+            # pipelined sessions run the packed step serially
+            kind = "packed" if self.selection_on else "packed_baseline"
+            return eng.jitted(kind)(state, batch)
         if not self.selection_on:
             return eng.jitted("baseline")(state, batch)
         if not self.pipelined:

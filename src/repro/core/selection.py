@@ -82,6 +82,39 @@ def select_minibatch(method: str, key: jax.Array, weights: jax.Array,
     raise ValueError(f"unknown selection method {method!r}")
 
 
+def masked_select_kept(method: str, key: jax.Array, weights: jax.Array,
+                       valid: jax.Array, k: int) -> jax.Array:
+    """Select ≤ k of the *valid* slots; returns a (n,) bool kept mask.
+
+    The packed-batch variant of ``select_minibatch``: flattened document
+    slots carry a validity mask (empty / pruned slots), and the selection
+    result is a mask rather than a gather index — a packed row cannot be
+    re-gathered, the mask instead zeroes dropped documents' loss terms.
+    Invalid slots sort at -inf, so they are picked only when fewer than k
+    valid slots exist, and the final ``& valid`` drops them.  With every
+    slot valid the Gumbel keys are identical to ``gumbel_topk_select``
+    (same draw shape, same key), which is what makes the packed path's
+    k=1 parity with the serial ES step exact.
+    """
+    n = weights.shape[0]
+    if method in ("es", "eswp", "loss"):
+        logw = jnp.log(jnp.maximum(weights.astype(jnp.float32), _EPS))
+        g = jax.random.gumbel(key, weights.shape, jnp.float32)
+        keys = logw + g
+    elif method == "order":
+        keys = weights.astype(jnp.float32)
+    elif method in ("uniform", "baseline"):
+        keys = jax.random.gumbel(key, (n,), jnp.float32)
+    else:
+        raise ValueError(f"unknown selection method {method!r}")
+    keys = jnp.where(valid, keys, -jnp.inf)
+    if k >= n:
+        return valid
+    _, idx = jax.lax.top_k(keys, k)
+    kept = jnp.zeros((n,), bool).at[idx].set(True)
+    return kept & valid
+
+
 def selection_probs(weights: jax.Array) -> jax.Array:
     """Normalized p_i ∝ w_i (for diagnostics / tests)."""
     w = jnp.maximum(weights.astype(jnp.float32), _EPS)

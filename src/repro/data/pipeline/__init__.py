@@ -24,13 +24,13 @@ layers, composed by :class:`DataPipeline`:
 from .pipeline import DataPipeline
 from .prefetch import Prefetcher, SyncStream, make_placer
 from .sampler import ESSampler, kept_digest
-from .sources import (PackedSFTSource, ShardedFileSource, Source,
-                      SyntheticSource, TokenBinSource, get_source,
+from .sources import (PackedSFTSource, PackedSource, ShardedFileSource,
+                      Source, SyntheticSource, TokenBinSource, get_source,
                       write_token_bin)
 
 __all__ = [
     "DataPipeline", "SyncStream", "Prefetcher", "make_placer",
     "ESSampler", "kept_digest",
     "Source", "SyntheticSource", "TokenBinSource", "ShardedFileSource",
-    "PackedSFTSource", "get_source", "write_token_bin",
+    "PackedSFTSource", "PackedSource", "get_source", "write_token_bin",
 ]

@@ -65,8 +65,38 @@ class DataPipeline:
         return batch
 
     # ---- sampler surface (ESWP hook + bookkeeping) -----------------------
+    @property
+    def doc_level(self) -> bool:
+        """True when ES identity is the packed *document*, not the row
+        (the source packs several docs per row and owns the kept-set)."""
+        return hasattr(self.source, "set_kept_docs")
+
     def apply_pruning(self, kept, grad_scale=None) -> None:
-        self.sampler.apply_pruning(kept, grad_scale)
+        """ESWP/InfoBatch epoch hook.
+
+        Row-granular sources prune through the sampler (dropped rows leave
+        the epoch walk).  A doc-granular ``PackedSource`` prunes through
+        the source instead: every row still streams (its layout is fixed),
+        but dropped documents' labels/slot-ids are masked at batch time,
+        so they cost no BP and never re-enter selection.
+        """
+        if self.doc_level:
+            n = self.source.n_docs
+            if kept is None:
+                self.source.set_kept_docs(np.ones(n, bool), None)
+            else:
+                mask = np.zeros(n, bool)     # kept arrives as doc indices
+                mask[np.asarray(kept)] = True
+                self.source.set_kept_docs(mask, grad_scale)
+        else:
+            self.sampler.apply_pruning(kept, grad_scale)
+
+    @property
+    def has_pruning(self) -> bool:
+        """True once an epoch-pruning decision is live (either granularity)."""
+        if self.doc_level:
+            return not self.source.doc_state_arrays()["doc_kept"].all()
+        return self.sampler.kept is not None
 
     @property
     def _kept(self) -> Optional[np.ndarray]:
@@ -91,7 +121,10 @@ class DataPipeline:
         return cur
 
     def state_arrays(self) -> Dict[str, np.ndarray]:
-        return self.sampler.state_arrays()
+        arrays = self.sampler.state_arrays()
+        if self.doc_level:
+            arrays.update(self.source.doc_state_arrays())
+        return arrays
 
     def load_state(self, extras: Dict[str, np.ndarray],
                    cursor: Optional[Dict] = None) -> None:
@@ -102,4 +135,6 @@ class DataPipeline:
                 raise ValueError(
                     f"pipeline resume: source length changed "
                     f"({src['n']} -> {n}); score rows would misalign")
+        if self.doc_level and "doc_kept" in extras:
+            self.source.load_doc_state(extras)
         self.sampler.load_state(extras, cursor)

@@ -6,5 +6,6 @@ oracle).  On non-TPU backends the wrappers run interpret mode
 (correctness); tests sweep shapes/dtypes against the oracles.
 """
 from .xent.ops import per_sample_xent_fused, per_token_xent_fused
+from .segsum.ops import per_segment_xent_fused, segment_sum_fused
 from .flash_attn.ops import gqa_flash_attention
 from .score_update.ops import update_scores_fused

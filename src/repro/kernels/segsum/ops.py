@@ -1,0 +1,60 @@
+"""Jitted wrappers: padding + backend dispatch for the segment-sum kernel.
+
+``per_segment_xent_fused`` chains the fused per-token xent kernel with the
+fused segment reduction — the packed-path analogue of
+``per_sample_xent_fused``, returning per-*document* mean NLLs.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..xent.ops import per_token_xent_fused
+from .segsum import fused_segment_sum
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def segment_sum_fused(nll: jax.Array, segment_ids: jax.Array,
+                      mask: jax.Array, *, max_segments: int,
+                      block_b: int = 8, interpret: bool | None = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """nll (B, S) f32; segment_ids (B, S); mask (B, S) bool/int ->
+    (sums (B, M), counts (B, M)); pads B and S to tile boundaries."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, S = nll.shape
+    pb = (-B) % block_b
+    ps = (-S) % 128
+    if pb or ps:
+        nll = jnp.pad(nll, ((0, pb), (0, ps)))
+        segment_ids = jnp.pad(segment_ids, ((0, pb), (0, ps)))
+        mask = jnp.pad(mask.astype(jnp.int32), ((0, pb), (0, ps)))
+    sums, counts = fused_segment_sum(nll, segment_ids, mask,
+                                     max_segments=max_segments,
+                                     block_b=block_b, interpret=interpret)
+    return sums[:B, :max_segments], counts[:B, :max_segments]
+
+
+def per_segment_xent_fused(h: jax.Array, w: jax.Array, labels: jax.Array,
+                           segment_ids: jax.Array, *, max_segments: int,
+                           label_mask_value: int = -1,
+                           block_m: int = 128, block_v: int = 512,
+                           interpret: bool | None = None
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """h (B, S, d); labels/segment_ids (B, S) -> (per_seg (B, M),
+    counts (B, M)): fused per-token NLL reduced per document slot."""
+    B, S, d = h.shape
+    mask = labels != label_mask_value
+    safe = jnp.where(mask, labels, 0)
+    nll = per_token_xent_fused(h.reshape(B * S, d), w, safe.reshape(B * S),
+                               block_m=block_m, block_v=block_v,
+                               interpret=interpret)
+    sums, counts = segment_sum_fused(nll.reshape(B, S), segment_ids, mask,
+                                     max_segments=max_segments,
+                                     interpret=interpret)
+    return sums / jnp.maximum(counts, 1.0), counts

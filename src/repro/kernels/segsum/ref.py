@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the segment-sum kernel (one-hot einsum)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(nll: jax.Array, segment_ids: jax.Array,
+                    mask: jax.Array, *, max_segments: int
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """nll (B, S); segment_ids/mask (B, S) -> (sums, counts), each (B, M)."""
+    slot = jax.nn.one_hot(segment_ids - 1, max_segments, dtype=jnp.float32)
+    slot = slot * (mask != 0).astype(jnp.float32)[:, :, None]
+    sums = jnp.einsum("bs,bsm->bm", nll.astype(jnp.float32), slot)
+    counts = jnp.sum(slot, axis=1)
+    return sums, counts

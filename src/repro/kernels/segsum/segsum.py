@@ -1,0 +1,74 @@
+"""Masked segment-sum Pallas kernel — packed-row per-document reduction.
+
+Reduces per-token NLLs (B, S) to per-segment sums and token counts
+(B, M) for rows packed ``M`` documents deep: token s of row b contributes
+to slot ``segment_ids[b, s] - 1`` iff its label is live (``mask``), so
+padding tails and cross-segment positions contribute exactly zero.  One
+grid step owns a (block_b, S) row tile; the M slot selections are a
+static unrolled loop (M is the pack factor, single digits), each a
+VPU-friendly masked row reduction — no (B, S, M) one-hot ever exists.
+
+The lane dimension is S (callers pad to 128); outputs are (block_b, Mp)
+with Mp lane-padded to 128, sliced by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _segsum_kernel(nll_ref, seg_ref, mask_ref, sum_ref, cnt_ref, *,
+                   max_segments: int, out_m: int):
+    nll = nll_ref[...].astype(jnp.float32)            # (bb, S)
+    seg = seg_ref[...]
+    live = mask_ref[...] != 0
+    sums, cnts = [], []
+    for m in range(max_segments):
+        sel = (seg == m + 1) & live                   # (bb, S)
+        sums.append(jnp.sum(jnp.where(sel, nll, 0.0), axis=-1))
+        cnts.append(jnp.sum(sel.astype(jnp.float32), axis=-1))
+    pad = [jnp.zeros_like(sums[0])] * (out_m - max_segments)
+    sum_ref[...] = jnp.stack(sums + pad, axis=-1)
+    cnt_ref[...] = jnp.stack(cnts + pad, axis=-1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_segments", "block_b", "interpret"))
+def fused_segment_sum(nll: jax.Array, segment_ids: jax.Array,
+                      mask: jax.Array, *, max_segments: int,
+                      block_b: int = 8, interpret: bool = False
+                      ) -> tuple[jax.Array, jax.Array]:
+    """nll (B, S) f32; segment_ids/mask (B, S) int32 -> (sums, counts),
+    each (B, Mp) f32 with Mp = max_segments lane-padded to 128.
+
+    B must divide block_b and S must be a multiple of 128 (callers pad —
+    see ops.py; padded rows carry mask 0, so they reduce to zeros).
+    """
+    B, S = nll.shape
+    assert B % block_b == 0, (B, block_b)
+    assert S % 128 == 0, S
+    out_m = max(128, -(-max_segments // 128) * 128)
+
+    kernel = functools.partial(_segsum_kernel, max_segments=max_segments,
+                               out_m=out_m)
+    return pl.pallas_call(
+        kernel,
+        grid=(B // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, S), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, S), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, S), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, out_m), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, out_m), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, out_m), jnp.float32),
+            jax.ShapeDtypeStruct((B, out_m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(nll, segment_ids.astype(jnp.int32), mask.astype(jnp.int32))

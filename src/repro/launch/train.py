@@ -81,8 +81,10 @@ class TrainerConfig:
     #                                  jax.process_index() (test override)
     num_hosts: Optional[int] = None  # default: jax.process_count()
     grad_compression: bool = False   # int8 EF gradient compression
-    source: str = "synthetic"     # synthetic | tokens | sharded | sft
+    source: str = "synthetic"     # synthetic | tokens | sharded | sft | packed
     data_path: Optional[str] = None  # bin / glob / jsonl for real sources
+    pack: bool = False            # sequence packing: --source packed shortcut
+    max_segments: int = 4         # packed: max documents per row
     prefetch: bool = True         # async double-buffered host data path
     prefetch_depth: int = 2
     drop_last: bool = True        # False: train the partial final batch
@@ -105,6 +107,8 @@ class Trainer:
         self.model_cfg = model_cfg or (
             get_smoke_config(tc.arch) if tc.smoke else get_config(tc.arch))
         vocab = self.model_cfg.vocab_size
+        if tc.pack and tc.source not in ("packed",):
+            tc = self.tc = dataclasses.replace(tc, source="packed")
         if source is None:
             if dataset is not None:
                 source = SyntheticSource(dataset)
@@ -116,8 +120,13 @@ class Trainer:
                 source = get_source(tc.source, path=tc.data_path,
                                     n_samples=tc.n_samples,
                                     seq_len=tc.seq_len,
-                                    vocab_size=min(vocab, 64), seed=tc.seed)
+                                    vocab_size=min(vocab, 64), seed=tc.seed,
+                                    max_segments=tc.max_segments)
         self.source = source
+        # packed sources: ES identity (score rows, selection, pruning) is
+        # the DOCUMENT; the sampler/meta-batch dimension stays the row
+        self.doc_level = hasattr(source, "set_kept_docs")
+        self.n_train = source.n_docs if self.doc_level else len(source)
         # the underlying dataset where one exists (synthetic introspection)
         self.ds = getattr(source, "ds", source)
         self.ctx = ShardCtx()
@@ -150,7 +159,7 @@ class Trainer:
                                else "es",
                                beta1=beta1, beta2=beta2,
                                minibatch=minibatch,
-                               n_train=len(self.source),
+                               n_train=self.n_train,
                                pipelined=tc.pipelined,
                                seq_chunk=0, fused_scores=tc.fused_scores)
         self.sel_method = sel_method
@@ -230,7 +239,9 @@ class Trainer:
             pruned = (self.tc.method in SET_LEVEL
                       and self.anneal.selection_active(epoch))
         n = len(self.source)
-        if pruned:
+        # doc-level pruning drops documents *inside* rows: every row still
+        # streams, so the step horizon is the unpruned row count
+        if pruned and not self.doc_level:
             n = max(1, int(round((1.0 - self.tc.pruning_ratio) * n)))
         return self._steps_for(n)
 
@@ -260,7 +271,7 @@ class Trainer:
             warnings.warn("--shard-scores: single device, store stays "
                           "replicated", stacklevel=2)
             return None
-        n = len(self.source)
+        n = self.n_train
         if n % n_dev != 0:
             warnings.warn(f"--shard-scores: n_train={n} not divisible by "
                           f"{n_dev} devices, store stays replicated",
@@ -286,7 +297,7 @@ class Trainer:
             self.pipeline.load_state(extras, cur)
             if "prev_epoch_losses" in extras:
                 self.prev_epoch_losses = extras["prev_epoch_losses"]
-            self._pruned_in_process = self.pipeline._kept is not None
+            self._pruned_in_process = self.pipeline.has_pruning
             self._resume_step = cur.get("step", 0)
             self._resume_held = cur.get("held", False)
             # a cursor at the epoch's end (and no pipelined carry) means
@@ -572,10 +583,19 @@ def main() -> None:
                     help="data-slicing host count override (default: "
                          "jax.process_count())")
     ap.add_argument("--source", default="synthetic",
-                    choices=["synthetic", "tokens", "sharded", "sft"],
+                    choices=["synthetic", "tokens", "sharded", "sft",
+                             "packed"],
                     help="data source: in-memory synthetic LM, memory-"
-                         "mapped token bin, sharded token-bin files, or "
-                         "packed SFT (prompt/response with loss masks)")
+                         "mapped token bin, sharded token-bin files, "
+                         "packed SFT (prompt/response with loss masks), or "
+                         "document-packed rows (token-level ES)")
+    ap.add_argument("--pack", action="store_true",
+                    help="sequence packing: multiple documents per row "
+                         "with segment-granular ES (shortcut for "
+                         "--source packed)")
+    ap.add_argument("--max-segments", type=int, default=4,
+                    help="packed: max documents per row (the ES selection "
+                         "pool is meta_batch * max_segments document slots)")
     ap.add_argument("--data-path", default=None,
                     help="tokens: .bin path; sharded: glob pattern; "
                          "sft: JSONL path (omit for the synthetic SFT set)")
@@ -605,6 +625,7 @@ def main() -> None:
                        shard_scores=args.shard_scores,
                        host_id=args.host_id, num_hosts=args.num_hosts,
                        source=args.source, data_path=args.data_path,
+                       pack=args.pack, max_segments=args.max_segments,
                        prefetch=args.prefetch,
                        prefetch_depth=args.prefetch_depth,
                        drop_last=args.drop_last,

@@ -95,14 +95,42 @@ def causal_mask(q_pos: jax.Array, k_pos: jax.Array) -> jax.Array:
     return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
 
 
+def segment_causal_mask(q_pos: jax.Array, k_pos: jax.Array,
+                        q_seg: jax.Array, k_seg: jax.Array) -> jax.Array:
+    """Segment-isolated causal mask for packed rows.
+
+    q_pos/q_seg: (B, Sq), k_pos/k_seg: (B, Sk) -> (B, Sq, Sk) additive.
+    A query attends to a key iff both live in the same non-padding segment
+    (segment id 0 = padding) and the key is causally prior *within* the
+    segment — documents packed into one row never see each other.  Padding
+    queries have every key masked; softmax degrades to uniform there, which
+    is harmless because their labels are -1 and their hidden states feed
+    nothing that is not itself masked.
+    """
+    ok = ((q_pos[:, :, None] >= k_pos[:, None, :])
+          & (q_seg[:, :, None] == k_seg[:, None, :])
+          & (q_seg[:, :, None] > 0))
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
 def mha(params: Params, x: jax.Array, *, n_heads: int, n_kv: int,
         head_dim: int, rope_theta: float, ctx: ShardCtx,
         chunk_q: int = 0, causal: bool = True,
-        positions: Optional[jax.Array] = None) -> jax.Array:
-    """Full self-attention over x: (B, S, d) -> (B, S, d)."""
+        positions: Optional[jax.Array] = None,
+        segment_ids: Optional[jax.Array] = None) -> jax.Array:
+    """Full self-attention over x: (B, S, d) -> (B, S, d).
+
+    ``segment_ids`` (B, S) switches on packed-row masking: attention is
+    causal *within* each segment and zero across segments/padding;
+    ``positions`` must then be the per-segment (B, S) local positions so
+    RoPE restarts per document.
+    """
     B, S, _ = x.shape
     if positions is None:
         positions = jnp.arange(S)
+    if segment_ids is not None:
+        assert positions.ndim == 2, \
+            "segment_ids needs per-row (B, S) positions"
     q, k, v = _project_qkv(params, x, x, n_heads, n_kv, head_dim, ctx)
     cos, sin = rope_angles(positions, head_dim, rope_theta)
     q = apply_rope(q, cos, sin)
@@ -114,17 +142,33 @@ def mha(params: Params, x: jax.Array, *, n_heads: int, n_kv: int,
         n_chunks = S // chunk_q
         qc = q.reshape(B, n_chunks, chunk_q, n_kv, G, head_dim)
         qc = jnp.moveaxis(qc, 1, 0)  # (n_chunks, B, qc, K, G, hd)
-        pos_c = positions.reshape(n_chunks, chunk_q)
+        if positions.ndim == 2:
+            pos_c = jnp.moveaxis(
+                positions.reshape(B, n_chunks, chunk_q), 1, 0)
+        else:
+            pos_c = positions.reshape(n_chunks, chunk_q)
+        chunked = (qc, pos_c)
+        if segment_ids is not None:
+            chunked += (jnp.moveaxis(
+                segment_ids.reshape(B, n_chunks, chunk_q), 1, 0),)
 
         def body(_, inputs):
-            q_blk, qp = inputs
-            m = causal_mask(qp, positions) if causal else None
+            if segment_ids is not None:
+                q_blk, qp, qs = inputs
+                m = segment_causal_mask(qp, positions, qs, segment_ids)
+            else:
+                q_blk, qp = inputs
+                m = causal_mask(qp, positions) if causal else None
             return None, _grouped_attn(q_blk, k, v, m)
 
-        _, out = jax.lax.scan(body, None, (qc, pos_c))
+        _, out = jax.lax.scan(body, None, chunked)
         out = jnp.moveaxis(out, 0, 1).reshape(B, S, n_heads, head_dim)
     else:
-        m = causal_mask(positions, positions) if causal else None
+        if segment_ids is not None:
+            m: Optional[jax.Array] = segment_causal_mask(
+                positions, positions, segment_ids, segment_ids)
+        else:
+            m = causal_mask(positions, positions) if causal else None
         out = _grouped_attn(q, k, v, m).reshape(B, S, n_heads, head_dim)
 
     out = ctx.constrain(out, "batch", None, "heads", None)

@@ -65,6 +65,52 @@ def per_sample_xent(h: jax.Array, w_out: jax.Array, labels: jax.Array,
     return per_sample, jnp.mean(per_sample)
 
 
+def per_segment_xent(h: jax.Array, w_out: jax.Array, labels: jax.Array,
+                     segment_ids: jax.Array, *, max_segments: int,
+                     ctx: ShardCtx, seq_chunk: int = 1024,
+                     label_mask_value: int = -1
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Per-*segment* NLL for packed rows — the XLA reference reduction.
+
+    h: (B, S, d); labels/segment_ids: (B, S) with segment id 0 = padding
+    and ``label_mask_value`` labels ignored.  Returns ``(per_seg (B, M),
+    counts (B, M))``, M = ``max_segments``: mean NLL over each segment's
+    supervised tokens and the token count per segment (0 → per_seg 0).
+
+    The reduction is a one-hot segment-sum, so a token contributes to
+    exactly one slot and masked/padding tokens to none; summing zeros at
+    different positions is fp-exact, which is what makes packed losses
+    bit-equal to the same documents packed differently (same (B, S) shape).
+    """
+    B, S, d = h.shape
+    mask = (labels != label_mask_value)
+    safe_labels = jnp.where(mask, labels, 0)
+    # (B, S, M): token s belongs to slot m iff segment_ids == m+1 (and live)
+    slot = jax.nn.one_hot(segment_ids - 1, max_segments, dtype=jnp.float32)
+    slot = slot * mask.astype(jnp.float32)[:, :, None]
+
+    if seq_chunk and S > seq_chunk and S % seq_chunk == 0:
+        nc = S // seq_chunk
+        hc = jnp.moveaxis(h.reshape(B, nc, seq_chunk, d), 1, 0)
+        lc = jnp.moveaxis(safe_labels.reshape(B, nc, seq_chunk), 1, 0)
+        sc = jnp.moveaxis(slot.reshape(B, nc, seq_chunk, max_segments), 1, 0)
+
+        def body(acc, inp):
+            hb, lb, sb = inp
+            nll = _chunk_nll(hb, w_out, lb, ctx)
+            return acc + jnp.einsum("bc,bcm->bm", nll, sb), None
+
+        total, _ = jax.lax.scan(
+            body, jnp.zeros((B, max_segments), jnp.float32), (hc, lc, sc))
+    else:
+        nll = _chunk_nll(h, w_out, safe_labels, ctx)
+        total = jnp.einsum("bs,bsm->bm", nll, slot)
+
+    counts = jnp.sum(slot, axis=1)                          # (B, M)
+    per_seg = total / jnp.maximum(counts, 1.0)
+    return per_seg, counts
+
+
 def last_token_logits(h_last: jax.Array, w_out: jax.Array,
                       ctx: ShardCtx) -> jax.Array:
     """h_last: (B, 1, d) -> (B, V) f32 logits for sampling."""

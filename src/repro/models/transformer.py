@@ -27,7 +27,7 @@ from . import ssm as ssm_lib
 from .layers import (Params, Axes, ShardCtx, apply_norm, init_norm, init_mlp,
                      mlp_fwd, init_embedding, embed_tokens, unembed_matrix,
                      winit, zeros)
-from .losses import per_sample_xent, last_token_logits
+from .losses import per_sample_xent, per_segment_xent, last_token_logits
 
 PyTree = Any
 
@@ -147,12 +147,14 @@ def _init_cross_block(cfg: ModelConfig, key, stacked) -> Tuple[Params, Axes]:
 # ---------------------------------------------------------------------------
 
 def _dense_block_fwd(cfg: ModelConfig, p: Params, x: jax.Array, ctx: ShardCtx,
-                     positions: Optional[jax.Array] = None) -> jax.Array:
+                     positions: Optional[jax.Array] = None,
+                     segment_ids: Optional[jax.Array] = None) -> jax.Array:
     h = apply_norm(cfg.norm_kind, x, p.get("ln1"))
     x = x + attn_lib.mha(p["attn"], h, n_heads=cfg.num_heads,
                          n_kv=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim(),
                          rope_theta=cfg.rope_theta, ctx=ctx,
-                         chunk_q=cfg.attn_chunk_q, positions=positions)
+                         chunk_q=cfg.attn_chunk_q, positions=positions,
+                         segment_ids=segment_ids)
     x = ctx.constrain(x, "batch", None, None)
     h = apply_norm(cfg.norm_kind, x, p.get("ln2"))
     if cfg.num_experts > 0:
@@ -266,17 +268,30 @@ def dataclasses_replace_dense(cfg: ModelConfig) -> ModelConfig:
 # ---------------------------------------------------------------------------
 
 def lm_hidden(cfg: ModelConfig, params: Params, tokens: jax.Array,
-              ctx: ShardCtx, *, memory: Optional[jax.Array] = None) -> jax.Array:
-    """tokens: (B, S) -> final-normed hidden states (B, S, d)."""
+              ctx: ShardCtx, *, memory: Optional[jax.Array] = None,
+              positions: Optional[jax.Array] = None,
+              segment_ids: Optional[jax.Array] = None) -> jax.Array:
+    """tokens: (B, S) -> final-normed hidden states (B, S, d).
+
+    ``segment_ids``/``positions`` (B, S) enable packed-row isolation
+    (PackedSource batches) — dense/moe families only: the attention mask
+    keeps documents independent, which SSM/hybrid recurrences cannot do
+    without a state reset that those scans do not implement.
+    """
     dt = jnp.dtype(cfg.compute_dtype)
     x = embed_tokens(params["embed"], tokens, dt)
     x = ctx.constrain(x, "batch", None, None)
     if memory is not None:
         memory = memory.astype(dt)
+    if segment_ids is not None and cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"sequence packing is attention-mask based; family "
+            f"{cfg.family!r} has no segment isolation")
 
     if cfg.family in ("dense", "moe"):
         def body(h, p):
-            return _dense_block_fwd(cfg, p, h, ctx)
+            return _dense_block_fwd(cfg, p, h, ctx, positions=positions,
+                                    segment_ids=segment_ids)
         x = _scan_stack(body, x, params["layers"], cfg.remat_policy,
                         cfg.scan_unroll)
     elif cfg.family == "ssm":
@@ -363,9 +378,37 @@ def encode(cfg: ModelConfig, params: Params, frames: jax.Array,
 def lm_per_sample_loss(cfg: ModelConfig, params: Params,
                        batch: Dict[str, jax.Array], ctx: ShardCtx,
                        seq_chunk: int = 1024) -> Tuple[jax.Array, jax.Array]:
-    """Returns (per_sample_loss (B,), mean_loss ())."""
+    """Returns (per_sample_loss (B,), mean_loss ()).
+
+    Packed batches (carrying ``segment_ids``/``positions``) flow through
+    transparently — the row loss is then the mean over all supervised
+    tokens in the row, i.e. a document-count-weighted mix.  Use
+    ``lm_per_segment_loss`` when per-document losses are needed.
+    """
     memory = batch.get("frames") if cfg.is_encdec else batch.get("image_embeds")
-    h = lm_hidden(cfg, params, batch["tokens"], ctx, memory=memory)
+    h = lm_hidden(cfg, params, batch["tokens"], ctx, memory=memory,
+                  positions=batch.get("positions"),
+                  segment_ids=batch.get("segment_ids"))
     w_out = unembed_matrix(params["embed"])
     return per_sample_xent(h, w_out, batch["labels"], ctx=ctx,
                            seq_chunk=seq_chunk)
+
+
+def lm_per_segment_loss(cfg: ModelConfig, params: Params,
+                        batch: Dict[str, jax.Array], ctx: ShardCtx,
+                        seq_chunk: int = 1024
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Per-document losses for a packed batch.
+
+    Returns ``(per_seg (B, M), counts (B, M))`` where ``M`` is the slot
+    count (``batch["doc_ids"].shape[1]``): mean NLL over each document's
+    supervised tokens, and how many such tokens it has (0 for empty or
+    pruned slots — their per_seg entry is 0).
+    """
+    h = lm_hidden(cfg, params, batch["tokens"], ctx,
+                  positions=batch["positions"],
+                  segment_ids=batch["segment_ids"])
+    w_out = unembed_matrix(params["embed"])
+    return per_segment_xent(h, w_out, batch["labels"], batch["segment_ids"],
+                            max_segments=batch["doc_ids"].shape[1], ctx=ctx,
+                            seq_chunk=seq_chunk)

@@ -35,9 +35,14 @@ def test_xent_kernel_matches_oracle(M, d, V, dtype):
                                rtol=tol)
 
 
-@pytest.mark.parametrize("M,V", [(100, 500), (130, 777)])
+@pytest.mark.parametrize("M,V", [(100, 500), (130, 777),
+                                 (192, 500), (300, 640)])
 def test_xent_kernel_padding_paths(M, V):
-    """Non-multiple M and V exercise the row/vocab padding paths exactly."""
+    """Non-multiple M and V exercise the row/vocab padding paths exactly.
+
+    192 and 300 straddle the block_m=128 row tile (1.5 and 2.34 blocks) —
+    the packed path flattens (B, S) to M = B*S, which is rarely a tile
+    multiple, so the ragged final block must mask exactly."""
     key = jax.random.PRNGKey(1)
     h = jax.random.normal(key, (M, 64))
     w = jax.random.normal(key, (64, V)) * 0.1

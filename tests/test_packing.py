@@ -1,0 +1,330 @@
+"""Token-level ES with sequence packing (ISSUE 6).
+
+Pinned contracts:
+  * ``PackedSource`` layout invariants: every document lands in exactly one
+    slot, labels stop at document boundaries, positions restart per doc;
+  * the segment-sum Pallas kernel matches its one-hot-einsum oracle,
+    including ragged (padded) B and S;
+  * the fused per-segment xent chain matches the XLA ``per_segment_xent``;
+  * packed-vs-unpacked parity: a packed row's per-segment losses are
+    BIT-equal to rows holding one segment each at the same offsets
+    (masked attention probabilities are exactly 0.0, and every nonzero
+    reduction term stays at the same array position);
+  * the packed engine step at M=1 is fp-close to the serial ``es_step``
+    on the same documents (same PRNG split, same Gumbel draw shape);
+  * doc-granular ESWP pruning masks dropped documents at batch time and
+    round-trips through the pipeline's checkpoint extras.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import ESConfig, ESEngine, init_train_state
+from repro.data.pipeline import DataPipeline, PackedSource
+from repro.kernels.segsum.ops import per_segment_xent_fused, segment_sum_fused
+from repro.kernels.segsum.ref import segment_sum_ref
+from repro.models.layers import ShardCtx
+from repro.models.losses import per_segment_xent
+from repro.models.transformer import lm_per_segment_loss
+from repro.optim.adamw import OptConfig
+
+
+# ---------------------------------------------------------------------------
+# PackedSource layout
+# ---------------------------------------------------------------------------
+
+def test_packed_source_layout_invariants():
+    S, M = 32, 4
+    src = PackedSource.synthetic(64, S, max_segments=M, seed=3)
+    assert src.n_docs == 64
+    assert len(src) < 64                      # packing actually packed
+    assert 1.0 < src.pack_factor <= M
+    assert 0.0 <= src.padding_waste < 1.0
+    b = src.batch(np.arange(len(src)))
+    # every document id appears exactly once across all slots
+    ids = b["doc_ids"][b["doc_ids"] >= 0]
+    assert sorted(ids.tolist()) == list(range(64))
+    seg, pos, labels, toks = (b["segment_ids"], b["positions"],
+                              b["labels"], b["tokens"])
+    assert seg.shape == pos.shape == labels.shape == toks.shape == (len(src), S)
+    # padding: segment 0, label -1, position 0
+    pad = seg == 0
+    assert (labels[pad] == -1).all() and (pos[pad] == 0).all()
+    for r in range(len(src)):
+        for m in range(M):
+            tok_idx = np.flatnonzero(seg[r] == m + 1)
+            if b["doc_ids"][r, m] < 0:
+                assert tok_idx.size == 0
+                continue
+            # contiguous span, positions restart at 0
+            assert (tok_idx == np.arange(tok_idx[0],
+                                         tok_idx[0] + tok_idx.size)).all()
+            np.testing.assert_array_equal(pos[r, tok_idx],
+                                          np.arange(tok_idx.size))
+            # labels are next-token WITHIN the doc; boundary masked
+            np.testing.assert_array_equal(labels[r, tok_idx[:-1]],
+                                          toks[r, tok_idx[1:]])
+            assert labels[r, tok_idx[-1]] == -1
+
+
+def test_packed_source_rejects_oversized_docs():
+    with pytest.raises(ValueError):
+        PackedSource([np.arange(40, dtype=np.int32)], seq_len=32)
+    with pytest.raises(ValueError):
+        PackedSource([np.zeros(1, np.int32)], seq_len=32)
+
+
+def test_packed_source_kept_mask_and_state_roundtrip():
+    src = PackedSource.synthetic(32, 32, max_segments=4, seed=1)
+    full = src.batch(np.arange(len(src)))
+    kept = np.ones(32, bool)
+    kept[::3] = False
+    gs = np.linspace(1.0, 2.0, 32).astype(np.float32)
+    src.set_kept_docs(kept, gs)
+    b = src.batch(np.arange(len(src)))
+    # dropped docs: slot id -1, all their labels masked; layout untouched
+    np.testing.assert_array_equal(b["tokens"], full["tokens"])
+    np.testing.assert_array_equal(b["segment_ids"], full["segment_ids"])
+    for r in range(len(src)):
+        for m in range(4):
+            doc = full["doc_ids"][r, m]
+            if doc < 0:
+                continue
+            span = b["segment_ids"][r] == m + 1
+            if kept[doc]:
+                assert b["doc_ids"][r, m] == doc
+                np.testing.assert_array_equal(b["labels"][r, span],
+                                              full["labels"][r, span])
+                np.testing.assert_allclose(b["doc_grad_scale"][r, m], gs[doc])
+            else:
+                assert b["doc_ids"][r, m] == -1
+                assert (b["labels"][r, span] == -1).all()
+    # round-trip through checkpoint extras
+    arrays = src.doc_state_arrays()
+    src2 = PackedSource.synthetic(32, 32, max_segments=4, seed=1)
+    src2.load_doc_state(arrays)
+    b2 = src2.batch(np.arange(len(src2)))
+    for k in b:
+        np.testing.assert_array_equal(b[k], b2[k])
+
+
+# ---------------------------------------------------------------------------
+# segment-sum kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,M", [(8, 128, 4), (16, 256, 8), (8, 128, 1)])
+def test_segsum_kernel_matches_oracle(B, S, M):
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    nll = jnp.abs(jax.random.normal(k1, (B, S)))
+    seg = jax.random.randint(k2, (B, S), 0, M + 1)
+    mask = seg > 0
+    got_s, got_c = segment_sum_fused(nll, seg, mask, max_segments=M,
+                                     interpret=True)
+    want_s, want_c = segment_sum_ref(nll, seg, mask, max_segments=M)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got_c), np.asarray(want_c))
+
+
+@pytest.mark.parametrize("B,S", [(5, 100), (3, 130), (7, 300)])
+def test_segsum_kernel_ragged_padding_paths(B, S):
+    """B not a multiple of block_b=8 and S not a multiple of the 128 lane
+    tile: the wrapper's zero-padding must contribute exactly nothing."""
+    key = jax.random.PRNGKey(1)
+    nll = jnp.abs(jax.random.normal(key, (B, S)))
+    seg = jax.random.randint(key, (B, S), 0, 4)
+    mask = seg > 0
+    got_s, got_c = segment_sum_fused(nll, seg, mask, max_segments=3,
+                                     interpret=True)
+    want_s, want_c = segment_sum_ref(nll, seg, mask, max_segments=3)
+    assert got_s.shape == want_s.shape == (B, 3)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got_c), np.asarray(want_c))
+
+
+def test_per_segment_xent_fused_matches_xla():
+    key = jax.random.PRNGKey(2)
+    B, S, d, V, M = 4, 64, 32, 128, 4
+    ks = jax.random.split(key, 4)
+    h = jax.random.normal(ks[0], (B, S, d))
+    w = jax.random.normal(ks[1], (d, V)) * 0.1
+    labels = jax.random.randint(ks[2], (B, S), 0, V)
+    seg = jax.random.randint(ks[3], (B, S), 0, M + 1)
+    labels = jnp.where(seg == 0, -1, labels)
+    got, got_c = per_segment_xent_fused(h, w, labels, seg, max_segments=M,
+                                        interpret=True)
+    want, want_c = per_segment_xent(h, w, labels, seg, max_segments=M,
+                                    ctx=ShardCtx(), seq_chunk=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(got_c), np.asarray(want_c))
+
+
+def test_per_segment_xent_seq_chunked_matches_unchunked():
+    key = jax.random.PRNGKey(3)
+    B, S, d, V, M = 2, 64, 32, 96, 3
+    h = jax.random.normal(key, (B, S, d))
+    w = jax.random.normal(key, (d, V)) * 0.1
+    labels = jax.random.randint(key, (B, S), 0, V)
+    seg = jax.random.randint(key, (B, S), 0, M + 1)
+    labels = jnp.where(seg == 0, -1, labels)
+    a, ca = per_segment_xent(h, w, labels, seg, max_segments=M,
+                             ctx=ShardCtx(), seq_chunk=0)
+    b, cb = per_segment_xent(h, w, labels, seg, max_segments=M,
+                             ctx=ShardCtx(), seq_chunk=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ca), np.asarray(cb))
+
+
+# ---------------------------------------------------------------------------
+# packed vs unpacked model parity
+# ---------------------------------------------------------------------------
+
+def _packed_smoke_batch(seed=0, S=32, M=3):
+    """One packed row (B=1) with M real documents, plus its exploded form:
+    M rows that keep ONE segment each at the SAME token offsets (other
+    positions: labels -1, segment id 0 — tokens left in place)."""
+    rng = np.random.default_rng(seed)
+    docs = [rng.integers(1, 64, L).astype(np.int32) for L in (10, 8, 9)][:M]
+    src = PackedSource(docs, S, max_segments=M)
+    assert len(src) == 1                      # all docs fit one row
+    packed = src.batch(np.arange(1))
+    seg = packed["segment_ids"]
+    exploded = {
+        "tokens": np.repeat(packed["tokens"], M, axis=0),
+        "positions": np.repeat(packed["positions"], M, axis=0),
+        "labels": np.stack([np.where(seg[0] == m + 1, packed["labels"][0], -1)
+                            for m in range(M)]),
+        "segment_ids": np.stack([np.where(seg[0] == m + 1, seg[0], 0)
+                                 for m in range(M)]),
+        "doc_ids": np.stack([np.where(np.arange(M) == m,
+                                      packed["doc_ids"][0], -1)
+                             for m in range(M)]),
+    }
+    return packed, exploded
+
+
+def test_packed_vs_exploded_rows_bit_equal():
+    """The segment-isolated mask makes co-packed neighbours invisible:
+    per-document losses must be BIT-equal whether a document shares its
+    row or sits alone at the same offsets."""
+    from repro.configs.registry import get_smoke_config
+    model_cfg = get_smoke_config("qwen1.5-0.5b")
+    es_cfg = ESConfig(method="es", minibatch=1, n_train=8, seq_chunk=0)
+    opt_cfg = OptConfig(kind="adamw", lr=1e-3)
+    state = init_train_state(model_cfg, es_cfg, opt_cfg,
+                             jax.random.PRNGKey(0), 4)
+    packed, exploded = _packed_smoke_batch(M=3)
+    ctx = ShardCtx()
+    to_dev = lambda d: {k: jnp.asarray(v) for k, v in d.items()}  # noqa: E731
+    ps_packed, _ = jax.jit(
+        lambda p, b: lm_per_segment_loss(model_cfg, p, b, ctx, seq_chunk=0)
+    )(state.params, to_dev(packed))
+    ps_expl, _ = jax.jit(
+        lambda p, b: lm_per_segment_loss(model_cfg, p, b, ctx, seq_chunk=0)
+    )(state.params, to_dev(exploded))
+    for m in range(3):
+        np.testing.assert_array_equal(np.asarray(ps_packed[0, m]),
+                                      np.asarray(ps_expl[m, m]))
+
+
+# ---------------------------------------------------------------------------
+# engine parity: packed step at M=1 == serial es_step (fp-close)
+# ---------------------------------------------------------------------------
+
+def test_packed_step_m1_matches_es_step():
+    """One doc per row reduces packing to the serial path: same PRNG
+    split, same Gumbel draw shape, weights equal up to the per-sample vs
+    per-segment reduction order — selection and the resulting update must
+    agree to fp32 tolerance.  SGD-momentum, not AdamW: Adam normalizes
+    per element, blowing ulp-level gradient noise on irrelevant weights
+    up to ±lr and drowning the signal this test pins."""
+    from repro.configs.registry import get_smoke_config
+    model_cfg = get_smoke_config("qwen1.5-0.5b")
+    es_cfg = ESConfig(method="es", minibatch=2, n_train=16, seq_chunk=0)
+    opt_cfg = OptConfig(kind="sgdm", lr=1e-2)
+    eng = ESEngine(model_cfg, es_cfg, opt_cfg,
+                   lambda s: jnp.asarray(1.0, jnp.float32), ShardCtx())
+    state = init_train_state(model_cfg, es_cfg, opt_cfg,
+                             jax.random.PRNGKey(0), 8)
+    rng = np.random.default_rng(7)
+    S = 32
+    docs = [rng.integers(1, 64, int(L)).astype(np.int32)
+            for L in rng.integers(8, S + 1, 16)]
+    src = PackedSource(docs, S, max_segments=1)
+    assert len(src) == 16 and src.n_docs == 16
+    s_packed = s_es = state
+    packed_step = jax.jit(eng.packed_step)
+    es_step = jax.jit(eng.es_step)
+    for step in range(3):
+        rows = np.arange(step * 8, (step + 1) * 8) % 16
+        pb = {k: jnp.asarray(v) for k, v in src.batch(rows).items()}
+        # the serial-path equivalent: same tokens/labels, row-level ids
+        eb = {"tokens": pb["tokens"], "labels": pb["labels"],
+              "sample_ids": pb["doc_ids"].reshape(-1)}
+        s_packed, mp = packed_step(s_packed, pb)
+        s_es, me = es_step(s_es, eb)
+        assert float(mp["bp_samples"]) == float(me["bp_samples"]) == 2.0
+        np.testing.assert_allclose(float(mp["loss"]), float(me["loss"]),
+                                   rtol=1e-4)
+    # same documents scored...
+    np.testing.assert_array_equal(np.asarray(s_packed.scores.seen),
+                                  np.asarray(s_es.scores.seen))
+    np.testing.assert_allclose(np.asarray(s_packed.scores.s),
+                               np.asarray(s_es.scores.s), rtol=1e-4,
+                               atol=1e-5)
+    # ...and the same parameters learned (fp32-close)
+    for a, b in zip(jax.tree.leaves(s_packed.params),
+                    jax.tree.leaves(s_es.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# pipeline: doc-granular pruning
+# ---------------------------------------------------------------------------
+
+def test_pipeline_doc_level_pruning_and_resume():
+    src = PackedSource.synthetic(48, 32, max_segments=4, seed=5)
+    pipe = DataPipeline(src, meta_batch=4, seed=0, prefetch=False)
+    assert pipe.doc_level and not pipe.has_pruning
+    kept_idx = np.arange(0, 48, 2)            # kept arrives as doc INDICES
+    gs = np.full(48, 1.25, np.float32)
+    pipe.apply_pruning(kept_idx, gs)
+    assert pipe.has_pruning
+    b = pipe.batch_at(0, 0)
+    live = b["doc_ids"][b["doc_ids"] >= 0]
+    assert live.size and (live % 2 == 0).all()   # odd docs masked out
+    # the kept-set rides the checkpoint extras and restores bit-exact
+    arrays = pipe.state_arrays()
+    assert not arrays["doc_kept"].all()
+    src2 = PackedSource.synthetic(48, 32, max_segments=4, seed=5)
+    pipe2 = DataPipeline(src2, meta_batch=4, seed=0, prefetch=False)
+    pipe2.load_state(arrays, pipe.cursor(0, 0))
+    assert pipe2.has_pruning
+    b2 = pipe2.batch_at(0, 0)
+    for k in b:
+        np.testing.assert_array_equal(b[k], b2[k])
+    # clearing (annealing window) restores every document
+    pipe.apply_pruning(None)
+    assert not pipe.has_pruning
+
+
+def test_packed_trainer_smoke_and_doc_pruning():
+    from repro.launch.train import Trainer, TrainerConfig
+    tc = TrainerConfig(arch="qwen1.5-0.5b", smoke=True, method="eswp",
+                       epochs=3, meta_batch=8, minibatch=2,
+                       n_samples=48, seq_len=32, lr=1e-3, pack=True,
+                       max_segments=4, prefetch=False, anneal_ratio=0.0)
+    tr = Trainer(tc)
+    assert tr.doc_level
+    assert tr.n_train == 48                   # score store sized by DOCUMENTS
+    out = tr.train()
+    assert out["steps"] > 0
+    assert np.isfinite(out["final_loss"])
+    # ESWP pruned at doc granularity: the source's kept-set shrank
+    assert tr.pipeline.doc_level
+    if out.get("prune_events"):
+        assert tr.pipeline.has_pruning
