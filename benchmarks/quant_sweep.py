@@ -1,0 +1,178 @@
+"""Quantized score store sweep: bytes + step time, int8 vs f32 rows.
+
+Times the raw store recursion — ``update`` (Eq. 3.1 scatter) followed by
+the training gather — over growing store sizes, through the identical
+``ScoreStore`` protocol for both backends, and emits
+``BENCH_quant_sweep.json``.  The f32 rows are the anchor; the int8 rows
+carry the same update stream through ``QuantizedStore``.
+
+Three numbers per (method, n) row:
+
+  mean_step_ms        : jitted update+gather wall time at fixed B — the
+                        quantized path pays dequant/requant + the
+                        residual-ring bookkeeping here
+  store_bytes         : actual bytes of the score leaves (shape x
+                        itemsize, summed over the pytree) — 12 B/row for
+                        f32, ~3 B/row + scales + the fixed ring for int8
+  wire_bytes_per_elem : analytic per-element payload of the cross-shard
+                        gather reduction on the reference 8-way mesh
+                        (``distributed.compression.wire_bytes_per_element``)
+                        — int8+scale blocks vs the f32 ring all-reduce
+
+    PYTHONPATH=src:. python benchmarks/quant_sweep.py [--smoke] \
+        [--ns 65536,262144,1048576] [--out BENCH_quant_sweep.json]
+
+``--smoke`` shrinks the sweep for the CI benchmark-smoke job.  CI gates
+the artifact against the previous run's via ``benchmarks/bench_trend.py``
+twice: ``--metric store_bytes --relative-to none --tolerance 0`` (the
+byte layout is shape-determined, so ANY drift is a real regression — a
+widened dtype, a silently grown ring) and ``--metric mean_step_ms
+--relative-to f32`` (the quantized step's cost relative to the f32
+anchor in the same process, so runner hardware cancels).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scores import make_store
+from repro.distributed.compression import wire_bytes_per_element
+
+# the reference data-parallel extent for the analytic wire numbers: an
+# 8-way gather psum, int8+scale blocks vs the f32 ring all-reduce
+WIRE_AXIS = 8
+WIRE_BLOCK = 256
+
+
+def _leaf_bytes(tree) -> int:
+    return sum(a.size * jnp.dtype(a.dtype).itemsize
+               for a in jax.tree.leaves(tree))
+
+
+def _id_stream(n: int, B: int, steps: int, seed: int = 0):
+    """One fixed (ids, losses) stream per store size — both methods see
+    the identical batches, so step time is the only free variable."""
+    rng = np.random.default_rng(seed)
+    batches = []
+    for _ in range(steps):
+        ids = rng.integers(0, n, B).astype(np.int32)
+        losses = rng.uniform(0.1, 3.0, B).astype(np.float32)
+        batches.append((jnp.asarray(ids), jnp.asarray(losses)))
+    return batches
+
+
+def _time_store(store, n: int, batches, reps: int, warmup: int = 2
+                ) -> float:
+    """Mean ms per update+gather, min over ``reps`` passes."""
+
+    @jax.jit
+    def step(leaf, ids, losses):
+        leaf = store.update(leaf, ids, losses, 0.2, 0.9)
+        s, w = store.gather(leaf, ids)
+        return leaf, s, w
+
+    leaf = store.init_leaf(n)
+    for i in range(warmup):
+        leaf, s, w = step(leaf, *batches[i % len(batches)])
+    jax.block_until_ready(s)
+    means = []
+    for _ in range(reps):
+        leaf = store.init_leaf(n)
+        t0 = time.perf_counter()
+        for ids, losses in batches:
+            leaf, s, w = step(leaf, ids, losses)
+        jax.block_until_ready(s)
+        means.append((time.perf_counter() - t0) / len(batches) * 1e3)
+    return min(means)
+
+
+def run_sweep(args) -> Dict:
+    ns = sorted({int(v) for v in args.ns.split(",")})
+    comp_wire, f32_wire = wire_bytes_per_element(WIRE_AXIS, WIRE_BLOCK)
+    rows: List[Dict] = []
+    for n in ns:
+        batches = _id_stream(n, args.batch, args.steps)
+        for method in ("f32", "int8"):
+            store = make_store(None, quantize=method == "int8",
+                               block=args.block,
+                               residual_rows=args.residual_rows)
+            ms = _time_store(store, n, batches, args.reps)
+            nbytes = _leaf_bytes(store.init_leaf(n))
+            rows.append({
+                "method": method,
+                "k": n,
+                "mean_step_ms": round(ms, 4),
+                "store_bytes": nbytes,
+                "wire_bytes_per_elem": round(
+                    comp_wire if method == "int8" else f32_wire, 4),
+            })
+            print(f"{method:<5} n=2^{int(np.log2(n)) if n & (n-1) == 0 else n}"
+                  f" {ms:8.3f} ms/step  {nbytes/2**20:8.3f} MiB "
+                  f"{rows[-1]['wire_bytes_per_elem']:.3f} B/elem",
+                  flush=True)
+
+    n_top = ns[-1]
+    by = {(r["method"], r["k"]): r for r in rows}
+    byte_reduction = (by[("f32", n_top)]["store_bytes"]
+                      / by[("int8", n_top)]["store_bytes"])
+    wire_ratio = comp_wire / f32_wire
+    return {
+        "bench": "quant_sweep",
+        "config": {
+            "smoke": args.smoke, "ns": ns, "batch": args.batch,
+            "steps": args.steps, "reps": args.reps,
+            "block": args.block, "residual_rows": args.residual_rows,
+            "wire_axis": WIRE_AXIS, "wire_block": WIRE_BLOCK,
+            "backend": jax.default_backend(),
+        },
+        "rows": rows,
+        # the acceptance numbers, both at the largest store size: int8
+        # rows + scales + ring must stay well under the 12 B/row f32
+        # triple, and the int8+scale gather payload well under the f32
+        # ring all-reduce
+        "byte_reduction": round(byte_reduction, 4),
+        "wire_ratio": round(wire_ratio, 4),
+        "byte_reduction_ok": bool(byte_reduction >= 3.5),
+        "wire_ratio_ok": bool(wire_ratio <= 0.3),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep")
+    ap.add_argument("--ns", default="65536,131072,262144,524288,1048576",
+                    help="comma-separated store sizes")
+    ap.add_argument("--batch", type=int, default=1024,
+                    help="update/gather batch per step")
+    ap.add_argument("--steps", type=int, default=16,
+                    help="timed steps per pass")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--block", type=int, default=1024,
+                    help="rows per int8 scale")
+    ap.add_argument("--residual-rows", type=int, default=1024,
+                    help="error-feedback ring slots")
+    ap.add_argument("--out", default="BENCH_quant_sweep.json")
+    args = ap.parse_args()
+    if args.smoke:
+        # byte_reduction is shape-math, not timing: it holds at the
+        # smoke sizes exactly as at 2^20, so CI still checks it
+        args.ns = "65536,262144"
+        args.steps = min(args.steps, 8)
+        args.reps = max(args.reps, 4)
+
+    out = run_sweep(args)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out} (byte_reduction={out['byte_reduction']} "
+          f"wire_ratio={out['wire_ratio']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -112,15 +112,24 @@ def _to_host(leaf: Any) -> np.ndarray:
 
 def _split_partitioned(flat: Dict[str, Any], partition: Optional[Dict]
                        ) -> Dict[str, Any]:
-    """Rename process-owned leaves to their offset-tagged block keys."""
+    """Rename process-owned leaves to their offset-tagged block keys.
+
+    The tag is the leaf's block offset: one shared row ``offset`` by
+    default, or — with ``per_leaf`` (quantized stores, whose leaves have
+    heterogeneous lengths: rows, scale blocks, ring slots, all split
+    evenly across processes) — ``rank * len(leaf)`` per leaf.
+    """
     if not partition:
         return dict(flat)
     prefixes = tuple(partition.get("prefixes", ()))
     off = int(partition.get("offset", 0))
+    per_leaf = bool(partition.get("per_leaf"))
+    rank = int(partition.get("rank", 0))
     out = {}
     for k, v in flat.items():
         if prefixes and k.startswith(prefixes):
-            out[f"{k}{_BLOCK}{off:012d}"] = v
+            o = rank * int(np.shape(v)[0]) if per_leaf else off
+            out[f"{k}{_BLOCK}{o:012d}"] = v
         else:
             out[k] = v
     return out
@@ -378,6 +387,8 @@ class Checkpointer:
         data = self._load_arrays(step)
         prefixes = tuple((partition or {}).get("prefixes", ()))
         offset = int((partition or {}).get("offset", 0))
+        per_leaf = bool((partition or {}).get("per_leaf"))
+        rank = int((partition or {}).get("rank", 0))
         flat_template = _flatten(template)
         out = {}
         missing = []
@@ -394,7 +405,8 @@ class Checkpointer:
                        else np.asarray(leaf))
             if prefixes and key.startswith(prefixes) \
                     and arr.shape[:1] != tuple(leaf.shape[:1]):
-                arr = arr[offset:offset + leaf.shape[0]]
+                o = rank * int(leaf.shape[0]) if per_leaf else offset
+                arr = arr[o:o + leaf.shape[0]]
             if hasattr(leaf, "sharding") and leaf.sharding is not None \
                     and hasattr(leaf.sharding, "mesh"):
                 out[key] = jax.device_put(arr.astype(leaf.dtype),

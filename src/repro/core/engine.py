@@ -376,8 +376,9 @@ class ESEngine:
         new_err = state.grad_err
         if getattr(self.opt_cfg, "compress_grads", False):
             # int8 quantize->dequantize with error feedback: models the
-            # lossy leg of the compressed DP all-reduce (wire-level path:
-            # distributed/compression.compressed_psum_mean under shard_map)
+            # lossy leg of the compressed DP all-reduce on the same
+            # per-block grid as the wire (distributed/compression.
+            # _compressed_reduce_1d under shard_map)
             from ..distributed.compression import compress_decompress
             pairs = jax.tree.map(compress_decompress, grads, state.grad_err)
             grads = jax.tree.map(lambda t: t[0], pairs,

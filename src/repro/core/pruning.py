@@ -92,6 +92,61 @@ class PruneSnapshot:
         return self.assemble(self.losses)
 
 
+@dataclasses.dataclass
+class QuantPruneSnapshot(PruneSnapshot):
+    """Snapshot from a quantized store: the f32 ``weights``/``losses``
+    blocks are residual-corrected dequants (so the pruning statistics see
+    the store's best-known values), while ``q_losses``/``q_scales`` keep
+    the raw int8 codes + per-block scales for the cross-process exchange.
+
+    ``wire=True`` makes ``full_losses`` ship the CODES (1 B/row + tiny
+    scales) instead of f32 rows, and dequantize after the exchange — on
+    every process AND with no comm at all, so the assembled snapshot is
+    identical across topologies (residual corrections are dropped there;
+    they are bounded by scale/2 and only affect the KA move-back
+    comparison, never the Eq. 3.1 weights).
+    """
+    q_losses: List[np.ndarray] = None      # int8 row blocks (raw codes)
+    q_scales: List[np.ndarray] = None      # per-block f32 scales
+    q_block: int = 1024
+    wire: bool = False
+
+    def full_losses(self) -> np.ndarray:
+        if not self.wire:
+            return self.assemble(self.losses)
+        offs = np.asarray(self.offsets, np.int64)
+        lens = np.asarray([len(b) for b in self.q_losses], np.int64)
+        sc_lens = np.asarray([len(b) for b in self.q_scales], np.int64)
+        q_cat = (np.concatenate(self.q_losses) if self.q_losses
+                 else np.empty(0, np.int8))
+        sc_cat = (np.concatenate(self.q_scales) if self.q_scales
+                  else np.empty(0, np.float32))
+        if self.comm is not None:
+            all_q = self.comm.allgather(q_cat)          # int8 on the wire
+            all_sc = self.comm.allgather(sc_cat)
+            all_offs = self.comm.allgather(offs)
+            all_lens = self.comm.allgather(lens)
+            all_sclens = self.comm.allgather(sc_lens)
+        else:
+            all_q, all_sc = [q_cat], [sc_cat]
+            all_offs, all_lens, all_sclens = [offs], [lens], [sc_lens]
+        out = np.zeros(self.n, np.float32)
+        for qb, scb, ob, lb, slb in zip(all_q, all_sc, all_offs,
+                                        all_lens, all_sclens):
+            qpos = spos = 0
+            for o, ln, sl in zip(ob, lb, slb):
+                q = qb[qpos:qpos + ln]
+                sc = scb[spos:spos + sl]
+                blk = -(-int(ln) // int(sl))
+                pad = int(sl) * blk - int(ln)
+                out[o:o + ln] = (np.pad(q.astype(np.float32), (0, pad))
+                                 .reshape(int(sl), blk)
+                                 * sc[:, None]).reshape(-1)[:ln]
+                qpos += int(ln)
+                spos += int(sl)
+        return out
+
+
 def _local_topk(keys: np.ndarray, k: int) -> np.ndarray:
     k = min(k, len(keys))
     return np.argpartition(-keys, k - 1)[:k] if k else np.empty(0, np.int64)

@@ -538,12 +538,530 @@ class ShardedStore(ScoreStore):
                 "comm": self._comm()}
 
 
-def make_store(sharding: Optional[ScoreSharding] = None) -> ScoreStore:
+# ---------------------------------------------------------------------------
+# QuantizedStore: int8 score state with per-block scales + error feedback
+# ---------------------------------------------------------------------------
+
+_QMAX = 127.0
+_SCALE_FLOOR = 1e-12
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QuantizedScores:
+    """Int8 form of the score triple + the state that makes it lossless
+    enough: per-block f32 scales and an error-feedback residual ring.
+
+    Rows (replicated (n,), or this slice's rows when sharded):
+      s_q/w_q: symmetric int8 on a per-block grid (row r uses scale
+        ``*_scale[r // block]``); seen_q saturates at 127 (the UCB/KA
+        consumers only need coarse visit counts — this is what buys the
+        3rd byte of the 4x memory cut).
+    Scales: one f32 per ``block`` rows, grow-only (monotone max of
+      incoming |value|/127; growth rescales the stored int8 codes once,
+      under a ``lax.cond`` so steady-state steps skip the O(n) pass).
+    Residual ring (the error feedback, Karimireddy-style): the f32
+      quantization errors of the MOST RECENTLY updated rows only —
+      ``err_rows`` holds global row ids (-1 empty), ``err_seq`` recency
+      stamps (0 empty; gathers resolve duplicates to the newest entry),
+      ``err_s``/``err_w`` the residuals.  A gather returns
+      ``q * scale + newest residual`` — exact for any row still in the
+      ring, within scale/2 after eviction.  Ring eviction overwrites the
+      oldest stamps, so hot rows (the ones ES keeps re-scoring) stay
+      exact and only long-cold rows pay the grid error.
+    """
+    s_q: jax.Array       # (rows,) int8
+    w_q: jax.Array       # (rows,) int8
+    seen_q: jax.Array    # (rows,) int8, saturating at 127
+    s_scale: jax.Array   # (n_blocks,) f32
+    w_scale: jax.Array   # (n_blocks,) f32
+    err_rows: jax.Array  # (R,) int32 global row ids, -1 = empty
+    err_seq: jax.Array   # (R,) int32 recency stamps, 0 = empty
+    err_s: jax.Array     # (R,) f32
+    err_w: jax.Array     # (R,) f32
+
+
+def _q_init_leaf(rows: int, n_blocks: int, ring: int,
+                 n_logical: int) -> QuantizedScores:
+    # 1/n init encoded as code 127 on a (1/n)/127 grid: within 2 ulp of
+    # the f32 store's exact 1/n (the residual ring starts empty)
+    scale0 = jnp.float32((1.0 / n_logical) / _QMAX)
+    return QuantizedScores(
+        s_q=jnp.full((rows,), 127, jnp.int8),
+        w_q=jnp.full((rows,), 127, jnp.int8),
+        seen_q=jnp.zeros((rows,), jnp.int8),
+        s_scale=jnp.full((n_blocks,), scale0, jnp.float32),
+        w_scale=jnp.full((n_blocks,), scale0, jnp.float32),
+        err_rows=jnp.full((ring,), -1, jnp.int32),
+        err_seq=jnp.zeros((ring,), jnp.int32),
+        err_s=jnp.zeros((ring,), jnp.float32),
+        err_w=jnp.zeros((ring,), jnp.float32))
+
+
+def _q_gather_1d(q: jax.Array, scales: jax.Array, block: int,
+                 err_rows: jax.Array, err_seq: jax.Array, err_val: jax.Array,
+                 pos: jax.Array, gids: jax.Array) -> jax.Array:
+    """Dequantized values for local rows ``pos``, corrected by the NEWEST
+    ring residual whose global id matches ``gids`` (-1 never matches)."""
+    deq = q[pos].astype(jnp.float32) * scales[pos // block]
+    hit = err_rows[None, :] == gids[:, None]            # (B, R)
+    stamped = jnp.where(hit, err_seq[None, :], 0)
+    newest = jnp.argmax(stamped, axis=1)
+    has = jnp.max(stamped, axis=1) > 0
+    return deq + jnp.where(has, err_val[newest], 0.0)
+
+
+def _q_grow_scales(qs: QuantizedScores, pos: jax.Array, mask: jax.Array,
+                   gids: jax.Array, losses: jax.Array, beta1: float,
+                   beta2: float, block: int) -> QuantizedScores:
+    """Grow the touched blocks' scales to fit the incoming Eq. (3.1)
+    values (grow-only: max of old and amax/127).  When any block grows,
+    one ``lax.cond``-gated pass re-codes the stored int8 onto the new
+    grid (ratio-1 blocks re-code exactly); steady-state steps take the
+    no-op branch.  Stale ring residuals of re-coded rows stay bounded by
+    the new grid's scale/2 — never wrong, just no longer exact."""
+    s_prev = _q_gather_1d(qs.s_q, qs.s_scale, block, qs.err_rows,
+                          qs.err_seq, qs.err_s, pos, gids)
+    w_new = weights_from_prev(s_prev, losses, beta1)
+    s_new = beta2 * s_prev + (1.0 - beta2) * losses
+    blk = pos // block
+    nb = qs.s_scale.shape[0]
+    need_s = jnp.zeros((nb,), jnp.float32).at[blk].max(
+        jnp.where(mask, jnp.abs(s_new), 0.0) / _QMAX)
+    need_w = jnp.zeros((nb,), jnp.float32).at[blk].max(
+        jnp.where(mask, jnp.abs(w_new), 0.0) / _QMAX)
+    new_ss = jnp.maximum(qs.s_scale, need_s)
+    new_ws = jnp.maximum(qs.w_scale, need_w)
+    grew = jnp.any(new_ss > qs.s_scale) | jnp.any(new_ws > qs.w_scale)
+    row_blk = jnp.arange(qs.s_q.shape[0], dtype=jnp.int32) // block
+
+    def recode():
+        rs = (qs.s_scale / new_ss)[row_blk]      # <= 1: no clipping needed
+        rw = (qs.w_scale / new_ws)[row_blk]
+        return (jnp.round(qs.s_q.astype(jnp.float32) * rs).astype(jnp.int8),
+                jnp.round(qs.w_q.astype(jnp.float32) * rw).astype(jnp.int8))
+
+    s_q, w_q = jax.lax.cond(grew, recode, lambda: (qs.s_q, qs.w_q))
+    return dataclasses.replace(qs, s_q=s_q, w_q=w_q,
+                               s_scale=new_ss, w_scale=new_ws)
+
+
+def _q_ring_slots(err_seq: jax.Array, mask: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Assign ring slots + recency stamps to a batch: the oldest slots
+    are recycled, owned entries take the OLDEST of the recycled slots
+    (masked entries draw the sentinel ranks and the newer candidates —
+    their writes are dropped, so those slots keep their residuals), and
+    stamps increase with batch position so within-batch duplicates
+    resolve last-wins."""
+    B = mask.shape[0]
+    R = err_seq.shape[0]
+    k = min(B, R)
+    oldest = jnp.argsort(err_seq).astype(jnp.int32)
+    base = jnp.max(err_seq) + 1
+    # stable sort: masked entries first (they draw the dropped ranks),
+    # owned entries keep batch order among themselves
+    perm = jnp.argsort(mask.astype(jnp.int32))
+    # sentinels first, then the k recycle candidates NEWEST-first: the
+    # masked entries (front ranks) soak up the sentinels and the newer
+    # candidates, the owned entries (back ranks) land on the truly
+    # oldest slots — a small per-shard ring evicts cold entries, never
+    # the freshest live residuals
+    by_rank_slot = jnp.concatenate(
+        [jnp.full((B - k,), R, jnp.int32), oldest[:k][::-1]])
+    by_rank_seq = base + jnp.arange(B, dtype=jnp.int32)
+    slots = jnp.zeros((B,), jnp.int32).at[perm].set(by_rank_slot)
+    seqs = jnp.zeros((B,), jnp.int32).at[perm].set(by_rank_seq)
+    return slots, seqs
+
+
+def _q_apply_fixed(qs: QuantizedScores, pos: jax.Array, mask: jax.Array,
+                   gids: jax.Array, losses: jax.Array, beta1: float,
+                   beta2: float, block: int, slots: jax.Array,
+                   seqs: jax.Array) -> QuantizedScores:
+    """Fixed-scale dequant -> Eq. (3.1) -> requant + residual ring write,
+    in XLA scatter form — the oracle semantics the Pallas kernel is
+    pinned to (expression order kept identical for bit-parity on
+    unique-id batches)."""
+    n = qs.s_q.shape[0]
+    blk = pos // block
+    ssc = qs.s_scale[blk]
+    wsc = qs.w_scale[blk]
+    s_prev = _q_gather_1d(qs.s_q, qs.s_scale, block, qs.err_rows,
+                          qs.err_seq, qs.err_s, pos, gids)
+    w_new = weights_from_prev(s_prev, losses, beta1)
+    s_new = beta2 * s_prev + (1.0 - beta2) * losses
+    q_s = jnp.clip(jnp.round(s_new / ssc), -_QMAX, _QMAX)
+    q_w = jnp.clip(jnp.round(w_new / wsc), -_QMAX, _QMAX)
+    e_s = s_new - q_s * ssc
+    e_w = w_new - q_w * wsc
+    oob = jnp.where(mask, pos, n)
+    adds = jnp.zeros((n,), jnp.int32).at[oob].add(1, mode="drop")
+    slot = jnp.where(mask, slots, qs.err_rows.shape[0])
+    return dataclasses.replace(
+        qs,
+        s_q=qs.s_q.at[oob].set(q_s.astype(jnp.int8), mode="drop"),
+        w_q=qs.w_q.at[oob].set(q_w.astype(jnp.int8), mode="drop"),
+        seen_q=jnp.minimum(qs.seen_q.astype(jnp.int32) + adds,
+                           127).astype(jnp.int8),
+        err_rows=qs.err_rows.at[slot].set(gids, mode="drop"),
+        err_seq=qs.err_seq.at[slot].set(seqs, mode="drop"),
+        err_s=qs.err_s.at[slot].set(e_s, mode="drop"),
+        err_w=qs.err_w.at[slot].set(e_w, mode="drop"))
+
+
+def _q_update_local(qs: QuantizedScores, local_ids: jax.Array,
+                    gids: jax.Array, losses: jax.Array, beta1: float,
+                    beta2: float, block: int, use_kernel: bool,
+                    interpret: Optional[bool]) -> QuantizedScores:
+    """One slice's full update: mask out-of-range rows, grow scales,
+    assign ring slots, then apply via the fused kernel or XLA scatters."""
+    n = qs.s_q.shape[0]
+    mask = (local_ids >= 0) & (local_ids < n)
+    pos = jnp.where(mask, local_ids, 0)
+    mgids = jnp.where(mask, gids, -1)
+    qs = _q_grow_scales(qs, pos, mask, mgids, losses, beta1, beta2, block)
+    slots, seqs = _q_ring_slots(qs.err_seq, mask)
+    if use_kernel:
+        from ..kernels.score_update.score_update import (
+            fused_quant_score_update)
+        lids = jnp.where(mask, pos, -1)       # masked kernel: -1 skipped
+        out = fused_quant_score_update(
+            qs.s_q, qs.w_q, qs.seen_q, qs.s_scale, qs.w_scale,
+            qs.err_rows, qs.err_seq, qs.err_s, qs.err_w,
+            lids, mgids, losses, slots, seqs,
+            beta1=beta1, beta2=beta2, block=block,
+            interpret=bool(interpret))
+        s_q, w_q, seen_q, e_r, e_t, e_s, e_w = out
+        return dataclasses.replace(qs, s_q=s_q, w_q=w_q, seen_q=seen_q,
+                                   err_rows=e_r, err_seq=e_t,
+                                   err_s=e_s, err_w=e_w)
+    return _q_apply_fixed(qs, pos, mask, mgids, losses, beta1, beta2,
+                          block, slots, seqs)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedStore(ScoreStore):
+    """Int8 decorator over a Replicated/Sharded backend: same protocol,
+    ~4x smaller state (3 int8 rows + per-block scales + a fixed-size
+    residual ring vs 12 B/row), optional int8 wire for the cross-shard
+    legs.
+
+    Placement is delegated to ``inner`` (row routing, mesh, per-process
+    ownership); the quantized leaf layout, the grow-only per-``block``
+    scales, and the error-feedback ring are this class's concern.  With
+    ``wire=True`` the sharded gather psum and the candidate-merge select
+    also ship int8+scale payloads (``distributed.compression``) — off by
+    default so the sharded backend stays bit-identical to the replicated
+    one and only the storage grid is lossy.  (The bitwise claim holds
+    while no LIVE residual is evicted: the ring is partitioned per shard,
+    so once the working set overflows it, which rows fall back to the
+    grid differs between layouts — both stay within scale/2 of the f32
+    recursion either way.)
+    """
+
+    inner: ScoreStore = None
+    block: int = 1024           # rows per scale (clamped to the shard)
+    residual_rows: int = 1024   # error-feedback ring size (global)
+    wire: bool = False
+
+    @property
+    def sharding(self) -> Optional[ScoreSharding]:       # protocol slot
+        return self.inner.sharding
+
+    @property
+    def is_process_local(self) -> bool:
+        return getattr(self.inner, "is_process_local", False)
+
+    # -- layout ----------------------------------------------------------
+    def _layout(self, rows_local: int) -> Tuple[int, int, int]:
+        """(eff_block, n_blocks, ring_rows) for THIS process's leaves."""
+        if isinstance(self.inner, ShardedStore):
+            ss = self.inner.sharding
+            shard = ss.shard_size(rows_local)
+            blk = min(self.block, shard)
+            if shard % blk != 0:
+                raise ValueError(
+                    f"quant block {self.block} does not divide the "
+                    f"{shard}-row shard; pick a divisor")
+            nb = ss.n_shards * (shard // blk)
+            nproc = self._nproc()
+            per_shard = -(-self.residual_rows // (nproc * ss.n_shards))
+            return blk, nb, max(1, per_shard) * ss.n_shards
+        blk = min(self.block, rows_local)
+        return blk, -(-rows_local // blk), self.residual_rows
+
+    def _nproc(self) -> int:
+        if self.is_process_local:
+            comm = ShardedStore._comm()
+            return comm.process_count if comm else 1
+        return 1
+
+    def _rows_local(self, n: int) -> int:
+        return n // self._nproc() if self.is_process_local else n
+
+    def validate(self, n: int) -> None:
+        self.inner.validate(n)
+        self._layout(self._rows_local(n))
+
+    def init_leaf(self, n: int) -> QuantizedScores:
+        self.inner.validate(n)
+        rows = self._rows_local(n)
+        blk, nb, ring = self._layout(rows)
+        ss = self.inner.sharding
+        n_logical = n if ss is None or ss.n_global is None else ss.n_global
+        qs = _q_init_leaf(rows, nb, ring, n_logical)
+        if ss is not None:
+            ns = ss.named_sharding()
+            qs = jax.tree.map(lambda x: jax.device_put(x, ns), qs)
+        return qs
+
+    # -- device ops ------------------------------------------------------
+    def update(self, qs, ids, losses, beta1, beta2, *, fused=False,
+               interpret=None):
+        losses = losses.astype(jnp.float32)
+        use_kernel = fused and (interpret is not None or _on_tpu())
+        if not isinstance(self.inner, ShardedStore):
+            blk, _, _ = self._layout(qs.s_q.shape[0])
+            return _q_update_local(qs, ids, ids, losses, beta1, beta2,
+                                   blk, use_kernel, interpret)
+        ss = self.inner.sharding
+        shard = ss.shard_size(qs.s_q.shape[0])
+        blk, _, _ = self._layout(qs.s_q.shape[0])
+        base = ss.offset
+        b1, b2 = beta1, beta2
+
+        def body(qs_local, ids_, ls):
+            row0 = base + ss.shard_index() * shard
+            local = ids_ - row0
+            return _q_update_local(qs_local, local, ids_, ls, b1, b2,
+                                   blk, use_kernel, interpret)
+
+        sp = ss.spec()
+        spec_tree = jax.tree.map(lambda _: sp, qs)
+        return shard_map(body, mesh=ss.mesh,
+                         in_specs=(spec_tree, P(), P()),
+                         out_specs=spec_tree, check_rep=False)(
+                             qs, ids, losses)
+
+    def gather(self, qs, ids):
+        if not isinstance(self.inner, ShardedStore):
+            n = qs.s_q.shape[0]
+            blk, _, _ = self._layout(n)
+            pos = jnp.clip(ids, 0, n - 1)
+            s = _q_gather_1d(qs.s_q, qs.s_scale, blk, qs.err_rows,
+                             qs.err_seq, qs.err_s, pos, ids)
+            w = _q_gather_1d(qs.w_q, qs.w_scale, blk, qs.err_rows,
+                             qs.err_seq, qs.err_w, pos, ids)
+            return s, w
+        ss = self.inner.sharding
+        shard = ss.shard_size(qs.s_q.shape[0])
+        blk, _, _ = self._layout(qs.s_q.shape[0])
+        base = ss.offset
+        wire = self.wire and len(ss.axes) == 1
+
+        def body(qs_local, ids_):
+            row0 = base + ss.shard_index() * shard
+            local = ids_ - row0
+            mask = (local >= 0) & (local < shard)
+            pos = jnp.where(mask, local, 0)
+            mgids = jnp.where(mask, ids_, -1)
+            s_v = jnp.where(mask, _q_gather_1d(
+                qs_local.s_q, qs_local.s_scale, blk, qs_local.err_rows,
+                qs_local.err_seq, qs_local.err_s, pos, mgids), 0.0)
+            w_v = jnp.where(mask, _q_gather_1d(
+                qs_local.w_q, qs_local.w_scale, blk, qs_local.err_rows,
+                qs_local.err_seq, qs_local.err_w, pos, mgids), 0.0)
+            if wire:
+                from ..distributed.compression import compressed_psum_sum
+                return (compressed_psum_sum(s_v, ss.axes[0], ss.n_shards),
+                        compressed_psum_sum(w_v, ss.axes[0], ss.n_shards))
+            return (jax.lax.psum(s_v, ss.axes), jax.lax.psum(w_v, ss.axes))
+
+        sp = ss.spec()
+        spec_tree = jax.tree.map(lambda _: sp, qs)
+        s_v, w_v = shard_map(body, mesh=ss.mesh, in_specs=(spec_tree, P()),
+                             out_specs=(P(), P()), check_rep=False)(qs, ids)
+        comm = ShardedStore._comm() if self.is_process_local else None
+        if comm is not None:
+            if self.wire:
+                s_v = jnp.asarray(
+                    comm.allreduce_sum_compressed(np.asarray(s_v)))
+                w_v = jnp.asarray(
+                    comm.allreduce_sum_compressed(np.asarray(w_v)))
+            else:
+                s_v = jnp.asarray(comm.allreduce_sum(np.asarray(s_v)))
+                w_v = jnp.asarray(comm.allreduce_sum(np.asarray(w_v)))
+        return s_v, w_v
+
+    def select(self, key, weights, k):
+        if not self.wire or not isinstance(self.inner, ShardedStore):
+            return self.inner.select(key, weights, k)
+        return self._select_wire(key, weights, k)
+
+    def _select_wire(self, key, weights, k):
+        """Candidate-merge Gumbel top-k with an int8 wire: each shard
+        ships its top-m keys affine-quantized to int8 (per-shard offset +
+        scale, 127 steps over the shard's candidate span) and int16
+        in-shard positions — 3 B/candidate + 8 B/shard instead of 8
+        B/candidate.  Selection runs on the dequantized keys, so merges
+        can differ from the exact path within one key-grid step (flagged
+        mode; ``wire=False`` keeps the bit-exact merge)."""
+        from .selection import gumbel_topk_select
+        ss = self.inner.sharding
+        B = weights.shape[0]
+        if (self.is_process_local or B % ss.n_shards != 0
+                or len(ss.axes) != 1 or B // ss.n_shards > 32767):
+            return gumbel_topk_select(key, weights, k)
+        n_local = B // ss.n_shards
+        m = min(k, n_local)
+        ax = ss.axes[0]
+
+        def body(w_local):
+            lo = ss.shard_index() * n_local
+            g = jax.random.gumbel(key, (B,), jnp.float32)
+            g_local = jax.lax.dynamic_slice(g, (lo,), (n_local,))
+            logw = jnp.log(jnp.maximum(w_local.astype(jnp.float32), 1e-20))
+            kv, ki = jax.lax.top_k(logw + g_local, m)
+            off = kv[0]                       # shard max (top_k is sorted)
+            sc = jnp.maximum((off - kv[m - 1]) / _QMAX, _SCALE_FLOOR)
+            q = jnp.clip(jnp.round((kv - off) / sc), -_QMAX, 0.0
+                         ).astype(jnp.int8)
+            q_all = jax.lax.all_gather(q, ax, tiled=True)
+            id_all = jax.lax.all_gather(ki.astype(jnp.int16), ax, tiled=True)
+            off_all = jax.lax.all_gather(off[None], ax, tiled=True)
+            sc_all = jax.lax.all_gather(sc[None], ax, tiled=True)
+            src = jnp.arange(ss.n_shards * m, dtype=jnp.int32) // m
+            keys_deq = off_all[src] + q_all.astype(jnp.float32) * sc_all[src]
+            _, sel = jax.lax.top_k(keys_deq, k)
+            gids = id_all.astype(jnp.int32) + src * n_local
+            return gids[sel]
+
+        return shard_map(body, mesh=ss.mesh, in_specs=ss.spec(),
+                         out_specs=P(), check_rep=False)(weights)
+
+    # -- host ops --------------------------------------------------------
+    @staticmethod
+    def _dequant_blocks_host(q_blocks, scale_blocks, block, ring_np,
+                             offsets):
+        """Host-side dequant of row blocks + newest-wins residual
+        application (entries applied in recency order; rows outside the
+        blocks are ignored — they belong to another owner)."""
+        rows_all, seq_all, val_all = ring_np
+        order = np.argsort(seq_all, kind="stable")
+        rows_o, seq_o, val_o = (rows_all[order], seq_all[order],
+                                val_all[order])
+        live = seq_o > 0
+        rows_o, val_o = rows_o[live], val_o[live]
+        out = []
+        for q, sc, off in zip(q_blocks, scale_blocks, offsets):
+            L = len(q)
+            nb = len(sc)
+            blk = -(-L // nb) if nb else block
+            pad = nb * blk - L
+            deq = (np.pad(q.astype(np.float32), (0, pad)).reshape(nb, blk)
+                   * sc[:, None]).reshape(-1)[:L]
+            here = (rows_o >= off) & (rows_o < off + L)
+            for r, v in zip(rows_o[here], val_o[here]):
+                deq[r - off] = deq[r - off] + v      # newest wins (sorted)
+            out.append(deq)
+        return out
+
+    def prune_snapshot(self, qs):
+        from .pruning import QuantPruneSnapshot
+        blk, _, _ = self._layout(qs.s_q.shape[0])
+        if not isinstance(self.inner, ShardedStore):
+            ring_s = (np.asarray(qs.err_rows), np.asarray(qs.err_seq),
+                      np.asarray(qs.err_s))
+            ring_w = (np.asarray(qs.err_rows), np.asarray(qs.err_seq),
+                      np.asarray(qs.err_w))
+            offs = [0]
+            losses = self._dequant_blocks_host(
+                [np.asarray(qs.s_q)], [np.asarray(qs.s_scale)], blk,
+                ring_s, offs)
+            weights = self._dequant_blocks_host(
+                [np.asarray(qs.w_q)], [np.asarray(qs.w_scale)], blk,
+                ring_w, offs)
+            return QuantPruneSnapshot(
+                weights=weights, losses=losses,
+                seen=[np.asarray(qs.seen_q).astype(np.int32)],
+                offsets=np.asarray(offs, np.int64),
+                n=int(qs.s_q.shape[0]),
+                q_losses=[np.asarray(qs.s_q)],
+                q_scales=[np.asarray(qs.s_scale)], q_block=blk)
+        inner = self.inner
+        sq_blocks, offs = inner._local_blocks(qs.s_q)
+        wq_blocks, _ = inner._local_blocks(qs.w_q)
+        seen_blocks, _ = inner._local_blocks(qs.seen_q)
+        ssc_blocks, _ = inner._local_blocks(qs.s_scale)
+        wsc_blocks, _ = inner._local_blocks(qs.w_scale)
+        er_blocks, _ = inner._local_blocks(qs.err_rows)
+        et_blocks, _ = inner._local_blocks(qs.err_seq)
+        es_blocks, _ = inner._local_blocks(qs.err_s)
+        ew_blocks, _ = inner._local_blocks(qs.err_w)
+        ring_rows = np.concatenate(er_blocks)
+        ring_seq = np.concatenate(et_blocks)
+        losses = self._dequant_blocks_host(
+            sq_blocks, ssc_blocks, blk,
+            (ring_rows, ring_seq, np.concatenate(es_blocks)), offs)
+        weights = self._dequant_blocks_host(
+            wq_blocks, wsc_blocks, blk,
+            (ring_rows, ring_seq, np.concatenate(ew_blocks)), offs)
+        n = inner.sharding.n_global if self.is_process_local \
+            else int(qs.s_q.shape[0])
+        comm = ShardedStore._comm()
+        covers = sum(len(b) for b in sq_blocks) == n
+        if comm is not None and not self.is_process_local and covers:
+            comm = None           # full local view: prune alone, same rng
+        if comm is None and not covers:
+            raise AssertionError(
+                f"prune_snapshot: local blocks cover "
+                f"{sum(len(b) for b in sq_blocks)} of {n} rows but no "
+                "host collective is available")
+        return QuantPruneSnapshot(
+            weights=weights, losses=losses,
+            seen=[b.astype(np.int32) for b in seen_blocks],
+            offsets=np.asarray(offs, np.int64), n=int(n), comm=comm,
+            q_losses=sq_blocks, q_scales=ssc_blocks, q_block=blk,
+            wire=self.wire)
+
+    # -- placement plumbing ----------------------------------------------
+    def leaf_sharding(self) -> Optional[NamedSharding]:
+        return self.inner.leaf_sharding()
+
+    def checkpoint_spec(self) -> dict:
+        return {"kind": "quantized", "block": int(self.block),
+                "residual_rows": int(self.residual_rows),
+                "wire": bool(self.wire),
+                "inner": self.inner.checkpoint_spec()}
+
+    def checkpoint_partition(self) -> Optional[dict]:
+        part = self.inner.checkpoint_partition()
+        if part is None:
+            return None
+        # quantized leaves have heterogeneous lengths (rows vs scale
+        # blocks vs ring slots), all split evenly across processes: the
+        # block offset of every leaf is rank * local length
+        part = dict(part)
+        part["per_leaf"] = True
+        part["rank"] = part["comm"].process_index
+        return part
+
+
+def make_store(sharding: Optional[ScoreSharding] = None, *,
+               quantize: bool = False, block: int = 1024,
+               residual_rows: int = 1024, wire: bool = False) -> ScoreStore:
     """The backend for a row layout: ``ShardedStore`` over a
-    ``ScoreSharding``, else the replicated default."""
-    if sharding is None:
-        return ReplicatedStore()
-    return ShardedStore(sharding)
+    ``ScoreSharding``, else the replicated default; ``quantize=True``
+    wraps either in the int8 ``QuantizedStore`` (``block`` rows per
+    scale, ``residual_rows`` error-feedback slots, ``wire=True`` for
+    int8 cross-shard payloads)."""
+    inner: ScoreStore = ReplicatedStore() if sharding is None \
+        else ShardedStore(sharding)
+    if not quantize:
+        return inner
+    return QuantizedStore(inner, block=block, residual_rows=residual_rows,
+                          wire=wire)
 
 
 # ---------------------------------------------------------------------------

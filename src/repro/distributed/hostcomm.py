@@ -93,6 +93,30 @@ class HostComm:
             out += p
         return out.reshape(x.shape)
 
+    def allreduce_sum_compressed(self, x: np.ndarray,
+                                 block: int = 256) -> np.ndarray:
+        """Elementwise f32 sum over processes with int8+per-block-scale
+        payloads: ~4x less KV-store traffic than the f32 allgather (the
+        np.save encoding is dtype-exact, so int8 really ships 1 B/elem).
+        Lossy by one int8 grid per contribution — meant for the quantized
+        score store's ``wire=True`` gather completion, where each element
+        has exactly one non-zero contributor."""
+        x32 = np.asarray(x, np.float32).reshape(-1)
+        n = x32.size
+        nb = max(1, -(-n // block))
+        pad = nb * block - n
+        xp = np.pad(x32, (0, pad)).reshape(nb, block)
+        scales = np.maximum(np.abs(xp).max(axis=1) / 127.0, 1e-12
+                            ).astype(np.float32)
+        q = np.clip(np.round(xp / scales[:, None]), -127, 127
+                    ).astype(np.int8)
+        parts_q = self.allgather(q)
+        parts_s = self.allgather(scales)
+        out = np.zeros((nb, block), np.float32)
+        for qp, sp in zip(parts_q, parts_s):
+            out += qp.astype(np.float32) * sp[:, None]
+        return out.reshape(-1)[:n].reshape(np.shape(x))
+
     def allreduce_max(self, x) -> np.ndarray:
         x = np.asarray(x)
         parts = self.allgather(x.reshape(-1))

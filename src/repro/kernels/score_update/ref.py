@@ -25,3 +25,39 @@ def score_update_ref(s: jax.Array, w: jax.Array, seen: jax.Array,
     s_new = beta2 * s_prev + (1.0 - beta2) * losses
     return (s.at[ids].set(s_new), w.at[ids].set(w_new),
             seen.at[ids].add(1))
+
+
+def quant_score_update_ref(s_q, w_q, seen_q, s_scale, w_scale,
+                           err_rows, err_seq, err_s, err_w,
+                           ids, gids, losses, slots, seqs, *,
+                           beta1: float, beta2: float, block: int):
+    """XLA oracle for ``fused_quant_score_update`` — the fixed-scale
+    dequant/update/requant + ring write in scatter form (it shares the
+    exact expression order via ``core.scores._q_apply_fixed``).
+
+    Contract (UNIQUE in-range ids, no recycled ring slot holding a live
+    residual for a later id in the batch — the kernel reads the ring as
+    it mutates, XLA reads the pre-batch ring): the int8 codes, seen
+    counts, and ring ids/stamps are BIT-identical; the f32 residuals
+    (err_s/err_w) agree only to a few ulps of the pre-cancellation
+    magnitude (|s_new|, not |e|), because ``e = s_new - q*scale`` is a
+    catastrophic cancellation and XLA may contract the multiply-subtract
+    into an FMA in one lowering but not the other.  The slack is orders
+    of magnitude below the quantization grid, so every downstream code
+    is unaffected.  For duplicate ids the same divergence as the f32
+    pair applies: XLA scatters from the original codes, the kernel
+    applies the recursion sequentially.  ids < 0 are dropped (masked
+    semantics), matching the kernel's ``pl.when`` skip.
+    """
+    from ...core.scores import QuantizedScores, _q_apply_fixed
+    n = s_q.shape[0]
+    mask = (ids >= 0) & (ids < n)
+    pos = jnp.where(mask, ids, 0)
+    qs = QuantizedScores(s_q=s_q, w_q=w_q, seen_q=seen_q, s_scale=s_scale,
+                         w_scale=w_scale, err_rows=err_rows,
+                         err_seq=err_seq, err_s=err_s, err_w=err_w)
+    out = _q_apply_fixed(qs, pos, mask, jnp.where(mask, gids, -1),
+                         losses.astype(jnp.float32), beta1, beta2, block,
+                         slots, seqs)
+    return (out.s_q, out.w_q, out.seen_q, out.err_rows, out.err_seq,
+            out.err_s, out.err_w)

@@ -85,3 +85,121 @@ def fused_score_update(s: jax.Array, w: jax.Array, seen: jax.Array,
         input_output_aliases={0: 0, 1: 1, 2: 2},
         interpret=interpret,
     )(s, w, seen, ids, losses.astype(jnp.float32))
+
+
+def _quant_score_kernel(s_ref, w_ref, seen_ref, ssc_ref, wsc_ref,
+                        er_ref, et_ref, es_ref, ew_ref,
+                        ids_ref, gids_ref, losses_ref, slots_ref, seqs_ref,
+                        s_out, w_out, seen_out, er_out, et_out, es_out,
+                        ew_out, *, beta1: float, beta2: float, block: int,
+                        n_updates: int, ring: int):
+    """Int8 scatter with in-kernel dequant -> Eq. (3.1) -> requant and
+    residual-ring write-back.  Scales are FIXED here (the scale-growth
+    prologue runs in XLA before the call); negative ids are skipped (the
+    per-shard masked dispatch).  Sequential like the f32 kernel: a
+    duplicate id sees the earlier occurrence's code AND ring entry."""
+    s_out[...] = s_ref[...]
+    w_out[...] = w_ref[...]
+    seen_out[...] = seen_ref[...]
+    er_out[...] = er_ref[...]
+    et_out[...] = et_ref[...]
+    es_out[...] = es_ref[...]
+    ew_out[...] = ew_ref[...]
+
+    def body(i, _):
+        idx = ids_ref[i]
+
+        def apply():
+            gid = gids_ref[i]
+            loss = losses_ref[i]
+            blk = idx // block
+            ssc = ssc_ref[pl.dslice(blk, 1)]
+            wsc = wsc_ref[pl.dslice(blk, 1)]
+            # newest matching residual: one vector scan of the (R,) ring
+            # (expression order mirrors core.scores._q_gather_1d for
+            # bit-parity with the XLA oracle)
+            hit = er_out[...] == gid
+            stamped = jnp.where(hit, et_out[...], 0)
+            newest = jnp.argmax(stamped)
+            has = jnp.max(stamped) > 0
+            deq = s_out[pl.dslice(idx, 1)].astype(jnp.float32) * ssc
+            resid = jnp.where(has, es_out[pl.dslice(newest, 1)], 0.0)
+            s_prev = deq + resid
+            w_new = beta1 * s_prev + (1.0 - beta1) * loss
+            s_new = beta2 * s_prev + (1.0 - beta2) * loss
+            q_s = jnp.clip(jnp.round(s_new / ssc), -127.0, 127.0)
+            q_w = jnp.clip(jnp.round(w_new / wsc), -127.0, 127.0)
+            s_out[pl.dslice(idx, 1)] = q_s.astype(jnp.int8)
+            w_out[pl.dslice(idx, 1)] = q_w.astype(jnp.int8)
+            seen_out[pl.dslice(idx, 1)] = jnp.minimum(
+                seen_out[pl.dslice(idx, 1)].astype(jnp.int32) + 1,
+                127).astype(jnp.int8)
+            slot = slots_ref[i]
+
+            def write_ring():
+                er_out[pl.dslice(slot, 1)] = gids_ref[pl.dslice(i, 1)]
+                et_out[pl.dslice(slot, 1)] = seqs_ref[pl.dslice(i, 1)]
+                es_out[pl.dslice(slot, 1)] = s_new - q_s * ssc
+                ew_out[pl.dslice(slot, 1)] = w_new - q_w * wsc
+
+            pl.when(slot < ring)(write_ring)
+
+        pl.when(idx >= 0)(apply)
+        return 0
+
+    jax.lax.fori_loop(0, n_updates, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("beta1", "beta2", "block",
+                                             "interpret"))
+def fused_quant_score_update(s_q: jax.Array, w_q: jax.Array,
+                             seen_q: jax.Array, s_scale: jax.Array,
+                             w_scale: jax.Array, err_rows: jax.Array,
+                             err_seq: jax.Array, err_s: jax.Array,
+                             err_w: jax.Array, ids: jax.Array,
+                             gids: jax.Array, losses: jax.Array,
+                             slots: jax.Array, seqs: jax.Array, *,
+                             beta1: float, beta2: float, block: int,
+                             interpret: bool = False):
+    """Quantized fused score update (one VMEM-resident kernel).
+
+    s_q/w_q/seen_q: (n,) int8 codes; s_scale/w_scale: (nb,) f32 per-block
+    scales (FIXED — callers run the grow/recode prologue first);
+    err_*: the (R,) residual ring; ids: (B,) LOCAL rows (-1 = dropped,
+    the shared masking rule); gids: (B,) global row ids recorded in the
+    ring; slots/seqs: precomputed ring slot assignment + recency stamps
+    (``core.scores._q_ring_slots``; slot >= R drops the residual).
+
+    Returns the 7 mutated leaves (codes, seen, ring) — scales pass
+    through untouched.  Matches ``ref.quant_score_update_ref`` on
+    unique-id batches: integer leaves bitwise, residuals to FMA slack
+    (see ref.py for the exact contract and duplicate/eviction caveats).
+    """
+    n = s_q.shape[0]
+    B = ids.shape[0]
+    R = err_rows.shape[0]
+    kernel = functools.partial(_quant_score_kernel, beta1=beta1,
+                               beta2=beta2, block=block, n_updates=B,
+                               ring=R)
+    ins = [s_q, w_q, seen_q, s_scale, w_scale, err_rows, err_seq, err_s,
+           err_w, ids, gids, losses.astype(jnp.float32), slots, seqs]
+    return pl.pallas_call(
+        kernel,
+        in_specs=[pl.BlockSpec(x.shape, lambda: (0,)) for x in ins],
+        out_specs=[pl.BlockSpec((n,), lambda: (0,)),
+                   pl.BlockSpec((n,), lambda: (0,)),
+                   pl.BlockSpec((n,), lambda: (0,)),
+                   pl.BlockSpec((R,), lambda: (0,)),
+                   pl.BlockSpec((R,), lambda: (0,)),
+                   pl.BlockSpec((R,), lambda: (0,)),
+                   pl.BlockSpec((R,), lambda: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int8),
+                   jax.ShapeDtypeStruct((n,), jnp.int8),
+                   jax.ShapeDtypeStruct((n,), jnp.int8),
+                   jax.ShapeDtypeStruct((R,), jnp.int32),
+                   jax.ShapeDtypeStruct((R,), jnp.int32),
+                   jax.ShapeDtypeStruct((R,), jnp.float32),
+                   jax.ShapeDtypeStruct((R,), jnp.float32)],
+        input_output_aliases={0: 0, 1: 1, 2: 2, 5: 3, 6: 4, 7: 5, 8: 6},
+        interpret=interpret,
+    )(*ins)

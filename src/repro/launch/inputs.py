@@ -17,7 +17,6 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from ..configs.base import ModelConfig, ShapeConfig
 from ..core.es_step import (CadenceState, ESConfig, TrainState,
                             init_train_state)
-from ..core.scores import ESScores
 from ..models.layers import ShardCtx
 from ..models.model import init_cache, cache_axes, encoder_len, image_tokens
 from ..models.transformer import init_lm
@@ -94,33 +93,39 @@ def abstract_params_and_axes(cfg: ModelConfig) -> Tuple[PyTree, PyTree]:
 def abstract_train_state(cfg: ModelConfig, es_cfg: ESConfig,
                          opt_cfg: OptConfig, meta_batch: int,
                          ctx: ShardCtx,
-                         shard_scores: bool = False) -> Tuple[PyTree, PyTree]:
+                         shard_scores: bool = False,
+                         store=None) -> Tuple[PyTree, PyTree]:
     """Returns (state_struct, state_shardings) matching TrainState.
 
-    ``shard_scores`` places the three ESScores (n,) arrays through the
-    ``ScoreStore`` backend built for the mesh (rows over the DP axes —
-    the same ``ShardedStore`` the trainer runs; replicated by default or
-    when the mesh has no DP extent).
+    The score leaves are STORE-generic: the struct comes from
+    ``jax.eval_shape`` of the backend's ``init_leaf`` (three f32/i32 rows
+    for the plain stores, the int8 codes + scales + residual ring for the
+    quantized one) and every leaf takes the backend's ``leaf_sharding()``.
+    Pass ``store`` explicitly, or ``shard_scores=True`` for the
+    ``ShardedStore`` built for the mesh (rows over the DP axes — the same
+    backend the trainer runs; replicated by default or when the mesh has
+    no DP extent).
     """
     from ..core.scores import make_store
     from ..distributed.sharding import score_store_sharding
+    if store is None:
+        store = make_store(score_store_sharding(ctx.mesh)
+                           if shard_scores else None)
     params_struct, axes = abstract_params_and_axes(cfg)
     state_struct = jax.eval_shape(
-        lambda key: init_train_state(cfg, es_cfg, opt_cfg, key, meta_batch),
+        lambda key: init_train_state(cfg, es_cfg, opt_cfg, key, meta_batch,
+                                     store=store),
         jax.random.PRNGKey(0))
 
     param_sh = axes_to_sharding(axes, ctx)
     repl = replicated(ctx)
-    score_sh = repl
-    if shard_scores:
-        store = make_store(score_store_sharding(ctx.mesh))
-        score_sh = store.leaf_sharding() or repl
+    score_sh = store.leaf_sharding() or repl
     opt_sh = OptState(
         step=repl, m=param_sh,
         v=param_sh if opt_cfg.kind == "adamw" else None)
     state_sh = TrainState(
         params=param_sh, opt=opt_sh,
-        scores=ESScores(s=score_sh, w=score_sh, seen=score_sh),
+        scores=jax.tree.map(lambda _: score_sh, state_struct.scores),
         rng=repl, pending_w=repl,
         cadence=CadenceState(drift_s=repl, drift_w=repl, period=repl,
                              last_scored=repl, since_prune=repl))

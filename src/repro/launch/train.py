@@ -77,6 +77,9 @@ class TrainerConfig:
     prune_max_interval: int = 4   # drift prune cadence: epochs backstop
     fused_scores: bool = True     # Pallas score_update kernel in the step
     shard_scores: bool = False    # row-shard ESScores over the DP devices
+    quant_scores: bool = False    # int8 score store with error feedback
+    quant_block: int = 1024       # rows per int8 scale block
+    quant_wire: bool = False      # int8 cross-shard gather/select payloads
     host_id: Optional[int] = None    # data-slicing host id; default:
     #                                  jax.process_index() (test override)
     num_hosts: Optional[int] = None  # default: jax.process_count()
@@ -185,7 +188,9 @@ class Trainer:
             if tc.shard_scores else None
         # the one placement decision: every consumer (engine legs, state
         # init, pruning, checkpoint) goes through this backend
-        self.score_store: ScoreStore = make_store(self.score_sharding)
+        self.score_store: ScoreStore = make_store(
+            self.score_sharding, quantize=tc.quant_scores,
+            block=tc.quant_block, wire=tc.quant_wire)
         cadence = CadenceConfig(
             kind="drift" if tc.freq_schedule == "drift" else "static",
             target=tc.drift_target,
@@ -575,6 +580,21 @@ def main() -> None:
                     help="row-shard the ES score store over the run's "
                          "devices (each holds n/D score rows; on a pod "
                          "the mesh spans hosts; replicated is the default)")
+    ap.add_argument("--quant-scores", action="store_true",
+                    help="int8 score store: the (s, w, seen) triple as "
+                         "int8 codes with per-block scales and an error-"
+                         "feedback residual ring (~4x smaller state; "
+                         "composes with --shard-scores)")
+    ap.add_argument("--quant-block", type=int, default=1024,
+                    help="quantized store: rows per scale block (must "
+                         "divide the shard when --shard-scores)")
+    ap.add_argument("--quant-wire", action="store_true",
+                    help="quantized store: also ship int8+scale payloads "
+                         "on the cross-shard gather/select legs (lossy by "
+                         "one grid step; off = storage-only quantization)")
+    ap.add_argument("--grad-compression", action="store_true",
+                    help="int8 error-feedback gradient compression on the "
+                         "DP reduce (distributed/compression.py)")
     ap.add_argument("--host-id", type=int, default=None,
                     help="data-slicing host id override (default: "
                          "jax.process_index(); tests use this to emulate "
@@ -623,6 +643,10 @@ def main() -> None:
                        prune_cadence=args.prune_cadence,
                        fused_scores=args.fused_scores,
                        shard_scores=args.shard_scores,
+                       quant_scores=args.quant_scores,
+                       quant_block=args.quant_block,
+                       quant_wire=args.quant_wire,
+                       grad_compression=args.grad_compression,
                        host_id=args.host_id, num_hosts=args.num_hosts,
                        source=args.source, data_path=args.data_path,
                        pack=args.pack, max_segments=args.max_segments,

@@ -193,3 +193,122 @@ def test_score_update_duplicate_id_semantics_pinned():
     rs, rw, rseen = score_update_ref(s, w, seen, ids, losses, beta1=b1,
                                      beta2=b2)
     np.testing.assert_allclose(float(rs[0]), 2.5)   # last write, original s
+
+
+# ---------------------------------------------------------------------------
+# quantized score update (int8 + error-feedback ring)
+# ---------------------------------------------------------------------------
+
+def _quant_setup(n, B, R=256, block=64, seed=0, steps=1):
+    """A quantized store advanced ``steps`` times plus one fresh batch —
+    the kernel/oracle comparison inputs (ids unique, clean ring)."""
+    from repro.core.scores import make_store
+    st = make_store(None, quantize=True, block=block, residual_rows=R)
+    qs = st.init_leaf(n)
+    rng = np.random.default_rng(seed)
+    for _ in range(steps - 1):
+        ids = jnp.asarray(rng.choice(n, B, replace=False), jnp.int32)
+        losses = jnp.asarray(rng.uniform(0.1, 2.0, B), jnp.float32)
+        qs = st.update(qs, ids, losses, 0.2, 0.9)
+    ids = jnp.asarray(rng.choice(n, B, replace=False), jnp.int32)
+    losses = jnp.asarray(rng.uniform(0.1, 2.0, B), jnp.float32)
+    return st, qs, ids, losses
+
+
+def _quant_kernel_vs_ref(qs, ids, gids, losses, block):
+    """Run both sides from identical post-prologue state; return outputs."""
+    from repro.core.scores import _q_grow_scales, _q_ring_slots
+    from repro.kernels.score_update.score_update import (
+        fused_quant_score_update)
+    from repro.kernels.score_update.ref import quant_score_update_ref
+    n = qs.s_q.shape[0]
+    mask = (ids >= 0) & (ids < n)
+    pos = jnp.where(mask, ids, 0)
+    mgids = jnp.where(mask, gids, -1)
+    qs = _q_grow_scales(qs, pos, mask, mgids, losses, 0.2, 0.9, block)
+    slots, seqs = _q_ring_slots(qs.err_seq, mask)
+    lids = jnp.where(mask, pos, -1)
+    args = (qs.s_q, qs.w_q, qs.seen_q, qs.s_scale, qs.w_scale,
+            qs.err_rows, qs.err_seq, qs.err_s, qs.err_w,
+            lids, mgids, losses, slots, seqs)
+    got = fused_quant_score_update(*args, beta1=0.2, beta2=0.9, block=block,
+                                   interpret=True)
+    want = quant_score_update_ref(*args, beta1=0.2, beta2=0.9, block=block)
+    return got, want
+
+
+def _assert_quant_contract(got, want):
+    """Integer leaves bitwise; residuals to FMA slack (see ref.py)."""
+    names = ("s_q", "w_q", "seen_q", "err_rows", "err_seq", "err_s", "err_w")
+    for name, g, x in zip(names, got, want):
+        if name in ("err_s", "err_w"):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(x),
+                                       atol=1e-7, err_msg=name)
+        else:
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(x),
+                                          err_msg=name)
+
+
+@pytest.mark.parametrize("n,B", [(256, 32), (1024, 64), (512, 17)])
+def test_quant_score_kernel_matches_oracle(n, B):
+    _, qs, ids, losses = _quant_setup(n, B)
+    got, want = _quant_kernel_vs_ref(qs, ids, ids, losses, 64)
+    _assert_quant_contract(got, want)
+
+
+def test_quant_score_kernel_masked_ids_skipped():
+    """Per-shard dispatch: -1 ids leave codes, seen AND ring untouched on
+    both sides (oob entries take the sentinel ring slot)."""
+    n, B = 256, 32
+    _, qs, ids, losses = _quant_setup(n, B, steps=2)
+    ids = ids.at[::2].set(-1)                       # drop half the batch
+    got, want = _quant_kernel_vs_ref(qs, ids, ids, losses, 64)
+    _assert_quant_contract(got, want)
+    # dropped rows' codes unchanged past the (shared, XLA) grow prologue
+    from repro.core.scores import _q_grow_scales
+    mask_b = (ids >= 0) & (ids < n)
+    grown = _q_grow_scales(qs, jnp.where(mask_b, ids, 0), mask_b,
+                           jnp.where(mask_b, ids, -1), losses, 0.2, 0.9, 64)
+    touched = np.asarray(ids)[np.asarray(ids) >= 0]
+    mask = np.ones(n, bool)
+    mask[touched] = False
+    np.testing.assert_array_equal(np.asarray(got[0])[mask],
+                                  np.asarray(grown.s_q)[mask])
+
+
+def test_quant_score_kernel_warm_ring_hits():
+    """Second update of the SAME rows: the kernel must find and apply the
+    ring residuals written by the first (the dequant+resid gather path)."""
+    n, B = 512, 48
+    st, qs, ids, losses = _quant_setup(n, B, steps=3)
+    got, want = _quant_kernel_vs_ref(qs, ids, ids, losses, 64)
+    _assert_quant_contract(got, want)
+    assert int(np.asarray(got[4]).max()) > 0        # ring actually stamped
+
+
+def test_quant_store_update_fused_matches_scatter():
+    """Store-level: update(fused=True, interpret) == update(fused=False)
+    under the same contract (codes bitwise, residuals to FMA slack)."""
+    from repro.core.scores import make_store
+    st, qs, ids, losses = _quant_setup(512, 64, steps=2)
+    a = st.update(qs, ids, losses, 0.2, 0.9, fused=True, interpret=True)
+    b = st.update(qs, ids, losses, 0.2, 0.9, fused=False)
+    for f in ("s_q", "w_q", "seen_q", "s_scale", "w_scale", "err_rows",
+              "err_seq"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+    for f in ("err_s", "err_w"):
+        np.testing.assert_allclose(np.asarray(getattr(a, f)),
+                                   np.asarray(getattr(b, f)), atol=1e-7,
+                                   err_msg=f)
+
+
+def test_quant_store_fused_falls_back_off_tpu():
+    """fused=True with interpret unset on CPU routes to the XLA scatter
+    (no Pallas compile attempt) — identical to fused=False."""
+    from repro.core.scores import make_store
+    st, qs, ids, losses = _quant_setup(256, 32)
+    a = st.update(qs, ids, losses, 0.2, 0.9, fused=True)   # CPU: falls back
+    b = st.update(qs, ids, losses, 0.2, 0.9, fused=False)
+    np.testing.assert_array_equal(np.asarray(a.s_q), np.asarray(b.s_q))
+    np.testing.assert_array_equal(np.asarray(a.err_s), np.asarray(b.err_s))

@@ -280,3 +280,155 @@ def test_cluster_checkpoint_restores_onto_8dev_mesh(tmp_path):
             os.environ.pop("REPRO_CKPT_DIR", None)
         else:
             os.environ["REPRO_CKPT_DIR"] = env_saved
+
+
+# ---------------------------------------------------------------------------
+# Quantized store (ISSUE 7): process-local int8 rows + compressed host legs
+# ---------------------------------------------------------------------------
+
+_QUANT_WORKLOAD = textwrap.dedent("""
+    import hashlib
+    import numpy as np
+    import jax, jax.numpy as jnp
+
+    N, B, T = 64, 16, 5
+    QKW = dict(quantize=True, block=8, residual_rows=1024)
+
+    def stream():
+        rng = np.random.default_rng(0)
+        for _ in range(T):
+            ids = rng.choice(N, B, replace=False)
+            losses = rng.uniform(0.1, 3.0, B).astype(np.float32)
+            yield (jnp.asarray(ids, jnp.int32), jnp.asarray(losses))
+
+    def digest(*arrays):
+        h = hashlib.sha1()
+        for a in arrays:
+            h.update(np.ascontiguousarray(np.asarray(a)))
+        return h.hexdigest()[:16]
+
+    def run_quant(store):
+        qs = store.init_leaf(N)
+        gather_digs = []
+        for ids, losses in stream():
+            qs = store.update(qs, ids, losses, 0.2, 0.9)
+            s_g, w_g = store.gather(qs, ids)
+            gather_digs.append(digest(s_g, w_g))
+        return qs, gather_digs
+""")
+
+
+def _quant_reference_digests():
+    """Single-process replicated-quant digests + full losses (the anchor;
+    the parent's 1-device backend runs it in-process)."""
+    mod = {}
+    exec(compile(_QUANT_WORKLOAD, "<quant_workload>", "exec"), mod)
+    from repro.core.scores import make_store
+    store = make_store(None, **mod["QKW"])
+    qs, gather_digs = mod["run_quant"](store)
+    codes_dig = mod["digest"](qs.s_q, qs.w_q, qs.seen_q,
+                              qs.s_scale, qs.w_scale)
+    losses_full = store.prune_snapshot(qs).full_losses()
+    return qs, codes_dig, gather_digs, losses_full
+
+
+def test_cluster_quantized_store_matches_single_process():
+    """2-process per-process-rows QuantizedStore: int8 codes, scales,
+    gathers and assembled prune losses all bit-equal the 1-process
+    replicated-quant run (wire=False), and the int8-wire gather stays
+    within one grid step."""
+    _, codes_dig, gather_digs, losses_full = _quant_reference_digests()
+    code = _QUANT_WORKLOAD + textwrap.dedent("""
+        import dataclasses
+        from jax.sharding import Mesh
+        from repro.core.scores import ScoreSharding, make_store
+        from repro.distributed.hostcomm import get_comm
+
+        P, pid = jax.process_count(), jax.process_index()
+        comm = get_comm()
+        n_local = N // P
+        mesh = Mesh(np.array(jax.local_devices()), ("data",))
+        store = make_store(ScoreSharding(mesh, ("data",), n_global=N,
+                                         offset=pid * n_local), **QKW)
+        store.validate(N)
+        qs, gather_digs = run_quant(store)
+        gs = np.concatenate(comm.allgather(np.asarray(qs.s_q)))
+        gw = np.concatenate(comm.allgather(np.asarray(qs.w_q)))
+        gseen = np.concatenate(comm.allgather(np.asarray(qs.seen_q)))
+        gss = np.concatenate(comm.allgather(np.asarray(qs.s_scale)))
+        gws = np.concatenate(comm.allgather(np.asarray(qs.w_scale)))
+        print("CODES", digest(gs, gw, gseen, gss, gws))
+        print("GATHERS", ",".join(gather_digs))
+        snap = store.prune_snapshot(qs)
+        full = snap.full_losses()
+        print("LOSSES", digest(full))
+        # the int8 wire completion stays within one grid step of exact
+        wired = dataclasses.replace(store, wire=True)
+        ids = jnp.arange(N, dtype=jnp.int32)
+        s_e, w_e = store.gather(qs, ids)
+        s_w, w_w = wired.gather(qs, ids)
+        tol = float(jnp.max(jnp.abs(s_e))) / 127.0 + 1e-7
+        assert float(jnp.max(jnp.abs(s_w - s_e))) <= tol
+        print("OK")
+    """)
+    outs = run_cluster(code)
+    ref_losses_dig = None
+    for out in outs:
+        assert _parse("CODES", out) == codes_dig
+        assert _parse("GATHERS", out) == ",".join(gather_digs)
+        ref_losses_dig = _parse("LOSSES", out)
+    # assembled prune losses equal the single-process snapshot
+    import hashlib
+    h = hashlib.sha1()
+    h.update(np.ascontiguousarray(losses_full))
+    assert ref_losses_dig == h.hexdigest()[:16]
+
+
+def test_cluster_quantized_checkpoint_restores_on_one_process(tmp_path):
+    """2-process per-leaf partitioned quantized checkpoint -> 1-process
+    replicated-quant restore: codes and scales bitwise, gathers exact
+    (every live residual rides along in the ring blocks)."""
+    ref_qs, _, _, ref_losses = _quant_reference_digests()
+    code = _QUANT_WORKLOAD + textwrap.dedent("""
+        import os
+        from jax.sharding import Mesh
+        from repro.checkpoint.checkpointer import Checkpointer
+        from repro.core.scores import ScoreSharding, make_store
+
+        P, pid = jax.process_count(), jax.process_index()
+        n_local = N // P
+        mesh = Mesh(np.array(jax.local_devices()), ("data",))
+        store = make_store(ScoreSharding(mesh, ("data",), n_global=N,
+                                         offset=pid * n_local), **QKW)
+        qs, _ = run_quant(store)
+        part = store.checkpoint_partition()
+        assert part is not None and part["per_leaf"] and part["rank"] == pid
+        spec = store.checkpoint_spec()
+        assert spec["kind"] == "quantized" and spec["block"] == 8
+        ck = Checkpointer(os.environ["REPRO_CKPT_DIR"])
+        ck.save({"scores": qs}, step=9, metadata={}, partition=part)
+        # restores back into THIS topology
+        r = ck.restore({"scores": store.init_leaf(N)}, step=9,
+                       partition=part)
+        np.testing.assert_array_equal(np.asarray(r["scores"].s_q),
+                                      np.asarray(qs.s_q))
+        np.testing.assert_array_equal(np.asarray(r["scores"].err_s),
+                                      np.asarray(qs.err_s))
+        print("OK")
+    """)
+    run_cluster(code, extra_env={"REPRO_CKPT_DIR": str(tmp_path)})
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.core.scores import make_store
+    repl = make_store(None, quantize=True, block=8, residual_rows=1024)
+    ck = Checkpointer(tmp_path)
+    r = ck.restore({"scores": repl.init_leaf(64)}, step=9)
+    got = r["scores"]
+    np.testing.assert_array_equal(np.asarray(got.s_q),
+                                  np.asarray(ref_qs.s_q))
+    np.testing.assert_array_equal(np.asarray(got.s_scale),
+                                  np.asarray(ref_qs.s_scale))
+    np.testing.assert_array_equal(np.asarray(got.seen_q),
+                                  np.asarray(ref_qs.seen_q))
+    # assembled losses (residual-corrected) equal the reference's
+    np.testing.assert_array_equal(repl.prune_snapshot(got).full_losses(),
+                                  ref_losses)

@@ -1,0 +1,292 @@
+"""QuantizedStore: int8 ES state with error feedback (ISSUE 7 tentpole).
+
+Contracts pinned here:
+
+  * accuracy — gathers equal the f32 recursion within half an int8 grid
+    step (the error-feedback ring keeps recently-updated rows exact
+    w.r.t. the quantized store's OWN recursion; only the re-grid on a
+    scale growth moves a row, by at most the new scale/2);
+  * placement invariance — the quantized SHARDED backend (mesh over
+    every device) is bit-identical to the quantized replicated one while
+    the residual ring is roomy (per-shard rings evict differently once
+    the working set overflows; both stay within scale/2 either way);
+  * protocol completeness — update/gather/select/prune_snapshot/
+    prune_epoch/leaf_sharding/checkpoint_spec/checkpoint_partition all
+    behave through the one ``ScoreStore`` surface, so the engine runs
+    quantized with ZERO step-layer changes;
+  * checkpoints — the quantized leaves round-trip replicated <-> sharded
+    bitwise through the template-driven restore;
+  * end to end — a k=1 smoke training run selects the same samples and
+    lands on bit-equal params as the f32 store under a fixed seed.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.scores import (QuantizedScores, QuantizedStore,  # noqa: E402
+                               ReplicatedStore, ScoreSharding, ShardedStore,
+                               init_scores, make_store, update_scores)
+
+_B1, _B2 = 0.2, 0.9
+_QFIELDS = ("s_q", "w_q", "seen_q", "s_scale", "w_scale",
+            "err_rows", "err_seq", "err_s", "err_w")
+
+
+def _mesh_store(**kw):
+    D = jax.device_count()
+    mesh = jax.make_mesh((D,), ("data",))
+    return make_store(ScoreSharding(mesh, ("data",)), quantize=True, **kw)
+
+
+def _assert_q_equal(a, b):
+    for f in _QFIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+
+
+def _run_stream(store, qs, n, steps=5, B=48, seed=1):
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        ids = jnp.asarray(rng.choice(n, B, replace=False), jnp.int32)
+        losses = jnp.asarray(rng.uniform(0.05, 2.0, B), jnp.float32)
+        qs = store.update(qs, ids, losses, _B1, _B2)
+        yield qs, ids, losses
+
+
+def test_make_store_composition():
+    assert isinstance(make_store(None, quantize=True), QuantizedStore)
+    st = make_store(None, quantize=True)
+    assert isinstance(st.inner, ReplicatedStore)
+    assert isinstance(_mesh_store().inner, ShardedStore)
+    assert isinstance(make_store(None), ReplicatedStore)  # default unchanged
+
+
+def test_init_leaf_matches_f32_init():
+    """The 1/n init encodes as code 127 on a (1/n)/127 grid — within 2
+    ulp of the f32 store's exact 1/n, with an empty ring."""
+    n = 512
+    st = make_store(None, quantize=True, block=64)
+    qs = st.init_leaf(n)
+    assert qs.s_q.dtype == jnp.int8 and qs.seen_q.dtype == jnp.int8
+    s, w = st.gather(qs, jnp.arange(n, dtype=jnp.int32))
+    np.testing.assert_allclose(np.asarray(s), 1.0 / n, rtol=3e-7)
+    np.testing.assert_allclose(np.asarray(w), 1.0 / n, rtol=3e-7)
+    assert int(jnp.max(qs.err_seq)) == 0
+
+
+def test_gather_tracks_f32_within_grid_bound():
+    """After every update, gathers stay within the EF bound of the exact
+    f32 recursion: each scale growth re-grids cold rows by at most
+    scale/2 and the EMA carries those errors with a beta2 decay, so the
+    deviation is bounded by (scale/2)/(1-beta2) — O(scale), never
+    drifting beyond the geometric sum."""
+    n = 1024
+    st = make_store(None, quantize=True, block=128, residual_rows=2048)
+    qs = st.init_leaf(n)
+    ref = init_scores(n)
+    rng = np.random.default_rng(0)
+    for _ in range(8):
+        ids = jnp.asarray(rng.choice(n, 64, replace=False), jnp.int32)
+        losses = jnp.asarray(rng.uniform(0.05, 3.0, 64), jnp.float32)
+        qs = st.update(qs, ids, losses, _B1, _B2)
+        ref = update_scores(ref, ids, losses, _B1, _B2)
+        s, w = st.gather(qs, ids)
+        geo = 1.0 / (1.0 - _B2)
+        tol_s = float(jnp.max(qs.s_scale)) * 0.5 * geo + 1e-7
+        tol_w = (float(jnp.max(qs.w_scale)) * 0.5
+                 + float(jnp.max(qs.s_scale)) * 0.5 * geo) + 1e-7
+        np.testing.assert_allclose(np.asarray(s), np.asarray(ref.s[ids]),
+                                   atol=tol_s)
+        np.testing.assert_allclose(np.asarray(w), np.asarray(ref.w[ids]),
+                                   atol=tol_w)
+
+
+def test_ring_keeps_updated_rows_exact_wrt_quant_recursion():
+    """A row still in the ring gathers the value its last update computed
+    (deq + residual == s_new), NOT the grid-rounded code — the EF
+    contract.  Scales are warmed first so the checked update runs with no
+    re-grid between the prediction gather and the apply."""
+    n = 256
+    st = make_store(None, quantize=True, block=64, residual_rows=512)
+    qs = st.init_leaf(n)
+    ids = jnp.arange(0, 64, dtype=jnp.int32)
+    losses = jnp.asarray(np.linspace(0.1, 2.0, 64), jnp.float32)
+    qs = st.update(qs, ids, losses, _B1, _B2)      # grows scales to fit
+    s1, _ = st.gather(qs, ids)
+    losses2 = losses * 0.05                        # no further growth
+    s_new = _B2 * s1 + (1.0 - _B2) * losses2
+    qs = st.update(qs, ids, losses2, _B1, _B2)
+    s, _ = st.gather(qs, ids)
+    err = np.abs(np.asarray(s) - np.asarray(s_new))
+    grid_half = float(jnp.max(qs.s_scale)) * 0.5
+    assert err.max() < 1e-6                        # residual-exact ...
+    assert err.max() < grid_half * 1e-2            # ... far below the grid
+
+
+def test_seen_saturates_at_127():
+    n = 32
+    st = make_store(None, quantize=True, block=32)
+    qs = st.init_leaf(n)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    losses = jnp.full((n,), 0.5, jnp.float32)
+    for _ in range(130):
+        qs = st.update(qs, ids, losses, _B1, _B2)
+    assert int(jnp.max(qs.seen_q)) == 127
+    snap = st.prune_snapshot(qs)
+    assert int(np.max(snap.seen[0])) == 127
+
+
+def test_sharded_quant_bitwise_matches_replicated_quant():
+    """Placement invariance with a roomy ring: per-device row routing
+    leaves every quantized leaf bit-identical to the replicated run."""
+    n = 64 * jax.device_count()
+    repl = make_store(None, quantize=True, block=16, residual_rows=4096)
+    shrd = _mesh_store(block=16, residual_rows=4096)
+    shrd.validate(n)
+    q_r, q_s = repl.init_leaf(n), shrd.init_leaf(n)
+    for (q_r, ids, _), (q_s, _, _) in zip(
+            _run_stream(repl, q_r, n), _run_stream(shrd, q_s, n)):
+        np.testing.assert_array_equal(np.asarray(q_r.s_q),
+                                      np.asarray(q_s.s_q))
+        s_r, w_r = repl.gather(q_r, ids)
+        s_s, w_s = shrd.gather(q_s, ids)
+        np.testing.assert_array_equal(np.asarray(s_r), np.asarray(s_s))
+        np.testing.assert_array_equal(np.asarray(w_r), np.asarray(w_s))
+    np.testing.assert_array_equal(np.asarray(q_r.s_scale),
+                                  np.asarray(q_s.s_scale))
+    # prune snapshots assemble to the same global arrays
+    np.testing.assert_array_equal(repl.prune_snapshot(q_r).full_losses(),
+                                  shrd.prune_snapshot(q_s).full_losses())
+
+
+def test_prune_epoch_parity_across_quant_backends():
+    n = 16 * jax.device_count()
+    repl = make_store(None, quantize=True, block=8, residual_rows=4096)
+    shrd = _mesh_store(block=8, residual_rows=4096)
+    q_r, q_s = repl.init_leaf(n), shrd.init_leaf(n)
+    rng = np.random.default_rng(3)
+    ids = jnp.asarray(rng.permutation(n), jnp.int32)
+    losses = jnp.asarray(rng.uniform(0.05, 3.0, n), jnp.float32)
+    q_r = repl.update(q_r, ids, losses, _B1, _B2)
+    q_s = shrd.update(q_s, ids, losses, _B1, _B2)
+    prev = rng.uniform(0.05, 3.0, n).astype(np.float32)
+    for method in ("eswp", "infobatch", "ucb", "random"):
+        res_r, s_r = repl.prune_epoch(method, np.random.default_rng(7), q_r,
+                                      prev_losses=prev, ratio=0.25)
+        res_s, s_s = shrd.prune_epoch(method, np.random.default_rng(7), q_s,
+                                      prev_losses=prev, ratio=0.25)
+        np.testing.assert_array_equal(np.sort(res_r.kept),
+                                      np.sort(res_s.kept))
+        np.testing.assert_array_equal(s_r, s_s)
+
+
+def test_select_delegates_and_wire_merge_matches():
+    """wire=False delegates to the inner backend's exact merge; the
+    wire=True int8 candidate merge returns the same top-k here (the key
+    gaps exceed one grid step at this scale)."""
+    exact = _mesh_store(block=16)
+    wired = dataclasses.replace(exact, wire=True)
+    rng = np.random.default_rng(5)
+    B = 16 * jax.device_count()
+    w = jnp.asarray(rng.uniform(0.01, 5.0, B), jnp.float32)
+    key = jax.random.PRNGKey(11)
+    sel_e = exact.select(key, w, B // 2)
+    sel_w = wired.select(key, w, B // 2)
+    np.testing.assert_array_equal(np.sort(np.asarray(sel_e)),
+                                  np.sort(np.asarray(sel_w)))
+
+
+def test_wire_gather_within_one_grid_step():
+    n = 64 * jax.device_count()
+    exact = _mesh_store(block=16, residual_rows=1024)
+    wired = dataclasses.replace(exact, wire=True)
+    qs = exact.init_leaf(n)
+    for qs, ids, _ in _run_stream(exact, qs, n, steps=3):
+        pass
+    gids = jnp.arange(0, n, 3, dtype=jnp.int32)
+    s_e, w_e = exact.gather(qs, gids)
+    s_w, w_w = wired.gather(qs, gids)
+    # one compressed leg: error bounded by that leg's own grid
+    tol = max(float(jnp.max(jnp.abs(s_e))), 1e-6) / 127.0 + 1e-7
+    np.testing.assert_allclose(np.asarray(s_w), np.asarray(s_e), atol=tol)
+    tol = max(float(jnp.max(jnp.abs(w_e))), 1e-6) / 127.0 + 1e-7
+    np.testing.assert_allclose(np.asarray(w_w), np.asarray(w_e), atol=tol)
+
+
+def test_block_must_divide_shard():
+    if jax.device_count() < 2:
+        pytest.skip("needs a >1-device mesh for a shard to divide")
+    st = _mesh_store(block=48)
+    with pytest.raises(ValueError, match="divide"):
+        st.validate(64 * jax.device_count())
+
+
+def test_checkpoint_round_trip_replicated_and_sharded(tmp_path):
+    from repro.checkpoint.checkpointer import Checkpointer
+    n = 64 * jax.device_count()
+    repl = make_store(None, quantize=True, block=16, residual_rows=256)
+    shrd = _mesh_store(block=16, residual_rows=256)
+    qs = repl.init_leaf(n)
+    for qs, _, _ in _run_stream(repl, qs, n, steps=3):
+        pass
+    ck = Checkpointer(tmp_path)
+    assert repl.checkpoint_spec()["kind"] == "quantized"
+    ck.save({"scores": qs}, 1, {}, partition=repl.checkpoint_partition())
+    # replicated save -> sharded template
+    r = ck.restore({"scores": shrd.init_leaf(n)}, 1,
+                   partition=shrd.checkpoint_partition())
+    _assert_q_equal(qs, r["scores"])
+    # sharded save -> replicated template
+    ck.save({"scores": r["scores"]}, 2, {},
+            partition=shrd.checkpoint_partition())
+    back = ck.restore({"scores": repl.init_leaf(n)}, 2,
+                      partition=repl.checkpoint_partition())
+    _assert_q_equal(qs, back["scores"])
+
+
+def test_engine_runs_quantized_without_changes():
+    """The step layer is store-agnostic: a quantized k=1 smoke run keeps
+    the same per-step selected losses and bit-equal final params as the
+    f32 store under a fixed seed (the quantization error stays below
+    every selection margin here)."""
+    from repro.launch.train import Trainer, TrainerConfig
+
+    def run(quant):
+        tc = TrainerConfig(arch="llama3-8b", smoke=True, method="es",
+                           epochs=1, meta_batch=8, minibatch=1,
+                           n_samples=64, seq_len=16, seed=3,
+                           quant_scores=quant, quant_block=32,
+                           max_steps=6, prefetch=False)
+        tr = Trainer(tc)
+        out = tr.train()
+        return [m["loss"] for m in out["metrics"]], tr.state
+
+    lf, state_f = run(False)
+    lq, state_q = run(True)
+    assert isinstance(state_q.scores, QuantizedScores)
+    np.testing.assert_array_equal(np.asarray(lf), np.asarray(lq))
+    for a, b in zip(jax.tree.leaves(state_f.params),
+                    jax.tree.leaves(state_q.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_abstract_train_state_is_store_generic():
+    from repro.configs.registry import get_smoke_config
+    from repro.core.engine import ESConfig
+    from repro.distributed.sharding import make_ctx
+    from repro.launch.inputs import abstract_train_state
+    from repro.optim.adamw import OptConfig
+    cfg = get_smoke_config("llama3-8b")
+    mesh = jax.make_mesh((1, jax.device_count()), ("data", "model"))
+    ctx = make_ctx(cfg, mesh, "train")
+    st = make_store(None, quantize=True, block=16)
+    struct, sh = abstract_train_state(
+        cfg, ESConfig(n_train=64, seq_chunk=0), OptConfig(), 8, ctx,
+        store=st)
+    assert isinstance(struct.scores, QuantizedScores)
+    assert struct.scores.s_q.dtype == jnp.int8
+    assert len(jax.tree.leaves(sh.scores)) == len(_QFIELDS)

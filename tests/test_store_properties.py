@@ -124,3 +124,139 @@ def test_prune_parity_from_backend_snapshots(seed, per_shard, method):
                       prev_losses=prev, seen=np.asarray(rep.seen),
                       ratio=0.25)
     np.testing.assert_array_equal(np.sort(ref.kept), np.sort(res_s.kept))
+
+
+# ---------------------------------------------------------------------------
+# QuantizedStore properties (ISSUE 7 satellite): the int8 + error-feedback
+# invariants that must hold for ANY id/loss stream
+# ---------------------------------------------------------------------------
+
+from repro.core.scores import make_store  # noqa: E402
+from repro.distributed.compression import (  # noqa: E402
+    dequantize_int8_blocks, quantize_int8_blocks)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 64),
+       st.sampled_from([16, 64, 256]))
+def test_quantize_blocks_grid_point_idempotence(seed, nb, block):
+    """Values already ON the int8 grid re-quantize to the same codes and
+    dequantize bit-identically (quant o dequant == identity on the grid).
+    The property needs the scale to be recoverable, i.e. each block holds
+    a full-range code — otherwise re-quantization legitimately picks a
+    tighter grid."""
+    rng = np.random.default_rng(seed)
+    q0 = rng.integers(-127, 128, size=(nb, block))
+    q0[:, 0] = 127                        # pin the block max: amax/127 == s0
+    q0 = q0.reshape(-1).astype(np.int8)
+    s0 = rng.uniform(1e-6, 2.0, nb).astype(np.float32)
+    x = dequantize_int8_blocks(jnp.asarray(q0), jnp.asarray(s0), block)
+    q1, s1 = quantize_int8_blocks(x, block)
+    x1 = dequantize_int8_blocks(q1, s1, block)
+    np.testing.assert_array_equal(q0, np.asarray(q1))   # codes exact
+    # values: the recovered scale fl(fl(127*s)/127) may sit 1 ulp off s
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x1), rtol=3e-7)
+
+
+def test_quantize_blocks_scale_floor_on_zero():
+    """All-zero input: scales clamp to the floor (no divide-by-zero, no
+    NaN) and the round trip returns exact zeros."""
+    q, s = quantize_int8_blocks(jnp.zeros((512,)), 128)
+    assert float(jnp.min(s)) > 0.0
+    out = np.asarray(dequantize_int8_blocks(q, s, 128))
+    np.testing.assert_array_equal(out, np.zeros(512, np.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 24))
+def test_quant_fresh_residual_bounded_by_half_scale(seed, B):
+    """Right after an update (no intervening growth), every ring residual
+    obeys |e| <= scale/2 — requant rounds to the nearest grid point."""
+    n = 256
+    store = make_store(None, quantize=True, block=64, residual_rows=512)
+    qs = store.init_leaf(n)
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.choice(n, B, replace=False), jnp.int32)
+    losses = jnp.asarray(rng.uniform(0.05, 3.0, B), jnp.float32)
+    qs = store.update(qs, ids, losses, _B1, _B2)
+    live = np.asarray(qs.err_seq) > 0
+    blk = np.asarray(qs.err_rows)[live] // 64
+    np.testing.assert_array_less(
+        np.abs(np.asarray(qs.err_s)[live]),
+        np.asarray(qs.s_scale)[blk] * 0.5 + 1e-9)
+    np.testing.assert_array_less(
+        np.abs(np.asarray(qs.err_w)[live]),
+        np.asarray(qs.w_scale)[blk] * 0.5 + 1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 32))
+def test_quant_update_gather_roundtrip_vs_f32(seed, B):
+    """Shuffled, duplicate and out-of-range id streams: the quantized
+    store's gathers track the f32 recursion within the EF bound
+    (scale/2 geometric sum over the beta2 EMA), and out-of-range ids are
+    dropped exactly like the f32 backends."""
+    from repro.core.scores import init_scores, update_scores
+    n = 128
+    store = make_store(None, quantize=True, block=32, residual_rows=1024)
+    qs = store.init_leaf(n)
+    ref = init_scores(n)
+    rng = np.random.default_rng(seed)
+    for _ in range(3):
+        ids = rng.integers(-3, n + 3, size=B)          # dups + oob
+        losses = rng.uniform(0.05, 3.0, B).astype(np.float32)
+        jids = jnp.asarray(ids, jnp.int32)
+        jlosses = jnp.asarray(losses)
+        qs = store.update(qs, jids, jlosses, _B1, _B2)
+        ref = update_scores(ref, jids, jlosses, _B1, _B2)
+    valid = np.unique(np.arange(n))
+    s, w = store.gather(qs, jnp.asarray(valid, jnp.int32))
+    geo = 1.0 / (1.0 - _B2)
+    tol_s = float(jnp.max(qs.s_scale)) * 0.5 * geo + 1e-7
+    tol_w = (float(jnp.max(qs.w_scale)) * 0.5
+             + float(jnp.max(qs.s_scale)) * 0.5 * geo) + 1e-7
+    np.testing.assert_allclose(np.asarray(s), np.asarray(ref.s)[valid],
+                               atol=tol_s)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(ref.w)[valid],
+                               atol=tol_w)
+    # seen counts match exactly (int path, saturating far above 3*B hits)
+    np.testing.assert_array_equal(
+        np.asarray(qs.seen_q).astype(np.int32),
+        np.minimum(np.asarray(ref.seen), 127))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 5), st.integers(4, 24))
+def test_quant_sharded_parity_any_stream(seed, per_shard, B):
+    """Quantized placement invariance under hypothesis streams (dups,
+    oob, any B): sharded-quant leaves bit-equal replicated-quant with a
+    roomy ring."""
+    D = jax.device_count()
+    n = per_shard * D * 4
+    mesh = jax.make_mesh((D,), ("data",))
+    rep = make_store(None, quantize=True, block=per_shard,
+                     residual_rows=4096)
+    shd = make_store(ScoreSharding(mesh, ("data",)), quantize=True,
+                     block=per_shard, residual_rows=4096)
+    q_r, q_s = rep.init_leaf(n), shd.init_leaf(n)
+    rng = np.random.default_rng(seed)
+    for _ in range(3):
+        ids = rng.integers(-3, n + 3, size=B)
+        losses = rng.uniform(0.05, 3.0, B).astype(np.float32)
+        jids = jnp.asarray(ids, jnp.int32)
+        jlosses = jnp.asarray(losses)
+        q_r = rep.update(q_r, jids, jlosses, _B1, _B2)
+        q_s = shd.update(q_s, jids, jlosses, _B1, _B2)
+        np.testing.assert_array_equal(np.asarray(q_r.s_q),
+                                      np.asarray(q_s.s_q))
+        np.testing.assert_array_equal(np.asarray(q_r.w_q),
+                                      np.asarray(q_s.w_q))
+        np.testing.assert_array_equal(np.asarray(q_r.seen_q),
+                                      np.asarray(q_s.seen_q))
+        valid = np.unique(ids[(ids >= 0) & (ids < n)])
+        if len(valid):
+            vids = jnp.asarray(valid, jnp.int32)
+            s_r, w_r = rep.gather(q_r, vids)
+            s_s, w_s = shd.gather(q_s, vids)
+            np.testing.assert_array_equal(np.asarray(s_r), np.asarray(s_s))
+            np.testing.assert_array_equal(np.asarray(w_r), np.asarray(w_s))
