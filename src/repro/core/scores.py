@@ -235,6 +235,21 @@ class ScoreStore:
                                    ucb_c=ucb_c, ka_tau=ka_tau)
         return res, snap.full_losses()
 
+    # -- growth ---------------------------------------------------------
+    def grow(self, scores, n_new: int) -> Tuple["ScoreStore", object]:
+        """Extend the logical store by ``n_new`` NEW rows -> (store, leaf).
+
+        Pre-grow rows are preserved BITWISE (global row ids are stable);
+        the new rows start at the fresh-sample prior ``1/n_total`` with
+        ``seen == 0`` — exactly what ``init_leaf(n_total)`` would give
+        them.  Host-side op (epoch/admission boundary, not per-step): the
+        returned leaf has a new shape, so the next jitted step recompiles
+        once.  The returned store may be a NEW instance — per-process
+        ownership (``ScoreSharding.n_global``/``offset``) is frozen and
+        must be rebuilt when the row ranges shift; callers must swap both.
+        """
+        raise NotImplementedError
+
     # -- placement plumbing ---------------------------------------------
     def validate(self, n: int) -> None:
         pass
@@ -292,6 +307,19 @@ class ReplicatedStore(ScoreStore):
             weights=[np.asarray(scores.w)], losses=[np.asarray(scores.s)],
             seen=[np.asarray(scores.seen)],
             offsets=np.asarray([0], np.int64), n=int(scores.s.shape[0]))
+
+    def grow(self, scores, n_new: int) -> Tuple[ScoreStore, ESScores]:
+        """Pad-and-concat: old rows bitwise, new rows at the 1/n' prior."""
+        if n_new <= 0:
+            raise ValueError(f"grow needs n_new > 0, got {n_new}")
+        n_tot = int(scores.s.shape[0]) + int(n_new)
+        prior = jnp.full((n_new,), 1.0 / n_tot, jnp.float32)
+        leaf = ESScores(
+            s=jnp.concatenate([scores.s, prior]),
+            w=jnp.concatenate([scores.w, prior]),
+            seen=jnp.concatenate([scores.seen,
+                                  jnp.zeros((n_new,), jnp.int32)]))
+        return self, leaf
 
     def checkpoint_spec(self) -> dict:
         return {"kind": "replicated"}
@@ -512,6 +540,81 @@ class ShardedStore(ScoreStore):
                              seen=seen_blocks,
                              offsets=np.asarray(offs, np.int64), n=int(n),
                              comm=comm)
+
+    # -- growth ----------------------------------------------------------
+    def _assemble_global(self, arr) -> np.ndarray:
+        """The FULL logical array host-side, identical on every process.
+
+        Local addressable shards concatenate in row order; with
+        per-process ownership the rank-ordered host allgather completes
+        the global view (row ranges tile ``[0, n_global)`` in rank
+        order), and on a process-spanning pod mesh the non-addressable
+        rows come back via ``process_allgather``.
+        """
+        by_start = {sh.index[0].start or 0: sh
+                    for sh in arr.addressable_shards}
+        local = np.concatenate(
+            [np.asarray(by_start[s].data) for s in sorted(by_start)])
+        if self.is_process_local:
+            comm = self._comm()
+            if comm is not None:
+                return np.concatenate(comm.allgather(local))
+            return local
+        if not arr.is_fully_addressable:
+            from jax.experimental import multihost_utils
+            return np.asarray(
+                multihost_utils.process_allgather(arr, tiled=True))
+        return local
+
+    def grow(self, scores, n_new: int) -> Tuple[ScoreStore, ESScores]:
+        """Re-slice the grown row space over the same mesh.
+
+        Global row ids are stable (new rows append at the end), but the
+        contiguous-block layout means every shard/process boundary moves:
+        the old rows are assembled host-side (offset-ordered blocks, the
+        same layout the checkpoint block format tags), the 1/n' prior is
+        appended, and each process re-slices its NEW ``[offset',
+        offset'+local')`` range back onto the mesh.  Returns a rebuilt
+        store when per-process ownership shifts.
+        """
+        if n_new <= 0:
+            raise ValueError(f"grow needs n_new > 0, got {n_new}")
+        ss = self.sharding
+        n_old = int(ss.n_global) if self.is_process_local \
+            else int(scores.s.shape[0])
+        n_tot = n_old + int(n_new)
+        comm = self._comm() if self.is_process_local else None
+        nproc = comm.process_count if comm else 1
+        rank = comm.process_index if comm else 0
+        if self.is_process_local and n_tot % nproc != 0:
+            raise ValueError(f"grown store size {n_tot} not divisible by "
+                             f"{nproc} processes")
+        local_n = n_tot // nproc
+        off = rank * local_n
+        new_store = self
+        if self.is_process_local:
+            new_store = dataclasses.replace(
+                self, sharding=dataclasses.replace(
+                    ss, n_global=n_tot, offset=off))
+        new_store.validate(n_tot)          # shard divisibility, loudly
+
+        prior = np.full((n_new,), np.float32(1.0 / n_tot), np.float32)
+        ns = new_store.sharding.named_sharding()
+
+        def regrow(arr, new_tail):
+            full = np.concatenate([self._assemble_global(arr), new_tail])
+            if self.is_process_local:
+                return jax.device_put(full[off:off + local_n], ns)
+            # pod mesh: each process materializes only its addressable
+            # shards of the global array
+            return jax.make_array_from_callback(
+                (n_tot,), ns, lambda idx: full[idx])
+
+        leaf = ESScores(
+            s=regrow(scores.s, prior),
+            w=regrow(scores.w, prior),
+            seen=regrow(scores.seen, np.zeros((n_new,), np.int32)))
+        return new_store, leaf
 
     # -- placement plumbing ----------------------------------------------
     def leaf_sharding(self) -> Optional[NamedSharding]:
@@ -1024,6 +1127,164 @@ class QuantizedStore(ScoreStore):
             offsets=np.asarray(offs, np.int64), n=int(n), comm=comm,
             q_losses=sq_blocks, q_scales=ssc_blocks, q_block=blk,
             wire=self.wire)
+
+    # -- growth ----------------------------------------------------------
+    @staticmethod
+    def _new_row_codes(n_tot: int, new_blk: np.ndarray,
+                       scales: np.ndarray) -> np.ndarray:
+        """Int8 codes for the 1/n' prior of the appended rows: exact code
+        127 on fresh blocks (their scale is (1/n')/127), nearest grid
+        point when a new row lands in an old partial tail block."""
+        q = np.round((1.0 / n_tot) / scales[new_blk])
+        return np.clip(q, -_QMAX, _QMAX).astype(np.int8)
+
+    def grow(self, qs, n_new: int) -> Tuple[ScoreStore, QuantizedScores]:
+        """Grow codes, per-block scales and the residual ring together.
+
+        Old blocks keep their codes AND scales bitwise (pre-grow gathers
+        are preserved exactly); appended blocks start on the fresh
+        (1/n')/127 grid.  The effective block size must not change across
+        the grow — block boundaries would shift and every old row would
+        re-code — so a ``block`` larger than the pre-grow shard (or the
+        pre-grow replicated row count) raises instead of silently
+        re-gridding.  Sharded: ring entries are re-dealt to the shard
+        that owns their row under the new layout, newest-first dedup per
+        row, oldest evicted when a shard ring overflows.
+        """
+        if n_new <= 0:
+            raise ValueError(f"grow needs n_new > 0, got {n_new}")
+        rows_old = int(qs.s_q.shape[0])
+        blk, nb_local, ring = self._layout(rows_old)
+        if not isinstance(self.inner, ShardedStore):
+            n_tot = rows_old + int(n_new)
+            blk2, nb2, _ = self._layout(n_tot)
+            if blk2 != blk:
+                raise ValueError(
+                    f"quant block changes across grow ({blk} -> {blk2}): "
+                    f"construct the store with block <= the pre-grow row "
+                    f"count so block boundaries are stable")
+            scale0 = np.float32((1.0 / n_tot) / _QMAX)
+            s_scale = np.concatenate([np.asarray(qs.s_scale),
+                                      np.full((nb2 - nb_local,), scale0,
+                                              np.float32)])
+            w_scale = np.concatenate([np.asarray(qs.w_scale),
+                                      np.full((nb2 - nb_local,), scale0,
+                                              np.float32)])
+            new_blk = np.arange(rows_old, n_tot, dtype=np.int64) // blk
+            leaf = dataclasses.replace(
+                qs,
+                s_q=jnp.concatenate([qs.s_q, jnp.asarray(
+                    self._new_row_codes(n_tot, new_blk, s_scale))]),
+                w_q=jnp.concatenate([qs.w_q, jnp.asarray(
+                    self._new_row_codes(n_tot, new_blk, w_scale))]),
+                seen_q=jnp.concatenate([qs.seen_q,
+                                        jnp.zeros((n_new,), jnp.int8)]),
+                s_scale=jnp.asarray(s_scale), w_scale=jnp.asarray(w_scale))
+            return self, leaf
+        return self._grow_sharded(qs, int(n_new), blk, ring)
+
+    def _grow_sharded(self, qs, n_new: int, blk: int, ring: int):
+        """Sharded grow: assemble the global code/scale/ring view (the
+        same offset-ordered block layout the checkpointer tags), append,
+        re-deal, and re-slice to the new per-process/per-shard ranges."""
+        inner: ShardedStore = self.inner
+        ss = inner.sharding
+        rows_old = int(qs.s_q.shape[0])
+        n_old = int(ss.n_global) if inner.is_process_local else rows_old
+        n_tot = n_old + n_new
+        comm = ShardedStore._comm() if inner.is_process_local else None
+        nproc = comm.process_count if comm else 1
+        rank = comm.process_index if comm else 0
+        if inner.is_process_local and n_tot % nproc != 0:
+            raise ValueError(f"grown store size {n_tot} not divisible by "
+                             f"{nproc} processes")
+        local_n = n_tot // nproc
+        new_inner = inner
+        if inner.is_process_local:
+            new_inner = dataclasses.replace(
+                inner, sharding=dataclasses.replace(
+                    ss, n_global=n_tot, offset=rank * local_n))
+        new_self = dataclasses.replace(self, inner=new_inner)
+        new_self.validate(n_tot)
+        blk2, _, ring2 = new_self._layout(local_n)
+        if blk2 != blk:
+            raise ValueError(
+                f"quant block changes across grow ({blk} -> {blk2}): "
+                f"construct the store with block <= the pre-grow shard "
+                f"so block boundaries are stable")
+        assert ring2 == ring, (ring, ring2)    # nproc/n_shards unchanged
+
+        ag = inner._assemble_global
+        # global views: rows in row order, scales in global block order
+        # (aligned boundaries: blk divides both old and new shards), ring
+        # in global shard order
+        s_q_g = ag(qs.s_q)
+        w_q_g = ag(qs.w_q)
+        seen_g = ag(qs.seen_q)
+        s_sc_g = ag(qs.s_scale)
+        w_sc_g = ag(qs.w_scale)
+        er_g, et_g = ag(qs.err_rows), ag(qs.err_seq)
+        es_g, ew_g = ag(qs.err_s), ag(qs.err_w)
+
+        scale0 = np.float32((1.0 / n_tot) / _QMAX)
+        nb_g_new = n_tot // blk
+        s_sc_g = np.concatenate([s_sc_g, np.full(
+            (nb_g_new - len(s_sc_g),), scale0, np.float32)])
+        w_sc_g = np.concatenate([w_sc_g, np.full(
+            (nb_g_new - len(w_sc_g),), scale0, np.float32)])
+        new_blk = np.arange(n_old, n_tot, dtype=np.int64) // blk
+        s_q_g = np.concatenate(
+            [s_q_g, self._new_row_codes(n_tot, new_blk, s_sc_g)])
+        w_q_g = np.concatenate(
+            [w_q_g, self._new_row_codes(n_tot, new_blk, w_sc_g)])
+        seen_g = np.concatenate([seen_g, np.zeros((n_new,), np.int8)])
+
+        # re-deal the ring: newest entry per live row, to its new owner
+        shard_new = local_n // ss.n_shards
+        per_shard = ring // ss.n_shards
+        order = np.argsort(-et_g, kind="stable")   # newest first
+        live = et_g[order] > 0
+        rows_o, seq_o = er_g[order][live], et_g[order][live]
+        es_o, ew_o = es_g[order][live], ew_g[order][live]
+        _, first = np.unique(rows_o, return_index=True)  # newest per row
+        keep = np.sort(first)
+        rows_o, seq_o = rows_o[keep], seq_o[keep]
+        es_o, ew_o = es_o[keep], ew_o[keep]
+        G = nproc * ss.n_shards
+        er_n = np.full((G * per_shard,), -1, np.int32)
+        et_n = np.zeros((G * per_shard,), np.int32)
+        es_n = np.zeros((G * per_shard,), np.float32)
+        ew_n = np.zeros((G * per_shard,), np.float32)
+        owner = rows_o // shard_new
+        for g in range(G):
+            here = np.nonzero(owner == g)[0][:per_shard]  # newest-first
+            lo = g * per_shard
+            er_n[lo:lo + len(here)] = rows_o[here]
+            et_n[lo:lo + len(here)] = seq_o[here]
+            es_n[lo:lo + len(here)] = es_o[here]
+            ew_n[lo:lo + len(here)] = ew_o[here]
+
+        ns = new_inner.sharding.named_sharding()
+        nb_local_new = local_n // blk
+        off = rank * local_n
+
+        def put(full, lo, ln):
+            if inner.is_process_local:
+                return jax.device_put(full[lo:lo + ln], ns)
+            return jax.make_array_from_callback(
+                (len(full),), ns, lambda idx: full[idx])
+
+        leaf = QuantizedScores(
+            s_q=put(s_q_g, off, local_n),
+            w_q=put(w_q_g, off, local_n),
+            seen_q=put(seen_g, off, local_n),
+            s_scale=put(s_sc_g, rank * nb_local_new, nb_local_new),
+            w_scale=put(w_sc_g, rank * nb_local_new, nb_local_new),
+            err_rows=put(er_n, rank * ring, ring),
+            err_seq=put(et_n, rank * ring, ring),
+            err_s=put(es_n, rank * ring, ring),
+            err_w=put(ew_n, rank * ring, ring))
+        return new_self, leaf
 
     # -- placement plumbing ----------------------------------------------
     def leaf_sharding(self) -> Optional[NamedSharding]:

@@ -20,17 +20,26 @@ layers, composed by :class:`DataPipeline`:
               no longer serializes against the train step.
 
 ``repro.data.loader.IndexLoader`` is now a thin shim over these layers.
+
+A fourth, ingestion-side piece serves the online scoring service:
+``AdmissionController`` (admission.py) batches user-submitted examples
+under a latency bound and filters them with the Eq. (3.1) rule before
+they enter a growing ``StreamingSource``.
 """
+from .admission import (AdmissionController, AdmissionResult,
+                        es_admission_filter)
 from .pipeline import DataPipeline
 from .prefetch import Prefetcher, SyncStream, make_placer
 from .sampler import ESSampler, kept_digest
 from .sources import (PackedSFTSource, PackedSource, ShardedFileSource,
-                      Source, SyntheticSource, TokenBinSource, get_source,
-                      write_token_bin)
+                      Source, StreamingSource, SyntheticSource,
+                      TokenBinSource, get_source, write_token_bin)
 
 __all__ = [
+    "AdmissionController", "AdmissionResult", "es_admission_filter",
     "DataPipeline", "SyncStream", "Prefetcher", "make_placer",
     "ESSampler", "kept_digest",
     "Source", "SyntheticSource", "TokenBinSource", "ShardedFileSource",
-    "PackedSFTSource", "PackedSource", "get_source", "write_token_bin",
+    "PackedSFTSource", "PackedSource", "StreamingSource", "get_source",
+    "write_token_bin",
 ]

@@ -59,9 +59,8 @@ class DataPipeline:
         (resume of a pipelined session rebuilds its held batch this way)."""
         ids = self.sampler.host_slice(self.sampler.batch_ids(epoch, step))
         batch = self.source.batch(ids)
-        gs = self.sampler.grad_scale
-        if gs is not None:
-            batch["grad_scale"] = gs[ids].astype(np.float32)
+        if self.sampler.grad_scale is not None:
+            batch["grad_scale"] = self.sampler.grad_scale_for(ids)
         return batch
 
     # ---- sampler surface (ESWP hook + bookkeeping) -----------------------
@@ -113,6 +112,17 @@ class DataPipeline:
     def epoch_indices(self, epoch: int) -> np.ndarray:
         return self.sampler.epoch_indices(epoch)
 
+    # ---- growth (online scoring service) ---------------------------------
+    def grow(self, n_new: int, epoch: int) -> None:
+        """Admit ``n_new`` rows the source has already appended; the
+        sampler walks them from the next epoch boundary."""
+        if len(self.source) < self.sampler.n_samples + n_new:
+            raise ValueError(
+                f"pipeline grow: source has {len(self.source)} rows but "
+                f"the sampler would cover {self.sampler.n_samples + n_new}"
+                f" — append to the source first")
+        self.sampler.grow(n_new, epoch)
+
     # ---- resume ----------------------------------------------------------
     def cursor(self, epoch: int, step: int) -> Dict:
         cur = self.sampler.cursor(epoch, step)
@@ -124,17 +134,25 @@ class DataPipeline:
         arrays = self.sampler.state_arrays()
         if self.doc_level:
             arrays.update(self.source.doc_state_arrays())
+        if hasattr(self.source, "stream_state_arrays"):
+            arrays.update(self.source.stream_state_arrays())
         return arrays
 
     def load_state(self, extras: Dict[str, np.ndarray],
                    cursor: Optional[Dict] = None) -> None:
+        # a streaming source re-appends its admitted rows BEFORE the
+        # length check: the cursor recorded the grown population
+        if hasattr(self.source, "load_stream_state"):
+            self.source.load_stream_state(extras)
         if cursor is not None and "source" in cursor:
             name, n = source_fingerprint(self.source)
             src = cursor["source"]
             if src["n"] != n:
                 raise ValueError(
                     f"pipeline resume: source length changed "
-                    f"({src['n']} -> {n}); score rows would misalign")
+                    f"({src['n']} -> {n}); score rows would misalign "
+                    f"(a grown dataset must resume through its "
+                    f"StreamingSource extras)")
         if self.doc_level and "doc_kept" in extras:
             self.source.load_doc_state(extras)
         self.sampler.load_state(extras, cursor)

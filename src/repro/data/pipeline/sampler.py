@@ -21,7 +21,7 @@ no remapping when the kept-set changes or a resume crosses a prune.
 from __future__ import annotations
 
 import hashlib
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -41,7 +41,7 @@ class ESSampler:
                  drop_last: bool = True):
         assert meta_batch % num_hosts == 0
         assert 0 <= host_id < num_hosts
-        self.n_samples = int(n_samples)
+        self._base_n = int(n_samples)
         self.meta_batch = int(meta_batch)
         self.seed = seed
         self.host_id = host_id
@@ -49,6 +49,40 @@ class ESSampler:
         self.drop_last = drop_last
         self._kept: Optional[np.ndarray] = None
         self._grad_scale: Optional[np.ndarray] = None
+        # population snapshots of a GROWING dataset: (first_epoch, n_total)
+        # in effect order — admissions land at the next epoch boundary so
+        # the already-materialized permutation of the current epoch (and
+        # any mid-epoch resume into it) stays bit-stable
+        self._growth: List[Tuple[int, int]] = []
+        # rows >= _kept_pop joined after the last prune decision and are
+        # implicitly kept until the next one covers them
+        self._kept_pop = self._base_n
+
+    # ---- growing population ---------------------------------------------
+    @property
+    def n_samples(self) -> int:
+        """Current (latest) population."""
+        return self._growth[-1][1] if self._growth else self._base_n
+
+    def population(self, epoch: int) -> int:
+        """The population snapshot in effect for ``epoch``."""
+        n = self._base_n
+        for e, tot in self._growth:
+            if epoch >= e:
+                n = tot
+        return n
+
+    def grow(self, n_new: int, epoch: int) -> None:
+        """Admit ``n_new`` appended samples, effective from ``epoch + 1``
+        (the walk of the current epoch is already materialized)."""
+        if n_new <= 0:
+            raise ValueError(f"grow needs n_new > 0, got {n_new}")
+        n_tot = self.n_samples + int(n_new)
+        eff = int(epoch) + 1
+        if self._growth and self._growth[-1][0] == eff:
+            self._growth[-1] = (eff, n_tot)
+        else:
+            self._growth.append((eff, n_tot))
 
     # ---- ESWP / InfoBatch epoch hook ------------------------------------
     def apply_pruning(self, kept: Optional[np.ndarray],
@@ -56,6 +90,9 @@ class ESSampler:
         self._kept = None if kept is None else np.asarray(kept)
         self._grad_scale = None if grad_scale is None \
             else np.asarray(grad_scale, np.float32)
+        # this decision covers every row admitted so far; later
+        # admissions are implicitly kept until the next prune sees them
+        self._kept_pop = self.n_samples
 
     @property
     def kept(self) -> Optional[np.ndarray]:
@@ -66,14 +103,28 @@ class ESSampler:
         return self._grad_scale
 
     # ---- permutation / shape --------------------------------------------
+    def _epoch_pool(self, epoch: int) -> np.ndarray:
+        """The id pool epoch ``epoch`` walks: the installed kept-set plus
+        every row admitted after that prune decision, capped to the
+        epoch's population snapshot."""
+        pop = self.population(epoch)
+        if self._kept is None:
+            return np.arange(pop)
+        kept = self._kept[self._kept < pop]
+        if pop > self._kept_pop:
+            return np.concatenate(
+                [kept, np.arange(self._kept_pop, pop)])
+        return kept
+
     def epoch_indices(self, epoch: int) -> np.ndarray:
-        idx = (self._kept if self._kept is not None
-               else np.arange(self.n_samples))
         rng = np.random.default_rng((self.seed, epoch))
-        return rng.permutation(idx)
+        return rng.permutation(self._epoch_pool(epoch))
 
     def steps_per_epoch(self, epoch: int = 0) -> int:
-        n = len(self._kept) if self._kept is not None else self.n_samples
+        """Meta-batches in ``epoch`` — derived from that epoch's
+        population snapshot, so horizon-aware schedules stay correct
+        while the dataset grows."""
+        n = len(self._epoch_pool(epoch))
         return n // self.meta_batch if self.drop_last \
             else -(-n // self.meta_batch)
 
@@ -114,21 +165,35 @@ class ESSampler:
         for _, ids in self.epoch_id_stream(epoch, start_step):
             batch = source.batch(ids)
             if self._grad_scale is not None:
-                batch["grad_scale"] = self._grad_scale[ids].astype(
-                    np.float32)
+                batch["grad_scale"] = self.grad_scale_for(ids)
             yield batch
 
+    def grad_scale_for(self, ids: np.ndarray) -> np.ndarray:
+        """InfoBatch rescale for a batch; rows admitted after the rescale
+        was computed carry the neutral 1.0 (never pruned-and-rescaled)."""
+        gs = self._grad_scale
+        if gs is None:
+            return np.ones(len(ids), np.float32)
+        inb = ids < len(gs)
+        return np.where(inb, gs[np.where(inb, ids, 0)],
+                        1.0).astype(np.float32)
+
     # ---- resumable cursor ------------------------------------------------
+    def _norm_seed(self):
+        return self.seed if isinstance(self.seed, int) \
+            else [int(x) for x in np.atleast_1d(self.seed)]
+
     def cursor(self, epoch: int, step: int) -> Dict:
         """Manifest-ready position: everything needed to re-derive the
         remaining batch ids is either here or in ``state_arrays``."""
         return {"epoch": int(epoch), "step": int(step),
-                "seed": self.seed if isinstance(self.seed, int)
-                else list(np.atleast_1d(self.seed)),
+                "seed": self._norm_seed(),
                 "meta_batch": self.meta_batch,
                 "num_hosts": self.num_hosts,
                 "drop_last": self.drop_last,
-                "kept_digest": kept_digest(self._kept)}
+                "kept_digest": kept_digest(self._kept),
+                "growth": [[int(e), int(n)] for e, n in self._growth],
+                "kept_pop": int(self._kept_pop)}
 
     def state_arrays(self) -> Dict[str, np.ndarray]:
         """Kept-set / grad-scale payload for the checkpoint ``extras``
@@ -143,11 +208,38 @@ class ESSampler:
 
     def load_state(self, extras: Dict[str, np.ndarray],
                    cursor: Optional[Dict] = None) -> None:
-        """Reinstall a checkpointed kept-set; verify it against the
-        manifest digest so a corrupt/mismatched restore fails loudly."""
+        """Reinstall a checkpointed kept-set + growth history; verify
+        EVERY cursor field that shapes batch ids, not just the kept-set
+        digest — a resume with a different seed, meta_batch, num_hosts
+        or drop_last would silently replay different batches."""
+        if cursor is not None:
+            mismatches = []
+            if "seed" in cursor:
+                want = cursor["seed"]
+                want = want if isinstance(want, int) \
+                    else [int(x) for x in want]
+                if want != self._norm_seed():
+                    mismatches.append(
+                        f"seed (manifest {want!r} != run "
+                        f"{self._norm_seed()!r})")
+            for field, have in (("meta_batch", self.meta_batch),
+                                ("num_hosts", self.num_hosts),
+                                ("drop_last", self.drop_last)):
+                if field in cursor and cursor[field] != have:
+                    mismatches.append(
+                        f"{field} (manifest {cursor[field]!r} != run "
+                        f"{have!r})")
+            if mismatches:
+                raise ValueError(
+                    "sampler resume: cursor mismatch — restoring this "
+                    "checkpoint into the current run would reproduce "
+                    "different batch ids: " + "; ".join(mismatches))
+            self._growth = [(int(e), int(n))
+                            for e, n in cursor.get("growth", [])]
         kept = extras.get("sampler_kept")
         self.apply_pruning(kept, extras.get("sampler_grad_scale"))
         if cursor is not None:
+            self._kept_pop = int(cursor.get("kept_pop", self.n_samples))
             want = cursor.get("kept_digest", "full")
             have = kept_digest(self._kept)
             if want != have:

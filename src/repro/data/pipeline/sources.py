@@ -25,6 +25,11 @@ Five implementations:
   PackedSource      : multiple variable-length DOCUMENTS packed per row
                       with ``segment_ids``/``positions``; ES identity is
                       the document id (segment-granular selection).
+
+plus ``StreamingSource``, a growing wrapper over any of them: admitted
+rows append at the end of the global id space (ids are never re-indexed),
+which is what lets the online scoring service grow the dataset while
+training walks it.
 """
 from __future__ import annotations
 
@@ -420,6 +425,93 @@ class PackedSource:
                 d = r.integers(1, vocab, L)
             docs.append(d.astype(np.int32))
         return cls(docs, seq_len, max_segments)
+
+
+# ---------------------------------------------------------------------------
+# Streaming source (online scoring service)
+# ---------------------------------------------------------------------------
+
+class StreamingSource:
+    """A dataset that GROWS while the sampler walks it.
+
+    Wraps any fixed base source; ``append`` admits new (tokens, labels)
+    rows at the end of the global id space and returns their ids.  The
+    positional-identity invariant is preserved the only way a growing
+    dataset can: ids ``[0, base_n)`` stay the base source's rows forever,
+    appended rows take ``base_n, base_n+1, ...`` in admission order and
+    are never re-indexed — so ES score rows, kept-sets and the sampler's
+    epoch permutations over earlier populations remain valid.
+
+    Appends never mutate existing entries, so a ``Prefetcher`` thread
+    batching already-issued ids races with admission safely; new ids are
+    only handed out after their rows are stored.
+
+    Streamed rows ride the checkpoint ``extras`` channel
+    (``stream_state_arrays``/``load_stream_state``) — the base source is
+    reconstructable from config, the admitted stream is not.
+    """
+
+    def __init__(self, base: Source):
+        self.base = base
+        self._base_n = len(base)
+        probe = base.batch(np.asarray([0]))
+        self.seq_len = int(probe["tokens"].shape[1])
+        self._tokens: List[np.ndarray] = []
+        self._labels: List[np.ndarray] = []
+
+    def __len__(self) -> int:
+        return self._base_n + len(self._tokens)
+
+    @property
+    def n_streamed(self) -> int:
+        return len(self._tokens)
+
+    def append(self, tokens: np.ndarray, labels: np.ndarray) -> np.ndarray:
+        """Admit rows; returns their new GLOBAL sample ids, (M,) i64."""
+        tokens = np.atleast_2d(np.asarray(tokens, np.int32))
+        labels = np.atleast_2d(np.asarray(labels, np.int32))
+        if tokens.shape != labels.shape or tokens.shape[1] != self.seq_len:
+            raise ValueError(
+                f"append: want (M, {self.seq_len}) token/label rows, got "
+                f"{tokens.shape} / {labels.shape}")
+        lo = len(self)
+        for t, l in zip(tokens, labels):
+            self._tokens.append(t.copy())
+            self._labels.append(l.copy())
+        return np.arange(lo, lo + len(tokens), dtype=np.int64)
+
+    def batch(self, ids: np.ndarray) -> Dict[str, np.ndarray]:
+        ids = np.asarray(ids)
+        is_new = ids >= self._base_n
+        if not is_new.any():
+            return self.base.batch(ids)
+        tokens = np.empty((len(ids), self.seq_len), np.int32)
+        labels = np.empty((len(ids), self.seq_len), np.int32)
+        old = ~is_new
+        if old.any():
+            b = self.base.batch(ids[old])
+            tokens[old] = b["tokens"]
+            labels[old] = b["labels"]
+        for j in np.nonzero(is_new)[0]:
+            k = int(ids[j]) - self._base_n
+            tokens[j] = self._tokens[k]
+            labels[j] = self._labels[k]
+        return {"tokens": tokens, "labels": labels,
+                "sample_ids": ids.astype(np.int32)}
+
+    # -- checkpoint extras ---------------------------------------------------
+    def stream_state_arrays(self) -> Dict[str, np.ndarray]:
+        if not self._tokens:
+            return {}
+        return {"stream_tokens": np.stack(self._tokens),
+                "stream_labels": np.stack(self._labels)}
+
+    def load_stream_state(self, extras: Dict[str, np.ndarray]) -> None:
+        """Reinstall checkpointed streamed rows (replaces any current)."""
+        self._tokens = [np.asarray(t, np.int32)
+                        for t in extras.get("stream_tokens", [])]
+        self._labels = [np.asarray(l, np.int32)
+                        for l in extras.get("stream_labels", [])]
 
 
 # ---------------------------------------------------------------------------

@@ -25,16 +25,23 @@ from ..models.transformer import init_lm
 
 
 class Server:
-    def __init__(self, cfg, ctx: Optional[ShardCtx] = None, seed: int = 0):
+    def __init__(self, cfg, ctx: Optional[ShardCtx] = None, seed: int = 0,
+                 params=None):
         self.cfg = cfg
         self.ctx = ctx or ShardCtx()
-        self.params, _ = init_lm(cfg, jax.random.PRNGKey(seed))
+        self.params = params if params is not None \
+            else init_lm(cfg, jax.random.PRNGKey(seed))[0]
         self._prefill = jax.jit(
             lambda p, b, c: prefill(cfg, p, b, c, self.ctx),
             donate_argnums=(2,))
         self._decode = jax.jit(
             lambda p, t, c, pos: decode_step(cfg, p, t, c, pos, self.ctx),
             donate_argnums=(2,))
+
+    def set_params(self, params) -> None:
+        """Swap in new weights (e.g. the live training state's) — same
+        tree/shapes, so the jitted prefill/decode graphs are reused."""
+        self.params = params
 
     def _aux_inputs(self, B: int, prompt_len: int, key) -> Dict:
         extra = {}
@@ -70,8 +77,9 @@ class Server:
                 nxt = jnp.argmax(logits, -1)
             tok = nxt[:, None].astype(jnp.int32)
             out.append(tok)
-            logits, cache = self._decode(self.params, tok, cache,
-                                         jnp.int32(pos))
+            if i < gen_len - 1:      # the last sampled token needs no
+                logits, cache = self._decode(self.params, tok, cache,
+                                             jnp.int32(pos))  # next logits
             pos += 1
         return np.asarray(jnp.concatenate(out, axis=1))
 
@@ -91,6 +99,9 @@ def main() -> None:
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab_size,
                            (args.batch, args.prompt_len)).astype(np.int32)
+    # warmup at the measured shapes so wall_s/tokens_per_s time decode
+    # steady state, not the jit compile
+    server.generate(prompts, args.gen, args.temperature)
     t0 = time.time()
     out = server.generate(prompts, args.gen, args.temperature)
     dt = time.time() - t0

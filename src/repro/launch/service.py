@@ -1,0 +1,261 @@
+"""Online ES scoring service: continuous training over a growing dataset.
+
+Closes the loop the paper frames ES for — a plug-and-play filter on the
+*stream* of training data:
+
+    submit --> bounded-latency admission (Eq. 3.1 filter on LIVE weights)
+           --> StreamingSource.append + ScoreStore.grow + sampler.grow
+           --> continuous training walks the admitted rows next epoch
+           --> eval/decode served from the live training weights
+
+The service rides the trainer's step hooks: between jitted train steps
+it polls the ``AdmissionController`` (so the admission latency bound
+holds at step granularity), scores due candidates with a per-sample
+loss on the CURRENT params, admits the high-value ones into the
+dataset/score store/sampler, and refreshes the decode ``Server`` with
+the live weights.  Everything is pull-driven and deterministic — no
+threads beyond the data prefetcher.
+
+Smoke run (the CI ``serve-smoke`` job):
+
+  PYTHONPATH=src python -m repro.launch.service --smoke \
+      --submit-every 2 --submit-batch 4 --bench-out BENCH_admission.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data.pipeline import (AdmissionController, StreamingSource,
+                             es_admission_filter)
+from ..models.transformer import lm_per_sample_loss
+from .serve import Server
+from .train import Trainer, TrainerConfig
+
+
+class ScoringService:
+    """Compose a ``Trainer`` (over a ``StreamingSource``), an
+    ``AdmissionController`` and a live-weight decode ``Server``.
+
+    ``tau`` is the Eq. (3.1) admission threshold: a candidate's would-be
+    weight must clear ``tau *`` (the store's mean live weight).  ``tau=0``
+    admits everything; the default 1.0 admits samples at least as
+    valuable as the average of the current population.
+    """
+
+    def __init__(self, trainer: Trainer, *, tau: float = 1.0,
+                 max_batch: int = 16, max_delay_s: float = 0.05,
+                 serve: bool = True):
+        if not isinstance(trainer.source, StreamingSource):
+            raise ValueError(
+                "ScoringService needs a Trainer over a StreamingSource "
+                "(wrap the source before building the trainer so the "
+                "sampler/score-store sizes start from the base corpus)")
+        self.trainer = trainer
+        self.source: StreamingSource = trainer.source
+        self.tau = float(tau)
+        self.max_batch = int(max_batch)
+        self.admission = AdmissionController(
+            self._score_candidates, self._filter, max_batch=max_batch,
+            max_delay_s=max_delay_s)
+        self.server = Server(trainer.model_cfg, ctx=trainer.ctx,
+                             params=trainer.state.params) if serve else None
+        self.admit_log: List[Dict[str, Any]] = []
+        self._score_jit = None
+        self._cur_epoch = 0
+        trainer.step_hooks.append(self._on_step)
+
+    # ---- candidate scoring (live weights) -------------------------------
+    def _score_candidates(self, tokens: np.ndarray,
+                          labels: np.ndarray) -> np.ndarray:
+        """Per-sample loss on the CURRENT training params, padded to the
+        admission batch shape so the jit compiles once."""
+        if self._score_jit is None:
+            cfg, ctx = self.trainer.model_cfg, self.trainer.ctx
+
+            def fn(params, tok, lab):
+                ps, _ = lm_per_sample_loss(cfg, params,
+                                           {"tokens": tok, "labels": lab},
+                                           ctx, seq_chunk=0)
+                return ps
+            self._score_jit = jax.jit(fn)
+        m = len(tokens)
+        pad = self.max_batch - m
+        if pad > 0:
+            tokens = np.concatenate(
+                [tokens, np.zeros((pad, tokens.shape[1]), np.int32)])
+            labels = np.concatenate(
+                [labels, np.full((pad, labels.shape[1]), -1, np.int32)])
+        ps = self._score_jit(self.trainer.state.params,
+                             jnp.asarray(tokens), jnp.asarray(labels))
+        return np.asarray(ps)[:m]
+
+    def _filter(self, losses: np.ndarray) -> np.ndarray:
+        """Eq. (3.1) filter against the live score population."""
+        snap = self.trainer.score_store.prune_snapshot(
+            self.trainer.state.scores)
+        s_ref = float(np.concatenate(snap.losses).mean())
+        w_ref = float(np.concatenate(snap.weights).mean())
+        return es_admission_filter(losses, s_ref=s_ref, w_ref=w_ref,
+                                   beta1=self.trainer.es_cfg.beta1,
+                                   tau=self.tau)
+
+    # ---- service surface -------------------------------------------------
+    def submit(self, tokens: np.ndarray, labels: np.ndarray) -> None:
+        """Queue candidate rows; they are scored at the next due poll."""
+        self.admission.submit(tokens, labels)
+
+    def decode(self, prompts: np.ndarray, gen_len: int,
+               temperature: float = 0.0) -> np.ndarray:
+        """Generate from the LIVE training weights."""
+        if self.server is None:
+            raise RuntimeError("service built with serve=False")
+        return self.server.generate(prompts, gen_len, temperature)
+
+    def flush(self) -> int:
+        """Drain all pending admissions now (shutdown / end of stream);
+        returns how many rows were admitted."""
+        total = 0
+        while len(self.admission):
+            res = self.admission.flush()
+            total += self._apply(res)
+        return total
+
+    # ---- step hook -------------------------------------------------------
+    def _on_step(self, trainer: Trainer, epoch: int) -> None:
+        self._cur_epoch = epoch
+        res = self.admission.poll()
+        if res is not None:
+            self._apply(res)
+        if self.server is not None:
+            self.server.set_params(trainer.state.params)
+
+    def _apply(self, res) -> int:
+        """Admit one drained batch: source append -> store/sampler grow ->
+        install the measured live losses as the rows' first Eq. (3.1)
+        update (from the fresh 1/n' prior)."""
+        adm = res.admitted
+        n_adm = int(adm.sum())
+        self.admit_log.append({
+            "epoch": self._cur_epoch,
+            "step": self.trainer.global_step,
+            "scored": int(len(res.losses)), "admitted": n_adm,
+            "mean_loss": float(res.losses.mean()) if len(res.losses)
+            else 0.0})
+        if n_adm == 0:
+            return 0
+        tr = self.trainer
+        ids = self.source.append(res.tokens[adm], res.labels[adm])
+        tr.grow(len(ids), self._cur_epoch)
+        scores = tr.score_store.update(
+            tr.state.scores, jnp.asarray(ids, jnp.int32),
+            jnp.asarray(res.losses[adm], jnp.float32),
+            tr.es_cfg.beta1, tr.es_cfg.beta2)
+        tr.state = dataclasses.replace(tr.state, scores=scores)
+        return n_adm
+
+
+# ---------------------------------------------------------------------------
+# smoke driver (CI serve-smoke job)
+# ---------------------------------------------------------------------------
+
+def _synthetic_stream(seq_len: int, vocab: int, seed: int, n: int):
+    """(tokens, labels) candidate rows: half learnable (repeated motif,
+    the kind ES should admit), half uniform noise."""
+    r = np.random.default_rng(seed)
+    tokens = np.zeros((n, seq_len), np.int32)
+    for i in range(n):
+        if i % 2 == 0:
+            motif = r.integers(1, vocab, 3)
+            tokens[i] = np.tile(motif, seq_len // 3 + 1)[:seq_len]
+        else:
+            tokens[i] = r.integers(1, vocab, seq_len)
+    labels = np.concatenate([tokens[:, 1:], np.full((n, 1), -1, np.int32)],
+                            axis=1)
+    return tokens, labels
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--epochs", type=int, default=3)
+    ap.add_argument("--n-samples", type=int, default=64)
+    ap.add_argument("--seq-len", type=int, default=24)
+    ap.add_argument("--meta-batch", type=int, default=8)
+    ap.add_argument("--tau", type=float, default=1.0)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-delay-ms", type=float, default=50.0)
+    ap.add_argument("--submit-every", type=int, default=2,
+                    help="submit a candidate batch every K trained steps")
+    ap.add_argument("--submit-batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--bench-out", default=None,
+                    help="write admission-latency stats as a bench_trend "
+                         "rows JSON")
+    args = ap.parse_args()
+
+    from ..configs.registry import get_smoke_config
+    from ..data.pipeline import SyntheticSource
+    from ..data.synthetic import SyntheticConfig, SyntheticLM
+
+    cfg = get_smoke_config(args.arch)
+    tc = TrainerConfig(arch=args.arch, method="es", epochs=args.epochs,
+                       meta_batch=args.meta_batch,
+                       minibatch=max(args.meta_batch // 2, 1),
+                       n_samples=args.n_samples, seq_len=args.seq_len,
+                       anneal_ratio=0.0)
+    base = SyntheticSource(SyntheticLM(SyntheticConfig(
+        n_samples=args.n_samples, seq_len=args.seq_len,
+        vocab_size=min(cfg.vocab_size, 64), seed=tc.seed)))
+    trainer = Trainer(tc, source=StreamingSource(base))
+    svc = ScoringService(trainer, tau=args.tau, max_batch=args.max_batch,
+                         max_delay_s=args.max_delay_ms / 1e3)
+
+    tok, lab = _synthetic_stream(args.seq_len, min(cfg.vocab_size, 64),
+                                 seed=1, n=256)
+    cursor = [0]
+
+    def feeder(tr, epoch):
+        if tr.global_step % max(args.submit_every, 1) == 0:
+            lo = cursor[0]
+            hi = min(lo + args.submit_batch, len(tok))
+            if lo < hi:
+                svc.submit(tok[lo:hi], lab[lo:hi])
+                cursor[0] = hi
+    trainer.step_hooks.append(feeder)
+
+    t0 = time.time()
+    out = trainer.train()
+    svc.flush()
+    wall = time.time() - t0
+
+    prompts = tok[:2, :8]
+    dec = svc.decode(prompts, args.gen)
+    stats = svc.admission.latency_stats()
+    n0, n1 = args.n_samples, trainer.n_train
+    report = {
+        "steps": out["steps"], "final_loss": out["final_loss"],
+        "base_rows": n0, "rows_now": n1, "streamed": n1 - n0,
+        "submitted": svc.admission.submitted,
+        "admitted_total": svc.admission.admitted,
+        "decode_shape": list(dec.shape),
+        "wall_s": round(wall, 3), **{k: round(v, 6)
+                                     for k, v in stats.items()}}
+    print(json.dumps(report, indent=1))
+    if args.bench_out:
+        rows = [{"method": "admission", "k": args.max_batch, **stats,
+                 "steps": out["steps"], "streamed": n1 - n0}]
+        Path(args.bench_out).write_text(json.dumps({"rows": rows}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

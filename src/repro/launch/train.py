@@ -216,6 +216,10 @@ class Trainer:
         self._eval_fn = None
         self._cur_sess = None
         self._epoch_consumed = 0
+        # called as hook(trainer, epoch) after every trained step — the
+        # online scoring service polls admission here, interleaved
+        # deterministically with training
+        self.step_hooks: list = []
 
         key = jax.random.PRNGKey(tc.seed)
         self.state = init_train_state(self.model_cfg, self.es_cfg,
@@ -285,12 +289,50 @@ class Trainer:
         from ..distributed.sharding import score_store_sharding
         return score_store_sharding(jax.make_mesh((n_dev,), ("data",)))
 
+    # ------------------------------------------------------------------
+    def _grow_store(self, n_new: int) -> None:
+        """Grow the score store + engine + train state by ``n_new`` rows
+        (old rows bitwise-preserved, new rows at the 1/n' prior)."""
+        new_store, new_scores = self.score_store.grow(self.state.scores,
+                                                      n_new)
+        self.score_store = new_store
+        self.engine.store = new_store
+        self.state = dataclasses.replace(self.state, scores=new_scores)
+        self.n_train += n_new
+        self.es_cfg = dataclasses.replace(self.es_cfg,
+                                          n_train=self.n_train)
+        self.engine.es_cfg = self.es_cfg
+        if self.prev_epoch_losses is not None:
+            # 0.0: the KA move-back rule always re-admits rows that have
+            # no previous-epoch loss yet
+            self.prev_epoch_losses = np.concatenate(
+                [self.prev_epoch_losses, np.zeros(n_new, np.float32)])
+
+    def grow(self, n_new: int, epoch: int) -> None:
+        """Admit ``n_new`` rows the source has already appended: the
+        score store grows NOW (the next jitted step recompiles once for
+        the new shape); the sampler walks the rows from the next epoch
+        boundary, so the current epoch's permutation stays bit-stable.
+
+        The pipeline grows first: it validates the source really holds
+        the appended rows, so a missing ``append`` leaves the run
+        untouched instead of half-grown."""
+        self.pipeline.grow(n_new, epoch)
+        self._grow_store(n_new)
+
     def _resume(self) -> None:
         step = self.ckpt.latest_step()
+        md = self.ckpt.manifest(step)["metadata"]
+        cur_pre = md.get("data")
+        if cur_pre is not None:
+            # a grown checkpoint: extend the template scores to the
+            # checkpointed population BEFORE the template-driven restore
+            growth = cur_pre.get("growth") or []
+            if growth and int(growth[-1][1]) > self.n_train:
+                self._grow_store(int(growth[-1][1]) - self.n_train)
         self.state = self.ckpt.restore(
             self.state, step,
             partition=self.score_store.checkpoint_partition())
-        md = self.ckpt.manifest(step)["metadata"]
         self.global_step = md.get("global_step", step)
         self.start_epoch = md.get("epoch", 0)
         self.bp_samples_total = md.get("bp_samples_total", 0.0)
@@ -468,6 +510,8 @@ class Trainer:
                         t0 = time.time()
                         continue
                     stop = self._record(epoch, m, time.time() - t0)
+                    for hook in self.step_hooks:
+                        hook(self, epoch)
                     t0 = time.time()
                     if stop:
                         break

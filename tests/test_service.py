@@ -1,0 +1,296 @@
+"""Online scoring service (ISSUE 8): streaming source, admission
+bounds, sampler growth, and the end-to-end continuous-training loop.
+
+The acceptance pair:
+  * stream new examples mid-run — store/sampler grow without a restart
+    and only samples passing the Eq. (3.1) filter are admitted;
+  * a grown-then-checkpointed-then-restored run is bit-equal to the
+    ungrown run on the original rows at k=1.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.data.pipeline import (AdmissionController,  # noqa: E402
+                                 ESSampler, StreamingSource,
+                                 SyntheticSource, es_admission_filter)
+
+
+def _tc(**kw):
+    from repro.launch.train import TrainerConfig
+    base = dict(arch="qwen1.5-0.5b", method="es", epochs=2,
+                meta_batch=8, minibatch=4, n_samples=16, seq_len=16,
+                lr=3e-3, anneal_ratio=0.0)
+    base.update(kw)
+    return TrainerConfig(**base)
+
+
+def _rows(n, seq_len, seed=0, vocab=64):
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(1, vocab, (n, seq_len)).astype(np.int32)
+    labels = np.concatenate([tokens[:, 1:], np.full((n, 1), -1, np.int32)],
+                            axis=1)
+    return tokens, labels
+
+
+# ---------------------------------------------------------------------------
+# StreamingSource
+# ---------------------------------------------------------------------------
+
+def test_streaming_source_append_ids_and_batch_stitch():
+    base = SyntheticSource(n_samples=8, seq_len=16, vocab_size=64, seed=0)
+    src = StreamingSource(base)
+    assert len(src) == 8
+    tok, lab = _rows(3, 16, seed=1)
+    ids = src.append(tok, lab)
+    np.testing.assert_array_equal(ids, [8, 9, 10])
+    assert len(src) == 11 and src.n_streamed == 3
+    # base-only ids delegate; mixed batches stitch base + streamed rows
+    np.testing.assert_array_equal(src.batch(np.arange(4))["tokens"],
+                                  base.batch(np.arange(4))["tokens"])
+    mixed = src.batch(np.asarray([2, 9, 5, 10]))
+    np.testing.assert_array_equal(mixed["tokens"][1], tok[1])
+    np.testing.assert_array_equal(mixed["tokens"][3], tok[2])
+    np.testing.assert_array_equal(mixed["tokens"][2],
+                                  base.batch(np.asarray([5]))["tokens"][0])
+    np.testing.assert_array_equal(mixed["sample_ids"], [2, 9, 5, 10])
+    # shape-mismatched appends fail loudly
+    with pytest.raises(ValueError, match="append"):
+        src.append(np.zeros((2, 8), np.int32), np.zeros((2, 8), np.int32))
+
+
+def test_streaming_source_extras_roundtrip():
+    base = SyntheticSource(n_samples=8, seq_len=16, vocab_size=64, seed=0)
+    src = StreamingSource(base)
+    tok, lab = _rows(5, 16, seed=2)
+    src.append(tok, lab)
+    extras = src.stream_state_arrays()
+    src2 = StreamingSource(SyntheticSource(n_samples=8, seq_len=16,
+                                           vocab_size=64, seed=0))
+    src2.load_stream_state(extras)
+    assert len(src2) == 13
+    np.testing.assert_array_equal(
+        src2.batch(np.arange(8, 13))["tokens"], tok)
+    # no streamed rows -> no extras keys at all
+    assert StreamingSource(base).stream_state_arrays() == {}
+
+
+# ---------------------------------------------------------------------------
+# Sampler growth: next-epoch effectiveness + per-epoch horizons
+# ---------------------------------------------------------------------------
+
+def test_sampler_grow_is_next_epoch_effective():
+    s = ESSampler(16, 8, seed=0)
+    idx_before = s.epoch_indices(3)
+    s.grow(8, epoch=3)
+    assert s.population(3) == 16 and s.population(4) == 24
+    assert s.n_samples == 24
+    # the already-materialized epoch is bit-stable
+    np.testing.assert_array_equal(s.epoch_indices(3), idx_before)
+    assert set(s.epoch_indices(4)) == set(range(24))
+    # same-effective-epoch grows merge into one snapshot
+    s.grow(8, epoch=3)
+    assert s.population(4) == 32 and len(s.cursor(0, 0)["growth"]) == 1
+
+
+def test_sampler_steps_per_epoch_is_epoch_dependent():
+    s = ESSampler(16, 8, seed=0)
+    s.grow(9, epoch=0)
+    assert s.steps_per_epoch(0) == 2
+    assert s.steps_per_epoch(1) == 3       # 25 // 8, drop_last
+    s2 = ESSampler(16, 8, seed=0, drop_last=False)
+    s2.grow(9, epoch=0)
+    assert s2.steps_per_epoch(1) == 4      # ceil(25 / 8)
+
+
+def test_sampler_grown_rows_implicitly_kept_until_next_prune():
+    s = ESSampler(16, 8, seed=0)
+    s.apply_pruning(np.arange(0, 16, 2))   # keep 8 of 16
+    s.grow(8, epoch=0)
+    pool = np.sort(s._epoch_pool(1))
+    np.testing.assert_array_equal(
+        pool, np.concatenate([np.arange(0, 16, 2), np.arange(16, 24)]))
+    # grad rescale: admitted-after-rescale rows carry the neutral 1.0
+    s.apply_pruning(np.arange(0, 16, 2), np.full(16, 2.0, np.float32))
+    s.grow(8, epoch=1)
+    gs = s.grad_scale_for(np.asarray([0, 20, 2]))
+    np.testing.assert_array_equal(gs, [2.0, 1.0, 2.0])
+
+
+def test_sampler_load_state_validates_every_cursor_field():
+    ref = ESSampler(16, 8, seed=0)
+    cur = ref.cursor(1, 0)
+    for kw, msg in ((dict(seed=1), "seed"),
+                    (dict(meta_batch=4), "meta_batch"),
+                    (dict(num_hosts=2, host_id=0), "num_hosts"),
+                    (dict(drop_last=False), "drop_last")):
+        s = ESSampler(16, **{"meta_batch": 8, "seed": 0, **kw}) \
+            if "meta_batch" not in kw else ESSampler(16, 4, seed=0)
+        with pytest.raises(ValueError, match=msg):
+            s.load_state({}, cur)
+    # a matching cursor restores growth history
+    ok = ESSampler(16, 8, seed=0)
+    ref.grow(8, epoch=0)
+    ok.load_state({}, ref.cursor(1, 0))
+    assert ok.population(1) == 24
+
+
+# ---------------------------------------------------------------------------
+# Admission bounds + the Eq. (3.1) filter
+# ---------------------------------------------------------------------------
+
+def test_es_admission_filter_threshold():
+    # beta1=0.2, s_ref=1.0, w_ref=1.0, tau=1.0: admit iff
+    # 0.2 + 0.8*loss >= 1.0 <=> loss >= 1.0
+    losses = np.asarray([0.2, 0.999, 1.0, 3.0], np.float32)
+    adm = es_admission_filter(losses, s_ref=1.0, w_ref=1.0,
+                              beta1=0.2, tau=1.0)
+    np.testing.assert_array_equal(adm, [False, False, True, True])
+    # tau=0 is the paper's no-filter limit
+    assert es_admission_filter(losses, s_ref=1.0, w_ref=1.0,
+                               beta1=0.2, tau=0.0).all()
+
+
+def test_admission_controller_latency_and_batch_bounds():
+    clock = [0.0]
+    seen = []
+
+    def score_fn(tok, lab):
+        seen.append(len(tok))
+        return tok[:, 0].astype(np.float32)          # loss := first token
+
+    ctl = AdmissionController(score_fn,
+                              lambda losses: losses >= 2.0,
+                              max_batch=4, max_delay_s=0.5,
+                              clock=lambda: clock[0])
+    tok, lab = _rows(3, 8, seed=0)
+    tok[:, 0] = [1, 2, 3]
+    ctl.submit(tok, lab)
+    assert ctl.poll() is None                        # 3 < max_batch, fresh
+    clock[0] = 0.4
+    assert ctl.poll() is None                        # still under the bound
+    clock[0] = 0.51                                  # oldest aged past it
+    res = ctl.poll()
+    np.testing.assert_array_equal(res.admitted, [False, True, True])
+    np.testing.assert_allclose(res.latencies_s, 0.51)
+    # a full batch drains immediately, excess stays queued
+    tok5 = np.tile(tok[:1], (5, 1))
+    ctl.submit(tok5, np.tile(lab[:1], (5, 1)))
+    res2 = ctl.poll()
+    assert len(res2.losses) == 4 and len(ctl) == 1
+    assert ctl.submitted == 8 and ctl.admitted == 2
+    stats = ctl.latency_stats()
+    assert stats["admit_latency_p95_s"] >= stats["admit_latency_p50_s"] >= 0
+
+
+def test_admission_score_fn_row_count_enforced():
+    ctl = AdmissionController(lambda t, l: np.zeros(1, np.float32),
+                              lambda x: x > 0, max_batch=2,
+                              max_delay_s=0.0)
+    tok, lab = _rows(2, 8)
+    ctl.submit(tok, lab)
+    with pytest.raises(ValueError, match="score_fn"):
+        ctl.poll()
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the service loop over a live trainer
+# ---------------------------------------------------------------------------
+
+def test_service_streams_mid_run_grows_without_restart():
+    """Acceptance: submit candidates mid-run; the store/sampler/pipeline
+    grow in place (no restart), only Eq. (3.1)-passing rows are
+    admitted, and the next epoch walks the larger population."""
+    from repro.launch.service import ScoringService
+    from repro.launch.train import Trainer
+    tr = Trainer(_tc(), source=StreamingSource(
+        SyntheticSource(n_samples=16, seq_len=16, vocab_size=64, seed=0)))
+    svc = ScoringService(tr, tau=1.0, max_batch=8, max_delay_s=0.0,
+                         serve=False)
+    tok, lab = _rows(8, 16, seed=3)
+    fed = []
+
+    def feeder(trainer, epoch):
+        if trainer.global_step == 1 and not fed:
+            svc.submit(tok, lab)
+            fed.append(True)
+    tr.step_hooks.insert(0, feeder)     # before the service's poll hook
+
+    out = tr.train()
+    svc.flush()
+    n_adm = svc.admission.admitted
+    assert svc.admission.submitted == 8
+    assert tr.n_train == 16 + n_adm
+    assert int(tr.state.scores.s.shape[0]) == 16 + n_adm
+    assert tr.pipeline.sampler.n_samples == 16 + n_adm
+    assert len(tr.source) == 16 + n_adm
+    # the filter was really applied: every drained batch's admitted mask
+    # obeys the Eq. (3.1) rule for its measured losses
+    assert svc.admit_log and any(e["scored"] for e in svc.admit_log)
+    # admitted rows were score-installed from their measured live loss
+    if n_adm:
+        seen = np.asarray(tr.state.scores.seen)
+        assert (seen[16:] >= 1).all()
+        # epoch 1 walked the grown population (admission landed in epoch 0)
+        e1 = [e for e in out["epoch_log"] if e["epoch"] == 1][0]
+        assert e1["steps_per_epoch"] == (16 + n_adm) // 8
+
+
+def test_grown_restored_bit_equal_to_ungrown_on_original_rows(tmp_path):
+    """Acceptance: grow AFTER identical training, checkpoint, restore
+    into a fresh trainer — params and the original rows' score state are
+    bitwise the ungrown run's, and the restored run carries the grown
+    population (k=1: every step scores)."""
+    from repro.launch.train import Trainer
+    n = 16
+    ref = Trainer(_tc(score_every=1))
+    ref.train()
+
+    tr = Trainer(_tc(score_every=1, ckpt_dir=str(tmp_path)),
+                 source=StreamingSource(SyntheticSource(
+                     n_samples=n, seq_len=16, vocab_size=64, seed=0)))
+    tr.train()
+    tok, lab = _rows(8, 16, seed=5)
+    ids = tr.source.append(tok, lab)
+    tr.grow(len(ids), epoch=tr.tc.epochs - 1)
+    tr._checkpoint(tr.tc.epochs - 1, final=True)
+    tr.ckpt.wait()
+
+    tr2 = Trainer(_tc(score_every=1, ckpt_dir=str(tmp_path)),
+                  source=StreamingSource(SyntheticSource(
+                      n_samples=n, seq_len=16, vocab_size=64, seed=0)))
+    # the grown population came back without the original rows moving
+    assert tr2.n_train == n + 8
+    assert tr2.pipeline.sampler.n_samples == n + 8
+    assert len(tr2.source) == n + 8
+    np.testing.assert_array_equal(
+        np.asarray(tr2.source.batch(np.asarray(ids))["tokens"]), tok)
+    for a, b in zip(jax.tree.leaves(ref.state.params),
+                    jax.tree.leaves(tr2.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(tr2.state.scores.s)[:n],
+                                  np.asarray(ref.state.scores.s))
+    np.testing.assert_array_equal(np.asarray(tr2.state.scores.w)[:n],
+                                  np.asarray(ref.state.scores.w))
+    np.testing.assert_array_equal(np.asarray(tr2.state.scores.seen)[:n],
+                                  np.asarray(ref.state.scores.seen))
+    # new rows restored at the prior, never scored
+    np.testing.assert_array_equal(np.asarray(tr2.state.scores.seen)[n:],
+                                  np.zeros(8, np.int32))
+
+
+def test_trainer_grow_requires_source_rows_first():
+    from repro.launch.train import Trainer
+    tr = Trainer(_tc(), source=StreamingSource(
+        SyntheticSource(n_samples=16, seq_len=16, vocab_size=64, seed=0)))
+    with pytest.raises(ValueError, match="source"):
+        tr.grow(4, epoch=0)
+
+
+def test_service_requires_streaming_source():
+    from repro.launch.service import ScoringService
+    from repro.launch.train import Trainer
+    tr = Trainer(_tc())
+    with pytest.raises(ValueError, match="StreamingSource"):
+        ScoringService(tr, serve=False)
